@@ -1,0 +1,56 @@
+"""Paper Figs. 4-6 (§4.3): selective non-contiguous KV vs DroidSpeak-style
+single contiguous chunks. Sweeps every chunk position at matched budget M and
+reports KVComm vs {best, median, worst} chunk, plus the intermediate-layers
+effect (H1)."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.types import KVCommConfig
+
+
+def run(emit=common.emit) -> dict:
+    eng, cfg, tok = common.make_engine()
+    L = cfg.attn_layer_count
+    ds = "countries"
+    batch = common.eval_batch(tok, ds)
+    scores = common.calib_scores(eng, tok, ds)
+    out = {}
+    for ratio in (0.3, 0.5):
+        M = KVCommConfig(ratio=ratio).num_selected(L)
+        chunk_acc = {}
+        for start in range(0, L - M + 1):
+            r = eng.run("contiguous", batch,
+                        kvcfg=KVCommConfig(ratio=ratio,
+                                           selector="contiguous",
+                                           layer_from=start))
+            chunk_acc[start] = r.accuracy
+        kv = eng.run("kvcomm", batch,
+                     kvcfg=KVCommConfig(ratio=ratio, alpha=0.7),
+                     scores=scores)
+        accs = np.array(list(chunk_acc.values()))
+        # H1: is the best chunk at intermediate depth?
+        best_start = int(max(chunk_acc, key=chunk_acc.get))
+        out[f"ratio_{ratio}"] = {
+            "kvcomm": round(kv.accuracy, 4),
+            "chunk_best": round(float(accs.max()), 4),
+            "chunk_median": round(float(np.median(accs)), 4),
+            "chunk_worst": round(float(accs.min()), 4),
+            "chunk_best_start": best_start,
+            "per_chunk": {str(k): round(v, 4)
+                          for k, v in chunk_acc.items()},
+        }
+        emit(f"fig4/{ds}/ratio{ratio}", 0.0,
+             f"kvcomm={kv.accuracy:.3f};best_chunk={accs.max():.3f}"
+             f"@{best_start};worst={accs.min():.3f}")
+    with open(os.path.join(common.RESULTS_DIR, "fig4.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

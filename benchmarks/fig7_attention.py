@@ -1,0 +1,46 @@
+"""Paper Fig. 7 (§4.5, hypothesis H2): layers with HIGHER attention
+importance scores communicate better. We rank layers by calibrated score and
+compare selecting the top-M vs the bottom-M."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.selection import topk_mask
+from repro.core.types import KVCommConfig, SharedKV
+from repro import core
+
+
+def run(emit=common.emit) -> dict:
+    eng, cfg, tok = common.make_engine()
+    out = {}
+    for ds in common.DATASETS:
+        batch = common.eval_batch(tok, ds)
+        scores = common.calib_scores(eng, tok, ds)
+        L = cfg.attn_layer_count
+        M = max(1, int(0.4 * L))
+        kv, states, Sc = eng.sender_kv(batch["context"])
+        res = {}
+        for which, sel in (("top", topk_mask(scores, M)),
+                           ("bottom", topk_mask(-scores, M))):
+            shared = SharedKV(kv=kv, select=sel, prefix_len=Sc)
+            o = core.receiver_prefill(eng.receiver, cfg,
+                                      jnp.asarray(batch["query"]), shared,
+                                      max_new=1)
+            preds = np.asarray(jnp.argmax(o.logits[:, -1, :], -1))
+            res[which] = round(float(np.mean(preds == batch["answer"])), 4)
+        out[ds] = res
+        emit(f"fig7/{ds}", 0.0,
+             f"top_score_acc={res['top']:.3f};"
+             f"bottom_score_acc={res['bottom']:.3f}")
+    with open(os.path.join(common.RESULTS_DIR, "fig7.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

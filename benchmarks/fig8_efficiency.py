@@ -1,0 +1,122 @@
+"""Paper Fig. 8 + §3.3 + §4.6: compute and memory efficiency.
+
+Reports (a) analytic relative FLOPs of KVComm/Skyline over AC at the paper's
+regime (C >> Q), reproducing the 2.5-6x computation saving; (b) KV-cache
+memory savings vs Skyline (paper: 23-73%); (c) wire bytes vs full-KV sharing
+(paper: up to ~3.3x reduction at ratio 0.3); (d) MEASURED XLA FLOPs of the
+receiver prefill with/without selection from ``cost_analysis`` on this host,
+cross-checking the analytic model."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import core
+from repro.core.types import KVCommConfig, SharedKV
+from repro.serving import costs
+
+
+def measured_prefill_flops(eng, cfg, Sc: int, Sq: int, select) -> float:
+    """XLA-counted FLOPs of the receiver prefill consuming a prefix."""
+    from repro.models import transformer as tfm
+    B = 1
+    L = cfg.attn_layer_count
+    kv = {"k": jnp.zeros((L, B, Sc, cfg.num_kv_heads,
+                          cfg.resolved_head_dim)),
+          "v": jnp.zeros((L, B, Sc, cfg.num_kv_heads,
+                          cfg.resolved_head_dim))}
+    shared = SharedKV(kv=kv, select=select, prefix_len=Sc)
+
+    def f(params, toks, kv_in):
+        sh = SharedKV(kv=kv_in, select=select, prefix_len=Sc)
+        cache = tfm.init_cache(cfg, B, Sq + 1, shared=sh)
+        return tfm.apply_model(params, cfg, toks, mode="cached",
+                               cache=cache, shared=sh,
+                               logits_mode="last").logits
+
+    toks = jnp.zeros((B, Sq), jnp.int32)
+    compiled = jax.jit(f).lower(eng.receiver, toks, kv).compile()
+    ca = compiled.cost_analysis() or {}
+    return float(ca.get("flops", 0.0))
+
+
+def run(emit=common.emit) -> dict:
+    eng, cfg, tok = common.make_engine()
+    out = {}
+
+    # (a)-(c) analytic results use the PAPER-SCALE config (Llama-3.2-3B
+    # pair, 28 layers) — ratios are model-size dependent and the tiny
+    # trained pair (8L/d192) is not the paper's regime. (d) cross-checks
+    # the analytic model against XLA-measured FLOPs on the tiny pair.
+    from repro.configs.registry import get_config
+    full_cfg = get_config("llama3.2-3b-pair")
+    C, Q, Tr = 2000, 32, 64
+    f_ac = costs.flops_ac(full_cfg, C, Q, Tr)
+    rel = {"skyline": costs.flops_skyline(full_cfg, C, Q, Tr) / f_ac}
+    L = full_cfg.num_layers
+    for ratio in (0.3, 0.5, 0.7):
+        M = int(np.ceil(ratio * L))
+        rel[f"kvcomm_{ratio}"] = costs.flops_kvcomm(full_cfg, C, Q, Tr,
+                                                    M) / f_ac
+    out["relative_flops_over_ac"] = {k: round(v, 3) for k, v in rel.items()}
+    out["skyline_over_kvcomm_0.3_end_to_end"] = round(
+        rel["skyline"] / rel["kvcomm_0.3"], 2)
+    # The paper's Fig. 8 accounting amortizes the sender prefill (the sender
+    # agent computed its context KV for its own operation); end-to-end
+    # (sender included) the d^2 terms cancel and the ratio is ~1. Report
+    # both; the RECEIVER-side ratio reproduces the paper's 2.5-6x.
+    recv = {}
+    M3 = int(np.ceil(0.3 * L))
+    for Cx in (500, 1000, 2000, 4000):
+        r = (costs.flops_skyline(full_cfg, Cx, Q, 256)
+             / costs.flops_kvcomm_receiver(full_cfg, Cx, Q, 256, M3))
+        recv[str(Cx)] = round(r, 2)
+    out["receiver_side_skyline_over_kvcomm_0.3"] = recv
+    emit("fig8/analytic_flops", 0.0,
+         f"end2end={out['skyline_over_kvcomm_0.3_end_to_end']}x;"
+         f"receiver_side={recv}")
+
+    # (b) memory savings
+    mem = {}
+    for ratio in (0.3, 0.5, 0.7):
+        M = int(np.ceil(ratio * L))
+        saving = 1 - (costs.kv_cache_memory(full_cfg, C, Q, Tr, M)
+                      / costs.skyline_cache_memory(full_cfg, C, Q, Tr))
+        mem[f"ratio_{ratio}"] = round(float(saving), 3)
+    out["memory_saving_vs_skyline"] = mem
+    emit("fig8/memory", 0.0, f"savings={mem}")
+
+    # (c) wire bytes vs full sharing
+    wire = {r: costs.kv_bytes(full_cfg, C, int(np.ceil(r * L)))
+            for r in (0.3, 0.5, 0.7, 1.0)}
+    out["comm_reduction_at_0.3"] = round(wire[1.0] / wire[0.3], 2)
+    emit("fig8/wire", 0.0, f"full/0.3={out['comm_reduction_at_0.3']}x")
+
+    # (d) measured XLA FLOPs cross-check on the tiny pair (C=96, Q=16)
+    Lp = cfg.attn_layer_count
+    Sc, Sq = 96, 16
+    full = measured_prefill_flops(eng, cfg, Sc, Sq,
+                                  jnp.ones((Lp,), bool))
+    none = measured_prefill_flops(eng, cfg, Sc, Sq,
+                                  jnp.zeros((Lp,), bool))
+    out["measured_prefill_flops"] = {
+        "all_layers": full, "no_layers": none,
+        "note": ("uniform-scan masking keeps attention FLOPs constant; the "
+                 "receiver-side saving is realized by the ragged/grouped "
+                 "path — see EXPERIMENTS.md §Perf iteration 'ragged "
+                 "grouping'")}
+    emit("fig8/measured", 0.0,
+         f"prefill_flops_all={full:.3g};masked={none:.3g}")
+
+    with open(os.path.join(common.RESULTS_DIR, "fig8.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks. On this CPU container the Pallas kernels run in
+interpret mode (numbers are NOT TPU wall-times — they validate dispatch and
+give the XLA-path baseline); the XLA-path timings are real CPU wall-times and
+track relative scaling (seq length, window, GQA ratio)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _bench(f, *args, iters=5, **kw):
+    f(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(emit=common.emit) -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # XLA-path attention vs kernel oracle at growing seq
+    for S in (128, 512):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, S, 8, 64))
+        k = jax.random.normal(ks[1], (1, S, 2, 64))
+        v = jax.random.normal(ks[2], (1, S, 2, 64))
+        us_ref = _bench(jax.jit(lambda a, b, c: ref.mha_reference(
+            a, b, c)[0]), q, k, v)
+        emit(f"kern/mha_xla_s{S}", us_ref, f"S={S};GQA=4")
+        out[f"mha_xla_s{S}"] = us_ref
+
+    # pallas interpret dispatch (correctness-path cost, not TPU perf)
+    q = jax.random.normal(key, (1, 128, 4, 64))
+    k = jax.random.normal(key, (1, 128, 2, 64))
+    v = jax.random.normal(key, (1, 128, 2, 64))
+    us = _bench(ops.flash_attention, q, k, v, blk_q=64, blk_k=64)
+    emit("kern/flash_attn_interpret", us, "S=128;interpret=True")
+    out["flash_attn_interpret"] = us
+
+    # decode over long cache
+    for S in (1024, 8192):
+        kc = jax.random.normal(key, (4, S, 2, 64))
+        vc = jax.random.normal(key, (4, S, 2, 64))
+        qd = jax.random.normal(key, (4, 8, 64))
+        us_ref = _bench(jax.jit(lambda a, b, c: ref.decode_reference(
+            a, b, c, kv_len=S)), qd, kc, vc)
+        emit(f"kern/decode_xla_s{S}", us_ref, f"cache={S}")
+        out[f"decode_xla_s{S}"] = us_ref
+
+    # wkv6: oracle scan vs chunked kernel (interpret)
+    B, T, H, hd = 1, 256, 4, 64
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    kk = jax.random.normal(ks[1], (B, T, H, hd))
+    vv = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+    u = jax.random.normal(ks[4], (H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    us_ref = _bench(jax.jit(lambda *a: ref.wkv6_reference(*a)[0]),
+                    r, kk, vv, w, u, s0)
+    emit("kern/wkv6_xla_scan", us_ref, f"T={T}")
+    out["wkv6_xla_scan"] = us_ref
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,134 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+  compute term    = HLO_FLOPs / (chips * 197e12)
+  memory term     = HLO_bytes / (chips * 819e9)
+  collective term = collective_bytes / (chips * 50e9)
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.
+
+NOTE on normalization: XLA's cost_analysis on an SPMD module reports the
+PER-DEVICE program; collective bytes parsed from HLO are also per-device.
+We therefore divide by 1 device for the per-device time terms and report
+both per-device and aggregate forms.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun.json")
+
+
+from repro.utils.analytic import (active_param_count, job_cost,
+                                  param_count)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*tokens for training; 2*N_active*tokens for forward."""
+    D_tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                     else 1)
+    n = active_param_count(cfg)
+    mult = 6 if shape.mode == "train" else 2
+    return mult * n * D_tokens
+
+
+CHIPS = 256
+
+
+def _next_step(dom: str, arch: str, shape_name: str) -> str:
+    """One sentence: what would move the dominant term down."""
+    if dom == "compute":
+        if arch.startswith("olmoe") or arch.startswith("mixtral"):
+            return "capacity MoE dispatch (moe_impl=dropping) cuts E/k overcompute"
+        return "banded/windowed attention kernel skips masked blocks"
+    if dom == "memory":
+        if shape_name.startswith("decode") or shape_name == "long_500k":
+            return "KV-cache quantization (int8) or grouped-head cache layout halves cache reads"
+        return "smaller attn_block_q + more microbatches shrink transients"
+    return ("overlap FSDP all-gathers with layer compute; reduce-scatter "
+            "grads instead of all-reduce")
+
+
+def analyze(records) -> list:
+    rows = []
+    for r in records:
+        if r.get("status") != "ok" or r["mesh"] != "16x16" \
+                or r.get("kvcomm") or r.get("microbatches") \
+                or r.get("moe_impl"):
+            continue
+        cfg = get_config(r["arch"])
+        shape = INPUT_SHAPES[r["shape"]]
+        cb = job_cost(cfg, shape)
+        # analytic whole-job cost / fleet capability (cost_analysis counts
+        # while bodies once — see EXPERIMENTS.md §Roofline methodology)
+        t_comp = cb.flops / (CHIPS * PEAK_FLOPS_BF16)
+        t_mem = cb.total_bytes / (CHIPS * HBM_BW)
+        coll = (r.get("collectives_loop") or r.get("collectives", {})
+                ).get("total", 0)
+        t_coll = coll / ICI_BW          # per-device program bytes
+        dom = max((t_comp, "compute"), (t_mem, "memory"),
+                  (t_coll, "collective"))[1]
+        mf = cb.model_flops
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops": mf, "executed_flops": cb.flops,
+            "useful_ratio": mf / cb.flops if cb.flops else 0.0,
+            "hlo_flops_per_dev": r.get("flops", 0.0),
+            "temp_bytes_per_dev": r.get("temp_size_in_bytes", 0),
+            "fits_hbm": r.get("temp_size_in_bytes", 0) < 16e9,
+            "next_step": _next_step(dom, r["arch"], r["shape"]),
+        })
+    return rows
+
+
+def render(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful | temp/dev | next step |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['temp_bytes_per_dev'] / 1e9:.1f}GB"
+            f"{'✓' if r['fits_hbm'] else '✗'} | {r['next_step']} |")
+    return "\n".join(lines)
+
+
+def run(emit=None) -> list:
+    if emit is None:
+        def emit(name, us, derived):
+            print(f"{name},{us:.1f},{derived}")
+    if not os.path.exists(DRYRUN_JSON):
+        print("roofline: experiments/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all --mesh pod --out "
+              "experiments/dryrun.json` first", file=sys.stderr)
+        return []
+    with open(DRYRUN_JSON) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
+             f"fits={'Y' if r['fits_hbm'] else 'N'}")
+    out = os.path.join(os.path.dirname(DRYRUN_JSON), "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(render(rows))

@@ -1,0 +1,39 @@
+"""Paper Table 11 / §M: positional-embedding coherence ablation. KVComm
+(receiver shifted by |C| at every layer) vs KVComm-S (non-selected layers
+shifted back to 0, breaking the unified positional frame)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks import common
+from repro.core.types import KVCommConfig
+
+
+def run(emit=common.emit) -> dict:
+    eng, cfg, tok = common.make_engine()
+    out = {}
+    for ds in common.DATASETS:
+        batch = common.eval_batch(tok, ds)
+        scores = common.calib_scores(eng, tok, ds)
+        row = {}
+        for ratio in (0.3, 0.5, 0.7):
+            base = KVCommConfig(ratio=ratio, alpha=0.7)
+            a = eng.run("kvcomm", batch, kvcfg=base, scores=scores)
+            b = eng.run("kvcomm", batch,
+                        kvcfg=dataclasses.replace(
+                            base, pos_mode="zero_unselected"),
+                        scores=scores)
+            row[f"kvcomm_{ratio}"] = round(a.accuracy, 4)
+            row[f"kvcomm_s_{ratio}"] = round(b.accuracy, 4)
+            emit(f"table11/{ds}/r{ratio}", 0.0,
+                 f"shift={a.accuracy:.3f};zero={b.accuracy:.3f}")
+        out[ds] = row
+    with open(os.path.join(common.RESULTS_DIR, "table11.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

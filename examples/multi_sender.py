@@ -1,0 +1,56 @@
+"""Multi-sender KVComm (paper §J): two senders each hold HALF the facts; the
+receiver answers questions requiring either half by attending over both
+transmitted KV prefixes concatenated along the context axis.
+
+    PYTHONPATH=src python examples/multi_sender.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core.types import KVCommConfig, SharedKV
+from repro.data.synthetic import SyntheticTask, TaskConfig
+
+
+def main() -> None:
+    from benchmarks.common import load_pair
+    cfg, tok, sender_params, receiver_params = load_pair()
+    task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=8,
+                                         seed=21))
+    batch = task.batch(32)
+    ctx = batch["context"]
+    half = (ctx.shape[1] // 4) * 2
+    c1, c2 = ctx[:, :half], ctx[:, half:]
+
+    kvcfg = KVCommConfig(ratio=0.7, selector="prior_only")
+    select = core.make_selection(cfg, kvcfg)
+
+    def shared_for(c):
+        kv, _ = core.sender_prefill(sender_params, cfg, jnp.asarray(c))
+        return SharedKV(kv=kv, select=select, prefix_len=c.shape[1])
+
+    s1, s2 = shared_for(c1), shared_for(c2)
+
+    def acc(shared):
+        out = core.receiver_prefill(receiver_params, cfg,
+                                    jnp.asarray(batch["query"]), shared,
+                                    max_new=1)
+        preds = np.asarray(jnp.argmax(out.logits[:, -1, :], -1))
+        return float(np.mean(preds == batch["answer"]))
+
+    both = core.combine_senders([s1, s2])
+    print(f"sender A only (half the facts): acc {acc(s1):.3f}")
+    print(f"sender B only (other half):     acc {acc(s2):.3f}")
+    print(f"both senders combined (§J):     acc {acc(both):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, GQA kv=8, sliding-window attention.
+
+[arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    source="arXiv:2401.04088",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    num_experts_per_tok=2,
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)

@@ -1,0 +1,51 @@
+"""Architecture registry: the 10 assigned configs + the paper's own pair."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = [
+    "mixtral_8x22b",
+    "starcoder2_7b",
+    "whisper_medium",
+    "internlm2_20b",
+    "qwen1_5_110b",
+    "pixtral_12b",
+    "gemma3_4b",
+    "rwkv6_1_6b",
+    "olmoe_1b_7b",
+    "zamba2_2_7b",
+    "llama3_3b_pair",   # the paper's own evaluation family (pair #6)
+]
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def _load() -> None:
+    if _REGISTRY:
+        return
+    for mod_name in _ARCH_MODULES:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        cfg: ModelConfig = mod.CONFIG
+        _REGISTRY[cfg.name] = cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _load()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _load()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = [
+    "mixtral-8x22b", "starcoder2-7b", "whisper-medium", "internlm2-20b",
+    "qwen1.5-110b", "pixtral-12b", "gemma3-4b", "rwkv6-1.6b",
+    "olmoe-1b-7b", "zamba2-2.7b",
+]

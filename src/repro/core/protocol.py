@@ -1,0 +1,188 @@
+"""The KVComm communication protocol (paper §3.1), end to end.
+
+Roles:
+  sender_prefill    — M_s consumes the context C in ONE forward pass and
+                      exports its per-layer KV (and SSM states, if any).
+  calibrate         — M_r prefills the calibration query with ALL layers
+                      shared and measures Eq. (1) attention masses.
+  make_selection    — turns masses + KVCommConfig into the layer subset S.
+  transmit          — builds the SharedKV the receiver consumes, and reports
+                      exact wire bytes (the paper's communication cost).
+  receiver_prefill  — M_r prefills Q with the sender prefix integrated.
+  receiver_decode   — autoregressive generation from the merged cache.
+
+All functions are pure and jit-friendly; the serving engine wraps them with
+batching and scheduling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.selection import normalize_scores, select_layers
+from repro.core.types import KVCommConfig, SharedKV
+from repro.models import transformer as tfm
+
+
+# ---------------------------------------------------------------------------
+# sender side
+# ---------------------------------------------------------------------------
+def extract_kv(cfg: ModelConfig, cache) -> Optional[Dict[str, jnp.ndarray]]:
+    """Stack every attention layer's KV from a prefill cache:
+    -> {"k","v"} of (L_attn, B, Sc, Hkv, Dh)."""
+    ks, vs = [], []
+    for spec, run in zip(cfg.layer_plan(), cache["runs"]):
+        if spec.kind in ("attn", "shared_attn"):
+            ks.append(run["k"])
+            vs.append(run["v"])
+    if not ks:
+        return None
+    return {"k": jnp.concatenate(ks, axis=0), "v": jnp.concatenate(vs, axis=0)}
+
+
+def extract_states(cfg: ModelConfig, cache):
+    """Stack SSM-layer final states -> pytree with leading L_ssm axis."""
+    sts = [run for spec, run in zip(cfg.layer_plan(), cache["runs"])
+           if spec.kind in ("mamba", "rwkv")]
+    if not sts:
+        return None
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *sts)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sender_prefill_jit(params, cfg, context_tokens, extra):
+    B, Sc = context_tokens.shape
+    cache = tfm.init_cache(cfg, B, Sc)
+    out = tfm.apply_model(params, cfg, context_tokens, mode="cached",
+                          cache=cache, extra=extra)
+    return extract_kv(cfg, out.cache), extract_states(cfg, out.cache)
+
+
+def sender_prefill(params, cfg: ModelConfig, context_tokens,
+                   extra=None) -> Tuple[Dict[str, Any], Any]:
+    """One forward pass of M_s over C. Returns (kv, states)."""
+    return _sender_prefill_jit(params, cfg, context_tokens, extra)
+
+
+# ---------------------------------------------------------------------------
+# calibration + selection
+# ---------------------------------------------------------------------------
+def calibrate(receiver_params, cfg: ModelConfig, query_tokens,
+              kv, states=None, extra=None) -> jnp.ndarray:
+    """Prefill Q with EVERY layer shared, measuring Eq. (1) masses.
+
+    Returns the normalized attention importance scores S_a, shape (L_attn,).
+    A single calibration sample suffices (paper §H); pass a batch to average.
+    """
+    L = cfg.attn_layer_count
+    Sc = kv["k"].shape[2]
+    shared = SharedKV(
+        kv=kv, select=jnp.ones((L,), bool),
+        states=states,
+        state_select=(jnp.ones((_n_ssm(cfg),), bool)
+                      if states is not None else None),
+        prefix_len=Sc)
+    out = _receiver_prefill_jit(receiver_params, cfg, query_tokens, shared,
+                                0, extra, collect_mass=True)
+    return normalize_scores(out.masses)
+
+
+def _n_ssm(cfg: ModelConfig) -> int:
+    return sum(s.count for s in cfg.layer_plan()
+               if s.kind in ("mamba", "rwkv"))
+
+
+def make_selection(cfg: ModelConfig, kvcfg: KVCommConfig,
+                   attn_scores: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    return select_layers(attn_scores, cfg.attn_layer_count, kvcfg)
+
+
+# ---------------------------------------------------------------------------
+# transmission
+# ---------------------------------------------------------------------------
+def transmit(cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+             states=None, state_select=None) -> Tuple[SharedKV, int]:
+    """Build the receiver-side SharedKV and count exact wire bytes.
+
+    Only selected layers' KV crosses the wire:
+      bytes = M * B * Sc * Hkv * Dh * 2 (K and V) * itemsize.
+    (The returned SharedKV carries the full stack + mask so the uniform-scan
+    receiver can consume it; a real wire would send the gathered subset —
+    ``gather_selected`` below materializes exactly that.)
+    """
+    n_bytes = 0
+    if kv is not None:
+        m = int(jnp.sum(select))
+        _, B, Sc, Hkv, Dh = kv["k"].shape
+        n_bytes += 2 * m * B * Sc * Hkv * Dh * kv["k"].dtype.itemsize
+    if states is not None and state_select is not None:
+        # states are stacked (L_ssm, ...): wire bytes = (m / L_ssm) * total
+        m = int(jnp.sum(state_select))
+        n_layers = jax.tree.leaves(states)[0].shape[0]
+        total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(states))
+        n_bytes += int(total * m / max(n_layers, 1))
+    shared = SharedKV(
+        kv=kv, select=select, states=states, state_select=state_select,
+        prefix_len=0 if kv is None else kv["k"].shape[2],
+        pos_mode=kvcfg.pos_mode)
+    return shared, n_bytes
+
+
+def gather_selected(kv, select) -> Dict[str, jnp.ndarray]:
+    """Materialize exactly the wire payload: the M selected layers' KV,
+    gathered along the layer axis (what a real transport would move)."""
+    idx = jnp.nonzero(select)[0]
+    return {"k": kv["k"][idx], "v": kv["v"][idx]}
+
+
+# ---------------------------------------------------------------------------
+# receiver side
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "max_new", "collect_mass"))
+def _receiver_prefill_jit(params, cfg, query_tokens, shared, max_new,
+                          extra, collect_mass=False):
+    B, Sq = query_tokens.shape
+    cache = tfm.init_cache(cfg, B, Sq + max_new, shared=shared)
+    return tfm.apply_model(params, cfg, query_tokens, mode="cached",
+                           cache=cache, shared=shared, extra=extra,
+                           collect_mass=collect_mass)
+
+
+def receiver_prefill(params, cfg: ModelConfig, query_tokens,
+                     shared: Optional[SharedKV], max_new: int = 64,
+                     extra=None):
+    """Prefill Q with the sender prefix integrated; cache sized for decode."""
+    return _receiver_prefill_jit(params, cfg, query_tokens, shared,
+                                 max_new, extra)
+
+
+def receiver_decode(params, cfg: ModelConfig, token, cache,
+                    shared: Optional[SharedKV] = None):
+    """One greedy decode step. token: (B, 1)."""
+    out = tfm.apply_model(params, cfg, token, mode="cached", cache=cache,
+                          shared=shared, logits_mode="last")
+    return out
+
+
+def generate(params, cfg: ModelConfig, query_tokens, shared=None,
+             max_new: int = 32, extra=None, stop_token: int = -1):
+    """Greedy generation. Returns (tokens (B, max_new), final cache)."""
+    out = receiver_prefill(params, cfg, query_tokens, shared,
+                           max_new=max_new, extra=extra)
+    cache = out.cache
+    next_tok = jnp.argmax(out.logits[:, -1, :], axis=-1)[:, None]
+
+    def step(carry, _):
+        cache, tok = carry
+        o = receiver_decode(params, cfg, tok, cache, shared)
+        nt = jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+        return (o.cache, nt), tok[:, 0]
+
+    (cache, _), toks = jax.lax.scan(step, (cache, next_tok), None,
+                                    length=max_new)
+    return jnp.moveaxis(toks, 0, 1), cache

@@ -1,0 +1,95 @@
+"""The paper's KV layer-selection strategy (§3.2).
+
+Pipeline: raw per-layer context attention mass (Eq. 1, measured during a
+calibration prefill with *all* layers shared) -> min-max normalize -> mix with
+a Gaussian depth prior -> take the top-M layers.
+
+Everything here is jit-compatible jnp; selection masks are boolean vectors of
+length L_attn so they can thread through the model's layer scans.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import KVCommConfig
+
+
+def normalize_scores(raw: jnp.ndarray) -> jnp.ndarray:
+    """Min-max normalize Eq. (1) masses to [0, 1] across layers.
+
+    raw: (L,) or (L, B) (mass per calibration sample; averaged over B first).
+    """
+    if raw.ndim == 2:
+        raw = raw.mean(axis=1)
+    lo = jnp.min(raw)
+    hi = jnp.max(raw)
+    return (raw - lo) / jnp.maximum(hi - lo, 1e-9)
+
+
+def gaussian_prior(num_layers: int, mu: Optional[float] = None,
+                   sigma: float = 10.0) -> jnp.ndarray:
+    """P^l = exp(-(l - mu)^2 / (2 sigma^2)), l = 1..L (paper indexes from 1)."""
+    if mu is None:
+        mu = num_layers / 2
+    l = jnp.arange(1, num_layers + 1, dtype=jnp.float32)
+    return jnp.exp(-jnp.square(l - mu) / (2.0 * sigma ** 2))
+
+
+def selection_scores(attn_scores: jnp.ndarray, cfg: KVCommConfig) -> jnp.ndarray:
+    """S^l = alpha * S_a^l + (1 - alpha) * P^l."""
+    L = attn_scores.shape[0]
+    prior = gaussian_prior(L, cfg.mu, cfg.sigma)
+    return cfg.alpha * attn_scores + (1.0 - cfg.alpha) * prior
+
+
+def topk_mask(scores: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Boolean mask of the top-m entries (non-contiguous by construction)."""
+    L = scores.shape[0]
+    m = min(m, L)
+    _, idx = jax.lax.top_k(scores, m)
+    return jnp.zeros((L,), bool).at[idx].set(True)
+
+
+def select_layers(attn_scores: Optional[jnp.ndarray],
+                  num_layers: int,
+                  cfg: KVCommConfig) -> jnp.ndarray:
+    """Produce the layer subset S as a boolean mask of shape (L,).
+
+    Selectors:
+      kvcomm     — the paper's strategy (needs calibration attn_scores).
+      prior_only — Gaussian prior alone (alpha = 0).
+      random     — uniform random M layers (Table 2 baseline).
+      contiguous — one chunk [layer_from, layer_from + M) (DroidSpeak, §4.3).
+      all        — every layer (full-KV upper bound for comm accounting).
+    """
+    m = cfg.num_selected(num_layers)
+    if cfg.selector == "all":
+        return jnp.ones((num_layers,), bool)
+    if cfg.selector == "random":
+        key = jax.random.PRNGKey(cfg.seed)
+        scores = jax.random.uniform(key, (num_layers,))
+        return topk_mask(scores, m)
+    if cfg.selector == "contiguous":
+        start = min(cfg.layer_from, num_layers - m)
+        idx = jnp.arange(num_layers)
+        return (idx >= start) & (idx < start + m)
+    if cfg.selector == "prior_only":
+        return topk_mask(gaussian_prior(num_layers, cfg.mu, cfg.sigma), m)
+    if cfg.selector == "kvcomm":
+        assert attn_scores is not None, "kvcomm selector needs calibration"
+        return topk_mask(selection_scores(attn_scores, cfg), m)
+    raise ValueError(f"unknown selector {cfg.selector!r}")
+
+
+def kendall_tau(rank_a: jnp.ndarray, rank_b: jnp.ndarray) -> jnp.ndarray:
+    """Kendall's tau between two layer-score vectors (paper Fig. 14)."""
+    L = rank_a.shape[0]
+    ia, ib = rank_a[:, None] - rank_a[None, :], rank_b[:, None] - rank_b[None, :]
+    concordant = jnp.sign(ia) * jnp.sign(ib)
+    iu = jnp.triu_indices(L, 1)
+    c = concordant[iu]
+    return jnp.sum(c) / c.shape[0]

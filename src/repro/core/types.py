@@ -1,0 +1,63 @@
+"""Pytree types for the KVComm protocol."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class SharedKV:
+    """Everything the receiver needs from the sender(s).
+
+    kv      : {"k","v"} each (L_attn, B, prefix_len, Hkv, Dh) — the sender's
+              per-attention-layer KV pairs for the context tokens (selected
+              and non-selected alike; ``select`` decides what is *used*; the
+              channel decides what is *transmitted*).
+    select  : (L_attn,) bool — the paper's layer subset S.
+    states  : optional SSM state pytree stacked over SSM layers (the
+              state-sharing analogue for attention-free layers).
+    state_select : (L_ssm,) bool.
+    prefix_len / pos_mode are static (shape-determining / branch-determining).
+    """
+    kv: Optional[dict] = None
+    select: Optional[jnp.ndarray] = None
+    states: Optional[dict] = None
+    state_select: Optional[jnp.ndarray] = None
+    prefix_len: int = 0
+    pos_mode: str = "shift"          # "shift" (paper) | "zero_unselected" (S)
+
+    def tree_flatten(self):
+        return ((self.kv, self.select, self.states, self.state_select),
+                (self.prefix_len, self.pos_mode))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kv, select, states, state_select = children
+        prefix_len, pos_mode = aux
+        return cls(kv=kv, select=select, states=states,
+                   state_select=state_select, prefix_len=prefix_len,
+                   pos_mode=pos_mode)
+
+
+@dataclass(frozen=True)
+class KVCommConfig:
+    """Hyperparameters of the paper's selection strategy (§3.2, §B.2)."""
+    ratio: float = 0.5            # M = ceil(ratio * L)
+    alpha: float = 1.0            # score mix: alpha*S_a + (1-alpha)*prior
+    mu: Optional[float] = None    # Gaussian center; None -> L/2
+    sigma: float = 10.0
+    selector: str = "kvcomm"      # kvcomm | random | contiguous | prior_only
+    pos_mode: str = "shift"
+    # contiguous-chunk ablation (DroidSpeak-style, §4.3)
+    layer_from: int = 0
+    # multi-sender (§J): how many senders' prefixes are concatenated
+    # (informational; the channel handles the actual concat)
+    seed: int = 0                 # for the random selector
+
+    def num_selected(self, num_layers: int) -> int:
+        import math
+        return max(1, math.ceil(self.ratio * num_layers))

@@ -1,0 +1,204 @@
+"""Sharding policies for every (architecture x input-shape x mesh) combo.
+
+Strategy (DESIGN.md §4):
+  * Parameters are 2D-sharded: the matmul output/feature dim over ``model``
+    (Megatron TP), a second large dim over the data axes (FSDP/ZeRO-3), so
+    qwen1.5-110B training state fits 256 chips.
+  * GQA caveat: wq/wk/wv columns are TP-sharded only when the corresponding
+    head count divides the model-axis size; otherwise they stay replicated
+    column-wise (starcoder2's 36 q-heads, gemma3's 8) and the roofline shows
+    the cost — the §Perf log picks this up.
+  * MoE experts shard over ``model`` when divisible (olmoe 64), else each
+    expert's d_ff is TP-sharded (mixtral 8).
+  * Decode caches shard batch over data; KV-heads over model when divisible,
+    else the cache *sequence* over model (flash-decode combine). long_500k
+    (batch=1) shards sequence over data x model jointly.
+
+Everything is derived by pattern rules over (path name, ndim, shape) so new
+architectures inherit sensible policies automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import mesh_axes
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _div(n: int, size: int) -> bool:
+    return n % size == 0 and n >= size
+
+
+def param_spec(cfg: ModelConfig, name: str, shape, *, dp, tp,
+               tp_size: int) -> P:
+    """PartitionSpec for one parameter leaf. ``name`` is the leaf key."""
+    nd = len(shape)
+    lead = (None,) * (nd - 2)  # stacked layer axes
+
+    def fits(axis_size_dim):
+        return _div(shape[axis_size_dim], tp_size)
+
+    # --- embeddings / head ---
+    if name == "embed":
+        return P(tp, dp)
+    if name == "lm_head":
+        return P(dp, tp)
+
+    # --- MoE expert banks: (n, E, D, F) / (n, E, F, D) ---
+    if nd == 4 and name in ("w_gate", "w_up", "w_down"):
+        E = shape[1]
+        if _div(E, tp_size):
+            return P(None, tp, dp, None)
+        if name == "w_down":
+            return P(None, None, tp, dp)
+        return P(None, None, dp, tp)
+    if name == "router":
+        return P(*lead, dp, None)
+
+    # --- attention projections ---
+    if name in ("wq", "bq"):
+        ok = _div(cfg.num_heads, tp_size)
+        if nd >= 2:
+            return P(*lead, dp, tp if ok else None)
+        return P(*lead, tp if ok else None)
+    if name in ("wk", "wv", "bk", "bv") and cfg.num_kv_heads:
+        ok = _div(cfg.num_kv_heads, tp_size)
+        # rwkv reuses "wk"/"wv" names but has num_kv_heads == 0
+        if nd >= 2:
+            return P(*lead, dp, tp if ok else None)
+        return P(*lead, tp if ok else None)
+    if name == "wo":
+        ok = _div(cfg.num_heads, tp_size)
+        return P(*lead, tp if ok else None, dp)
+
+    # --- generic in->out projections (mlp, rwkv, mamba in) ---
+    if name in ("w_gate", "w_up", "cm_wk", "cm_wr", "wr", "wk", "wv", "wg",
+                "w_in"):
+        return P(*lead, dp, tp if fits(nd - 1) else None)
+    if name in ("w_down", "cm_wv", "w_out"):
+        return P(*lead, tp if fits(nd - 2) else None, dp)
+    if name == "w_lora_a":
+        return P(*lead, dp, None)
+    if name == "w_lora_b":
+        return P(*lead, None, dp)
+    if name == "conv_w":
+        return P(*lead, None, tp if fits(nd - 1) else None)
+    if name in ("conv_b", "norm"):
+        return P(*lead, tp if fits(nd - 1) else None)
+    if name == "u":  # (n, H, hd)
+        return P(*lead, tp if _div(shape[-2], tp_size) else None, None)
+
+    # norms / small vectors: replicate
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """Tree of NamedSharding matching an eval_shape'd params tree."""
+    dp, tp = mesh_axes(mesh)
+    tp_size = mesh.shape["model"]
+
+    def rule(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        spec = param_spec(cfg, name, leaf.shape, dp=dp, tp=tp,
+                          tp_size=tp_size)
+        # drop specs on dims that don't divide
+        spec = _sanitize(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Clear spec entries whose mesh-axis size doesn't divide the dim."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        out.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard batch over as many data axes as divide it."""
+    dp, _ = mesh_axes(mesh)
+    if global_batch % _axis_size(mesh, dp) == 0:
+        return P(dp)
+    if isinstance(dp, tuple) and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def input_shardings(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                    batch_tree_shape) -> Any:
+    bspec = batch_spec(mesh, shape.global_batch)
+
+    def rule(path, leaf):
+        spec = [bspec[0] if bspec else None] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, _sanitize(P(*spec), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree_shape)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                    cache_shape) -> Any:
+    """Decode caches: (n, B, S, Hkv, Dh) KV buffers + SSM states."""
+    dp, tp = mesh_axes(mesh)
+    tp_size = mesh.shape["model"]
+    B = shape.global_batch
+    long_ctx = B < _axis_size(mesh, dp)   # long_500k: batch unshardable
+    kv_head_ok = cfg.num_kv_heads and _div(cfg.num_kv_heads, tp_size)
+
+    def rule(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if nd == 5 and name in ("k", "v", "xk", "xv"):
+            # (n, B, S, Hkv, Dh)
+            if long_ctx:
+                # batch=1: context-parallel — shard the cache sequence over
+                # data x model jointly (flash-decode LSE combine)
+                return NamedSharding(mesh, _sanitize(
+                    P(None, None, ("data", "model"), None, None),
+                    leaf.shape, mesh))
+            if kv_head_ok:
+                return NamedSharding(mesh, _sanitize(
+                    P(None, dp, None, tp, None), leaf.shape, mesh))
+            return NamedSharding(mesh, _sanitize(
+                P(None, dp, tp, None, None), leaf.shape, mesh))
+        # SSM states (n, B, H, hd, ds) / conv (n, B, K-1, dim) / misc
+        if nd >= 3:
+            spec = [None, None if long_ctx else dp] + [None] * (nd - 2)
+            if nd >= 4 and leaf.shape[2] % tp_size == 0:
+                spec[2] = tp   # heads over model
+            return NamedSharding(mesh, _sanitize(P(*spec), leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def replicated(mesh: Mesh, tree_shape) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_shape)

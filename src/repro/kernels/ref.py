@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose), and
+they double as the portable fallback path on backends without Pallas.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jnp.ndarray,            # (B, Sq, Hq, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D)
+    v: jnp.ndarray,            # (B, Skv, Hkv, D)
+    *,
+    context_len: int = 0,      # kv[:context_len] is the sender prefix
+    context_valid: bool | jnp.ndarray = True,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jnp.ndarray = 0,   # absolute pos of q[0] (== |C| in paper)
+    collect_mass: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Flash-attention oracle with KVComm prefix segment and Eq.(1) mass.
+
+    The prefix segment sits at absolute positions [0, context_len); self
+    tokens at q_offset + j (and kv positions likewise for the self segment).
+    Returns (out (B,Sq,Hq,D), mass (B,) or None).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    Ss = Skv - context_len                   # self segment length
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    idx = jnp.arange(Skv)
+    kv_pos = jnp.where(idx < context_len, idx,
+                       q_offset + (idx - context_len))
+    allow = jnp.ones((Sq, Skv), bool)
+    if causal:
+        allow = allow & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        allow = allow & ((q_pos[:, None] - kv_pos[None, :]) < window)
+    if context_len:
+        cv = jnp.asarray(context_valid)
+        allow = allow & jnp.where(idx[None, :] < context_len, cv, True)
+    s = jnp.where(allow[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    out = out.reshape(B, Sq, Hq, Dh)
+    mass = None
+    if collect_mass:
+        mm = (idx < context_len).astype(jnp.float32)
+        mass = jnp.einsum("bhgqk,k->b", p, mm) / (Hq * Sq)
+    return out, mass
+
+
+def decode_reference(
+    q: jnp.ndarray,            # (B, Hq, D) single query token
+    k: jnp.ndarray,            # (B, S, Hkv, D)
+    v: jnp.ndarray,            # (B, S, Hkv, D)
+    *,
+    kv_len: jnp.ndarray | int, # scalar or (B,): valid cache entries
+    window: Optional[int] = None,
+    q_pos: jnp.ndarray | int | None = None,  # defaults to kv_len - 1
+) -> jnp.ndarray:
+    """One-token decode attention oracle. Returns (B, Hq, D)."""
+    B, S, Hkv, Dh = k.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.broadcast_to(kv_len, (B,))
+    if q_pos is None:
+        q_pos = kv_len - 1
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos), (B,))
+    idx = jnp.arange(S)
+    allow = idx[None, :] < kv_len[:, None]
+    if window is not None:
+        allow = allow & ((q_pos[:, None] - idx[None, :]) < window)
+    s = jnp.where(allow[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, Dh)
+
+
+def decode_partial_reference(q, k, v, *, kv_len, window=None, q_pos=None):
+    """Flash-decode partials for cross-shard combination: returns
+    (o_partial (B,Hq,D) float32 — UNNORMALIZED sum exp(s-m)·v,
+     m (B,Hq) running max, l (B,Hq) sum exp(s-m)).
+
+    combine rule over shards i:  m* = max m_i;
+      o = Σ_i o_i·exp(m_i-m*) / Σ_i l_i·exp(m_i-m*)
+    """
+    B, S, Hkv, Dh = k.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) / math.sqrt(Dh)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.broadcast_to(kv_len, (B,))
+    if q_pos is None:
+        q_pos = kv_len - 1
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos), (B,))
+    idx = jnp.arange(S)
+    allow = idx[None, :] < kv_len[:, None]
+    if window is not None:
+        allow = allow & ((q_pos[:, None] - idx[None, :]) < window)
+    s = jnp.where(allow[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B,Hkv,G)
+    e = jnp.exp(s - m[..., None])
+    e = jnp.where(allow[:, None, None, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", e, v.astype(jnp.float32))
+    return (o.reshape(B, Hq, Dh), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def combine_decode_partials(os, ms, ls):
+    """LSE-combine per-shard flash-decode partials (stacked on axis 0)."""
+    m_star = jnp.max(ms, axis=0)
+    scale = jnp.exp(ms - m_star[None])
+    o = jnp.sum(os * scale[..., None], axis=0)
+    l = jnp.sum(ls * scale, axis=0)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def wkv6_reference(
+    r: jnp.ndarray,            # (B, S, H, K) float32
+    k: jnp.ndarray,            # (B, S, H, K)
+    v: jnp.ndarray,            # (B, S, H, V)
+    w: jnp.ndarray,            # (B, S, H, K) decay in (0,1)
+    u: jnp.ndarray,            # (H, K) bonus
+    state: jnp.ndarray,        # (B, H, K, V) initial wkv state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 WKV recurrence oracle.
+
+      y_t  = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+      S_t  = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Returns (y (B,S,H,V) float32, final state (B,H,K,V))."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp   # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state, inps)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,110 @@
+"""Chunked WKV6 recurrence (Pallas / TPU).
+
+RWKV6's data-dependent-decay recurrence is the SSM analogue of the attention
+hot loop. The kernel processes the time axis in chunks with the (K, V) state
+matrix resident in VMEM scratch across chunks — HBM traffic is one read of
+(r, k, v, w) and one write of y per token, instead of the O(T) state
+round-trips a naive scan would issue.
+
+Grid: (batch, heads, num_time_chunks) — time innermost so the state carries.
+Within a chunk the recurrence is a ``fori_loop`` over the chunk's steps; the
+chunk size trades VMEM residency against loop overhead (default 32).
+
+Layouts: r/k/v/w are (B, H, T, hd); state is (B, H, hd, hd) [key x value].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref, k_ref, v_ref, w_ref,     # (1, 1, blk_t, hd)
+    u_ref,                          # (1, hd)
+    s0_ref,                         # (1, 1, hd, hd) initial state
+    y_ref,                          # (1, 1, blk_t, hd)
+    sfin_ref,                       # (1, 1, hd, hd) final state
+    s_ref,                          # VMEM scratch (hd, hd)
+    *,
+    blk_t: int,
+):
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                 # (blk_t, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                    # (hd,)
+
+    def step(t, carry):
+        s = s_ref[...]
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]         # (hd,)
+        kv = kt[:, None] * vt[None, :]                  # (hd, hd)
+        y = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+        y_ref[0, 0, t, :] = y.astype(y_ref.dtype)
+        s_ref[...] = wt[:, None] * s + kv
+        return carry
+
+    jax.lax.fori_loop(0, blk_t, step, 0)
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        sfin_ref[0, 0] = s_ref[...].astype(sfin_ref.dtype)
+
+
+def wkv6_bhtd(r, k, v, w, u, state, *, blk_t: int = 32, interpret=False):
+    """r/k/v/w: (B, H, T, hd) float32; u: (H, hd); state: (B, H, hd, hd).
+
+    Returns (y (B, H, T, hd) float32, final_state (B, H, hd, hd))."""
+    B, H, T, hd = r.shape
+    assert T % blk_t == 0
+    nt = T // blk_t
+    kernel = functools.partial(_wkv_kernel, blk_t=blk_t)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_t, hd), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, blk_t, hd), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, blk_t, hd), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, blk_t, hd), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, it: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_t, hd), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, sfin
+
+
+def wkv6(r, k, v, w, u, state, *, blk_t: int = 32, interpret=False):
+    """(B, S, H, hd) layout adapter matching ``ref.wkv6_reference``."""
+    rb, kb, vb, wb = (jnp.moveaxis(x, 1, 2) for x in (r, k, v, w))
+    T = rb.shape[2]
+    pad = (-T) % blk_t
+    if pad:
+        padfn = lambda x, c=0.0: jnp.pad(
+            x, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=c)
+        rb, kb, vb = padfn(rb), padfn(kb), padfn(vb)
+        wb = padfn(wb, 1.0)   # decay 1 on padding -> state unchanged
+    y, sfin = wkv6_bhtd(rb, kb, vb, wb, u, state, blk_t=blk_t,
+                        interpret=interpret)
+    y = y[:, :, :T, :]
+    return jnp.moveaxis(y, 1, 2), sfin

@@ -1,0 +1,120 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+No device allocation anywhere: params, optimizer state, caches, and batches
+are all ``jax.eval_shape``-derived structures that ``jit(...).lower()``
+consumes directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tfm
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Training / prefill batch inputs for one architecture."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "tokens": sds((B, S), jnp.int32),
+    }
+    if shape.mode == "train":
+        out["targets"] = sds((B, S), jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_patches:
+        out["patches"] = sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def state_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(tfm.init_cache, cfg, batch, max_len))
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Any, Any]:
+    """(token_spec, cache_spec) for one decode step over a full cache."""
+    B = shape.global_batch
+    token = sds((B, 1), jnp.int32)
+    cache = cache_specs(cfg, B, shape.seq_len + 1)
+    return token, cache
+
+
+# ---------------------------------------------------------------------------
+# step functions lowered by the dry-run (same code the real launchers run)
+# ---------------------------------------------------------------------------
+def make_step_fn(cfg: ModelConfig, shape: InputShape,
+                 microbatches: int = 1):
+    """Returns (fn, example_args) where every arg is a ShapeDtypeStruct."""
+    if shape.mode == "train":
+        opt = OptimizerConfig()
+        step = make_train_step(cfg, opt, microbatches=microbatches)
+        return step, (state_specs(cfg), batch_specs(cfg, shape))
+
+    if shape.mode == "prefill":
+        def prefill(params, batch):
+            extra = {k: batch[k] for k in ("frames", "patches")
+                     if k in batch}
+            B, S = batch["tokens"].shape
+            cache = tfm.init_cache(cfg, B, S + 1)
+            out = tfm.apply_model(params, cfg, batch["tokens"],
+                                  mode="cached", cache=cache,
+                                  extra=extra or None, logits_mode="last")
+            return out.logits, out.cache
+        return prefill, (params_specs(cfg), batch_specs(cfg, shape))
+
+    if shape.mode == "decode":
+        def decode(params, token, cache):
+            out = tfm.apply_model(params, cfg, token, mode="cached",
+                                  cache=cache, logits_mode="last")
+            return out.logits, out.cache
+        token, cache = decode_specs(cfg, shape)
+        return decode, (params_specs(cfg), token, cache)
+
+    raise ValueError(shape.mode)
+
+
+def make_kvcomm_prefill_fn(cfg: ModelConfig, shape: InputShape,
+                           context_len: int, ratio: float = 0.5):
+    """Receiver prefill with a transmitted sender prefix — the paper's
+    technique under the production mesh (used for the representative
+    dry-run + §Perf pair)."""
+    from repro.core.types import SharedKV
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.attn_layer_count
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def prefill(params, batch, kv, select):
+        shared = SharedKV(kv=kv, select=select, prefix_len=context_len)
+        extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+        cache = tfm.init_cache(cfg, B, S + 1, shared=shared)
+        out = tfm.apply_model(params, cfg, batch["tokens"], mode="cached",
+                              cache=cache, shared=shared, extra=extra or
+                              None, logits_mode="last", collect_mass=True)
+        return out.logits, out.masses, out.cache
+
+    kv_spec = {"k": sds((L, B, context_len, Hkv, Dh), jnp.bfloat16),
+               "v": sds((L, B, context_len, Hkv, Dh), jnp.bfloat16)}
+    sel_spec = sds((L,), jnp.bool_)
+    return prefill, (params_specs(cfg), batch_specs(cfg, shape), kv_spec,
+                     sel_spec)

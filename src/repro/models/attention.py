@@ -1,0 +1,193 @@
+"""GQA attention block with first-class KVComm support.
+
+Execution modes:
+
+  * ``train``  — full causal self-attention over S tokens, no cache.
+  * ``cached`` — S new tokens (prefill S>1, decode S==1) appended into a
+                 fixed-size cache buffer laid out::
+
+                     [ sender prefix (prefix_len) | self tokens ... | pad ]
+
+KVComm specifics
+----------------
+The sender's transmitted KV occupies cache positions ``[0, prefix_len)``.
+``ctx_valid`` (a per-layer scalar bool threaded through the layer scan) masks
+the prefix out at non-selected layers — numerically identical to never
+concatenating it (softmax over -1e30), which lets the paper's non-contiguous
+layer selections run under a uniform ``lax.scan``.
+
+Positional coherence (paper §K): receiver tokens live at absolute positions
+``pos_shift + j``. The paper's default sets ``pos_shift == prefix_len`` at
+*every* layer; the KVComm-S ablation zeroes it on non-selected layers, hence
+it is a per-layer traced scalar. Sender K arrives already rotated at positions
+``[0, prefix_len)`` from the sender's own prefill.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (attention_core, attention_core_chunked,
+                                 dense_init, rope)
+
+
+def _core(cfg):
+    """Attention execution strategy: "xla" materializes (Sq, Skv) probs;
+    "chunked" scans query blocks (memory-efficient, the deployment default
+    for long shapes — §Perf iteration 1)."""
+    if cfg.attn_impl == "chunked":
+        import functools
+        return functools.partial(attention_core_chunked,
+                                 blk_q=cfg.attn_block_q)
+    return attention_core
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_attn(key, cfg, *, d_model=None):
+    d = d_model or cfg.d_model
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, Hq * Dh), _dt(cfg)),
+        "wk": dense_init(ks[1], (d, Hkv * Dh), _dt(cfg)),
+        "wv": dense_init(ks[2], (d, Hkv * Dh), _dt(cfg)),
+        "wo": dense_init(ks[3], (Hq * Dh, d), _dt(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * Dh,), _dt(cfg))
+        p["bk"] = jnp.zeros((Hkv * Dh,), _dt(cfg))
+        p["bv"] = jnp.zeros((Hkv * Dh,), _dt(cfg))
+    return p
+
+
+def _proj(p, x, name, cfg, H, Dh):
+    y = x @ p[f"w{name}"]
+    if cfg.qkv_bias and f"b{name}" in p:
+        y = y + p[f"b{name}"]
+    B, S, _ = x.shape
+    return y.reshape(B, S, H, Dh)
+
+
+def self_attention(
+    p, cfg, x, *,
+    mode: str,                              # "train" | "cached"
+    causal: bool = True,
+    use_rope: bool = True,
+    window: Optional[int] = None,           # static per layer-run
+    pos_shift,                              # scalar (traced): position offset
+    prefix_len: int = 0,                    # static: sender prefix length
+    ctx_valid: Optional[jnp.ndarray] = None,  # scalar bool: layer selected?
+    cache_k: Optional[jnp.ndarray] = None,  # (B, Smax, Hkv, Dh)
+    cache_v: Optional[jnp.ndarray] = None,
+    cache_len=None,                         # scalar: valid entries (>=prefix)
+    collect_mass: bool = False,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], Optional[jnp.ndarray]]:
+    """Returns (out, (new_cache_k, new_cache_v) or (k, v), mass)."""
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _proj(p, x, "q", cfg, Hq, Dh)
+    k = _proj(p, x, "k", cfg, Hkv, Dh)
+    v = _proj(p, x, "v", cfg, Hkv, Dh)
+
+    if mode == "train":
+        pos = pos_shift + jnp.arange(S)
+        if use_rope:
+            pb = jnp.broadcast_to(pos[None], (B, S))
+            q = rope(q, pb, cfg.rope_theta)
+            k = rope(k, pb, cfg.rope_theta)
+        out, mass = _core(cfg)(
+            q, k, v, q_pos=pos, kv_pos=pos, causal=causal, window=window)
+        return out.reshape(B, S, -1) @ p["wo"], (k, v), mass
+
+    # ---- cached: prefill (S>1) or decode (S==1) ----
+    self_idx = cache_len - prefix_len                    # index of x[0]
+    q_pos = pos_shift + self_idx + jnp.arange(S)
+    if use_rope:
+        pb = jnp.broadcast_to(q_pos[None], (B, S))
+        q = rope(q, pb, cfg.rope_theta)
+        k = rope(k, pb, cfg.rope_theta)
+
+    Smax = cache_k.shape[1]
+    ring = (cfg.ring_cache and window is not None and Smax == window
+            and prefix_len == 0)
+    if ring:
+        # vLLM-style ring buffer: slot for absolute index i is i % W.
+        W = Smax
+        if S == 1:
+            slot = jax.lax.rem(cache_len, W)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, k.astype(cache_k.dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, v.astype(cache_v.dtype), slot, axis=1)
+        else:
+            # prefill: attend over the FULL incoming sequence (early query
+            # rows need positions the ring will evict), then store only the
+            # last W entries for future decode steps.
+            out, mass = _core(cfg)(
+                q, k, v, q_pos=q_pos, kv_pos=q_pos, causal=causal,
+                window=window, mass_mask=None)
+            kw = k[:, -W:, :, :] if S >= W else k
+            vw = v[:, -W:, :, :] if S >= W else v
+            n_w = kw.shape[1]
+            pos_w = self_idx + jnp.arange(S - n_w, S)
+            slots = jnp.mod(pos_w, W)
+            ck = cache_k.at[:, slots].set(kw.astype(cache_k.dtype))
+            cv = cache_v.at[:, slots].set(vw.astype(cache_v.dtype))
+            return out.reshape(B, S, -1) @ p["wo"], (ck, cv), mass
+        cur_last = self_idx + S - 1                  # newest absolute index
+        idx = jnp.arange(W)
+        # absolute index stored in slot s: largest p <= cur_last, p%W == s
+        # (floor-mod so empty slots map to negative positions -> invalid)
+        kv_pos_abs = cur_last - jnp.mod(cur_last - idx, W)
+        valid = kv_pos_abs >= 0
+        out, mass = _core(cfg)(
+            q, ck, cv, q_pos=q_pos, kv_pos=pos_shift + kv_pos_abs,
+            kv_valid=valid, causal=causal, window=window, mass_mask=None)
+        return out.reshape(B, S, -1) @ p["wo"], (ck, cv), mass
+
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    idx = jnp.arange(Smax)
+    kv_pos = jnp.where(idx < prefix_len, idx,
+                       pos_shift + (idx - prefix_len))
+    valid = idx < cache_len + S
+    if prefix_len and ctx_valid is not None:
+        valid = valid & jnp.where(idx < prefix_len, ctx_valid, True)
+    mass_mask = ((idx < prefix_len) if (collect_mass and prefix_len)
+                 else None)
+    out, mass = _core(cfg)(
+        q, ck, cv, q_pos=q_pos, kv_pos=kv_pos, kv_valid=valid,
+        causal=causal, window=window, mass_mask=mass_mask)
+    return out.reshape(B, S, -1) @ p["wo"], (ck, cv), mass
+
+
+def init_cross_attn(key, cfg):
+    return init_attn(key, cfg)
+
+
+def cross_attention(p, cfg, x, enc_k, enc_v):
+    """Whisper-style cross attention over precomputed encoder KV."""
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _proj(p, x, "q", cfg, Hq, Dh)
+    Senc = enc_k.shape[1]
+    out, _ = attention_core(
+        q, enc_k, enc_v,
+        q_pos=jnp.zeros((S,), jnp.int32),
+        kv_pos=jnp.zeros((Senc,), jnp.int32),
+        causal=False, window=None)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(p, cfg, enc_out):
+    """Per-layer cross KV from encoder output: (B, Senc, Hkv, Dh) each."""
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return (_proj(p, enc_out, "k", cfg, Hkv, Dh),
+            _proj(p, enc_out, "v", cfg, Hkv, Dh))

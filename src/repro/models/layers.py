@@ -1,0 +1,307 @@
+"""Core neural-net primitives shared by every architecture in the pool.
+
+Everything is functional: params are nested dicts of jnp arrays, apply
+functions are pure. Attention is KVComm-aware: it takes an optional *prefix*
+KV segment (the sender's transmitted KV pairs), a per-layer validity flag for
+that segment (non-selected layers mask it out — numerically identical to not
+concatenating at all, but keeps shapes uniform under ``lax.scan``), and can
+emit the paper's Eq. (1) context attention-mass alongside the output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """Apply rotary embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S) absolute positions.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    ang = ang[..., None, :]  # broadcast over heads: (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(positions, d_model: int):
+    """Additive sinusoidal embeddings (whisper-style, no tables)."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention core (XLA path). The Pallas path lives in repro.kernels.
+# ---------------------------------------------------------------------------
+def attention_core(
+    q: jnp.ndarray,               # (B, Sq, Hq, D)
+    k: jnp.ndarray,               # (B, Skv, Hkv, D)
+    v: jnp.ndarray,               # (B, Skv, Hkv, D)
+    *,
+    q_pos: jnp.ndarray,           # (Sq,) or (B, Sq) absolute positions
+    kv_pos: jnp.ndarray,          # (Skv,) absolute positions
+    kv_valid: Optional[jnp.ndarray] = None,   # (Skv,) or (B, Skv) bool
+    causal: bool = True,
+    window: Optional[jnp.ndarray] = None,     # None | int | traced scalar
+    mass_mask: Optional[jnp.ndarray] = None,  # (Skv,) bool: context positions
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Masked GQA attention; returns (out, context_mass).
+
+    context_mass is the paper's Eq. (1) inner sum: for every batch element the
+    attention probability mass assigned to ``mass_mask`` positions, averaged
+    over heads and query tokens -> shape (B,).
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]                       # (1|B, Sq)
+    qp = q_pos[:, None, None, :, None].astype(jnp.int32)      # (B,1,1,Sq,1)
+    kp = kv_pos[None, None, None, None, :].astype(jnp.int32)  # (1,1,1,1,Skv)
+    allow = jnp.ones((q_pos.shape[0], 1, 1, Sq, Skv), dtype=bool)
+    if causal:
+        allow = allow & (kp <= qp)
+    if window is not None:
+        allow = allow & ((qp - kp) < window)
+    if kv_valid is not None:
+        if kv_valid.ndim == 1:
+            kv_valid = kv_valid[None, :]
+        allow = allow & kv_valid[:, None, None, None, :]
+    scores = jnp.where(allow, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    mass = None
+    if mass_mask is not None:
+        # sum over context positions, mean over heads & query tokens -> (B,)
+        m = jnp.einsum("bhgqk,k->b", probs, mass_mask.astype(probs.dtype))
+        mass = m / (Hkv * G * Sq)
+        mass = jnp.broadcast_to(mass, (B,))
+
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, Dh), mass
+
+
+def attention_core_chunked(
+    q, k, v, *, q_pos, kv_pos, kv_valid=None, causal=True, window=None,
+    mass_mask=None, blk_q: int = 512,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Query-blocked attention (Rabe & Staats-style memory footprint).
+
+    The naive core materializes (B, H, Sq, Skv) probabilities — 10s of GB per
+    device at 4k-32k sequence lengths, which blows the HBM budget in
+    ``memory_analysis`` (see EXPERIMENTS.md §Perf iteration 1). Scanning over
+    query blocks caps the transient at (B, H, blk_q, Skv) while XLA still
+    sees one fused softmax per block. Numerics identical to the naive core.
+    """
+    B, Sq, Hq, Dh = q.shape
+    if Sq % blk_q or Sq <= blk_q:
+        return attention_core(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                              kv_valid=kv_valid, causal=causal,
+                              window=window, mass_mask=mass_mask)
+    nq = Sq // blk_q
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    qb = jnp.moveaxis(q.reshape(B, nq, blk_q, Hq, Dh), 1, 0)
+    pb = jnp.moveaxis(q_pos.reshape(B, nq, blk_q), 1, 0)
+
+    @jax.checkpoint
+    def body(_, xs):
+        # checkpointed: reverse-mode otherwise stores every block's
+        # (B, H, blk_q, Skv) probabilities — full S x S again
+        qi, pi = xs
+        out, mass = attention_core(
+            qi, k, v, q_pos=pi, kv_pos=kv_pos, kv_valid=kv_valid,
+            causal=causal, window=window, mass_mask=mass_mask)
+        return 0, (out, mass if mass is not None else jnp.zeros((B,),
+                                                                jnp.float32))
+    _, (outs, masses) = jax.lax.scan(body, 0, (qb, pb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, Dh)
+    mass = jnp.mean(masses, axis=0) if mass_mask is not None else None
+    return out, mass
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, dtype, mlp_type: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {  # gelu
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(p, x, mlp_type: str = "swiglu"):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE. Two execution strategies:
+#   dense_all : scan over experts, weighted accumulate. Simple, shardable
+#               (each expert's d_ff tensor-sharded), but computes every expert
+#               on every token -> E/k x FLOPs overcompute. BASELINE.
+#   dropping  : capacity-based dispatch (sort-free one-hot positions), the
+#               MaxText-style perf path exercised in §Perf.
+# ---------------------------------------------------------------------------
+def init_moe(key, d_model, d_ff, num_experts, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d_model, num_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (num_experts, d_model, d_ff), dtype),
+        "w_up": dense_init(ks[2], (num_experts, d_model, d_ff), dtype),
+        "w_down": dense_init(ks[3], (num_experts, d_ff, d_model), dtype),
+    }
+
+
+def router_probs(p, x, num_experts_per_tok):
+    """Top-k routing. Returns (gates (B,S,k), idx (B,S,k), aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, num_experts_per_tok)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    E = logits.shape[-1]
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    onehot = jax.nn.one_hot(idx, E).sum(-2)         # (B,S,E)
+    ce = jnp.mean(onehot.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates.astype(x.dtype), idx, aux
+
+
+def apply_moe_dense_all(p, x, num_experts_per_tok):
+    """Scan over experts; every expert runs on every token, combine = weighted
+    sum with zero weight for non-selected experts."""
+    gates, idx, aux = router_probs(p, x, num_experts_per_tok)
+    E = p["w_gate"].shape[0]
+    # per-expert combine weight for every token: (B,S,E)
+    comb = jnp.zeros(x.shape[:-1] + (E,), x.dtype)
+    comb = jnp.sum(jax.nn.one_hot(idx, E, dtype=x.dtype) * gates[..., None], axis=-2)
+
+    def body(acc, ep):
+        wg, wu, wd, w = ep
+        h = (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+        return acc + h * w[..., None], None
+
+    ws = (p["w_gate"], p["w_up"], p["w_down"],
+          jnp.moveaxis(comb, -1, 0))          # (E, B, S)
+    acc0 = jnp.zeros_like(x)
+    out, _ = jax.lax.scan(body, acc0, ws)
+    return out, aux
+
+
+def apply_moe_dropping(p, x, num_experts_per_tok, capacity_factor=1.25,
+                       groups: int = 1):
+    """Capacity-based token dispatch (the §Perf optimized path).
+
+    Sort-based dispatch: assignments are argsorted by expert id, each
+    expert's first C slots are gathered into an (E, C, D) buffer, batched
+    expert GEMMs run on the buffer, and results scatter-add back weighted by
+    the router gates. Tokens beyond capacity are dropped (residual passes
+    through). No (tokens, E, C) one-hot is ever materialized — the first
+    version of this function did exactly that and blew 1 TB/device of temp
+    (EXPERIMENTS.md §Perf pair B, refuted-hypothesis entry).
+    """
+    B, S, D = x.shape
+    k = num_experts_per_tok
+    E = p["w_gate"].shape[0]
+    N = B * S
+    G = groups if (groups and N % groups == 0) else 1
+    n = N // G
+    C = max(int(capacity_factor * n * k / E), 1)
+    xg = x.reshape(G, n, D)
+
+    def route_group(xf):
+        """Dispatch indices for one token group: gathers stay group-local,
+        so with groups == data-shards the only cross-device movement is the
+        (G-sharded buffer) x (E-sharded weights) expert all-to-all."""
+        gates, idx, aux = router_probs(p, xf[None], k)
+        gates, idx = gates[0], idx[0]
+        eid = idx.reshape(n * k)
+        tok = jnp.arange(n * k, dtype=jnp.int32) // k
+        order = jnp.argsort(eid, stable=True)
+        eid_s, tok_s = eid[order], tok[order]
+        gate_s = gates.reshape(n * k)[order]
+        starts = jnp.searchsorted(eid_s, jnp.arange(E))
+        ends = jnp.append(starts[1:], n * k)
+        gidx = starts[:, None] + jnp.arange(C)[None, :]
+        gvalid = gidx < ends[:, None]
+        gidx = jnp.clip(gidx, 0, n * k - 1)
+        tok_slot = tok_s[gidx]                               # (E, C)
+        gate_slot = jnp.where(gvalid, gate_s[gidx], 0.0).astype(xf.dtype)
+        buf = xf[tok_slot] * gvalid[..., None].astype(xf.dtype)
+        return buf, tok_slot, gate_slot, aux
+
+    buf, tok_slot, gate_slot, aux = jax.vmap(route_group)(xg)
+    # (G, E, C, D) x (E, D, F): expert dim sharded -> all-to-all here
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    yb = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G, E, C, D)
+
+    def combine_group(yb_g, tok_slot_g, gate_slot_g):
+        return jnp.zeros((n, D), x.dtype).at[
+            tok_slot_g.reshape(-1)].add(
+            (yb_g * gate_slot_g[..., None]).reshape(E * C, D))
+
+    out = jax.vmap(combine_group)(yb, tok_slot, gate_slot)
+    return out.reshape(B, S, D), jnp.mean(aux)
+
+
+def apply_moe(p, x, cfg):
+    if cfg.moe_impl == "dropping":
+        return apply_moe_dropping(p, x, cfg.num_experts_per_tok,
+                                  cfg.moe_capacity_factor,
+                                  groups=cfg.moe_groups)
+    return apply_moe_dense_all(p, x, cfg.num_experts_per_tok)

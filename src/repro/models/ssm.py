@@ -1,0 +1,208 @@
+"""SSM mixers: Mamba2 (Zamba2 backbone) and RWKV6 "Finch".
+
+Both are implemented as time recurrences with an explicit carried state so the
+same code serves training (scan over the whole sequence), prefill (scan +
+return final state), and decode (single step from state). The recurrent state
+is the SSM analogue of the KV cache; the framework's *state-sharing* protocol
+(DESIGN.md §Arch-applicability) transmits exactly this state for selected
+layers.
+
+State layouts (leading run-layer axis added by the transformer scan):
+  mamba: {"conv":  (B, K-1, conv_dim), "ssm": (B, nh, hd, ds)}
+  rwkv:  {"wkv":  (B, H, hd, hd), "tm_x": (B, D), "cm_x": (B, D)}
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+def mamba_dims(cfg):
+    d_inner = cfg.d_inner
+    nh = d_inner // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    conv_dim = d_inner + 2 * ds  # x, B, C go through the depthwise conv
+    return d_inner, nh, cfg.ssm_head_dim, ds, conv_dim
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, nh, hd, ds, conv_dim = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        # order: [z (d_inner) | xBC (conv_dim) | dt (nh)]
+        "w_in": dense_init(ks[0], (d, d_inner + conv_dim + nh), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_out": dense_init(ks[2], (d_inner, d), dt),
+    }
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32):
+    d_inner, nh, hd, ds, conv_dim = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, hd, ds), dtype),
+    }
+
+
+def _gated_rmsnorm(y, z, w, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (yf * (1.0 + w.astype(jnp.float32))).astype(y.dtype)
+
+
+def apply_mamba(p, cfg, x, state, *, mode: str):
+    """x: (B, S, D); returns (out, new_state)."""
+    B, S, D = x.shape
+    d_inner, nh, hd, ds, conv_dim = mamba_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:].astype(jnp.float32)
+
+    # causal depthwise conv, kernel K: y_t = b + sum_i w[i] * x_{t-K+1+i}
+    K = cfg.ssm_conv
+    hist = jnp.concatenate([state["conv"].astype(xBC.dtype), xBC], axis=1)
+    new_conv = hist[:, -(K - 1):, :] if K > 1 else state["conv"]
+    conv = sum(p["conv_w"][i] * hist[:, i:i + S, :] for i in range(K))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+
+    xs = xBC[..., :d_inner].reshape(B, S, nh, hd).astype(jnp.float32)
+    Bt = xBC[..., d_inner:d_inner + ds].astype(jnp.float32)      # (B,S,ds)
+    Ct = xBC[..., d_inner + ds:].astype(jnp.float32)             # (B,S,ds)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                  # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                       # (B,S,nh)
+
+    def step(s, inp):
+        xt, bt, ct, at, dtt = inp   # (B,nh,hd),(B,ds),(B,ds),(B,nh),(B,nh)
+        s = s * at[:, :, None, None] + (dtt[:, :, None] * xt)[..., None] \
+            * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    inps = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(Bt, 1, 0),
+            jnp.moveaxis(Ct, 1, 0), jnp.moveaxis(a, 1, 0),
+            jnp.moveaxis(dt, 1, 0))
+    new_ssm, ys = jax.lax.scan(step, state["ssm"].astype(jnp.float32), inps)
+    y = jnp.moveaxis(ys, 0, 1)                                   # (B,S,nh,hd)
+    y = y + p["D"][:, None] * xs
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = y @ p["w_out"]
+    return out, {"conv": new_conv.astype(state["conv"].dtype),
+                 "ssm": new_ssm.astype(state["ssm"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay via a low-rank MLP on the shifted mix.
+# ---------------------------------------------------------------------------
+def rwkv_dims(cfg):
+    hd = cfg.ssm_head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv(key, cfg, lora_rank: int = 32):
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,g,w interpolation
+        "w0": jnp.full((d,), -4.0, jnp.float32),     # decay base
+        "w_lora_a": dense_init(ks[0], (d, lora_rank), jnp.float32, scale=0.01),
+        "w_lora_b": dense_init(ks[1], (lora_rank, d), jnp.float32, scale=0.01),
+        "wr": dense_init(ks[2], (d, d), dt),
+        "wk": dense_init(ks[3], (d, d), dt),
+        "wv": dense_init(ks[4], (d, d), dt),
+        "wg": dense_init(ks[5], (d, d), dt),
+        "u": jnp.zeros((H, hd), jnp.float32),        # per-head bonus
+        "ln_x": jnp.ones((d,), jnp.float32),
+        "wo": dense_init(ks[6], (d, d), dt),
+        # channel-mix
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),  # k, r
+        "cm_wk": dense_init(ks[7], (d, cfg.d_ff), dt),
+        "cm_wv": dense_init(ks[8], (cfg.d_ff, d), dt),
+        "cm_wr": dense_init(ks[9], (d, d), dt),
+    }
+
+
+def init_rwkv_state(cfg, batch, dtype=jnp.float32):
+    H, hd = rwkv_dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), dtype),
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "cm_x": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _shift(x, last):  # (B,S,D), (B,D) -> previous-token sequence
+    return jnp.concatenate([last[:, None, :].astype(x.dtype), x[:, :-1, :]],
+                           axis=1)
+
+
+def rwkv_time_mix(p, cfg, x, state, wkv_fn=None):
+    """Returns (out, new_wkv_state, new_shift_x)."""
+    B, S, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    xp = _shift(x, state["tm_x"])
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xp - x) * mu[0]
+    xk = x + (xp - x) * mu[1]
+    xv = x + (xp - x) * mu[2]
+    xg = x + (xp - x) * mu[3]
+    xw = x + (xp - x) * mu[4]
+    r = (xr @ p["wr"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the Finch signature)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dd)).reshape(B, S, H, hd)  # in (0,1)
+
+    if wkv_fn is None:
+        from repro.kernels import ref as kref
+        y, new_wkv = kref.wkv6_reference(
+            r, k, v, w, p["u"], state["wkv"].astype(jnp.float32))
+    else:
+        y, new_wkv = wkv_fn(r, k, v, w, p["u"],
+                            state["wkv"].astype(jnp.float32))
+
+    y = y.reshape(B, S, D)
+    # per-head group norm
+    yh = y.reshape(B, S, H, hd)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, D) * p["ln_x"]).astype(x.dtype) * g
+    out = y @ p["wo"]
+    return out, new_wkv.astype(state["wkv"].dtype), x[:, -1, :].astype(
+        state["tm_x"].dtype)
+
+
+def rwkv_channel_mix(p, cfg, x, state):
+    xp = _shift(x, state["cm_x"])
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, x[:, -1, :].astype(state["cm_x"].dtype)
+
+

@@ -1,0 +1,437 @@
+"""The unified model: embeds tokens (plus stub modality frontends), executes
+the config's layer plan as a sequence of scannable runs, and projects logits.
+
+A "run" is a maximal group of same-kind layers (``ModelConfig.layer_plan``);
+parameters inside a run are stacked on a leading layer axis and executed under
+``lax.scan`` — the MaxText-style trick that keeps HLO size (and compile time)
+independent of depth, which matters for the 80-layer dry-runs.
+
+One function, four modes:
+  * train   : logits over the whole sequence, no cache.
+  * cached  : prefill/decode with a cache (see ``init_cache``); S==1 decodes.
+Supported extras: ``frames`` (whisper stub audio embeddings, (B,Senc,D)),
+``patches`` (pixtral stub patch embeddings substituted into the first
+``num_patches`` sequence slots).
+
+KVComm enters through ``shared``: per-attention-layer sender KV written into
+the cache prefix by ``init_cache`` plus a per-layer selection mask; see
+``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed import hints
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_moe, dense_init, embed_init,
+                                 init_mlp, init_moe, rms_norm,
+                                 sinusoid_positions)
+
+
+class ModelOut(NamedTuple):
+    logits: jnp.ndarray
+    cache: Optional[Any]
+    masses: Optional[jnp.ndarray]   # (n_attn_layers, B) Eq.(1) raw mass
+    aux_loss: jnp.ndarray           # MoE load-balance loss (0.0 if dense)
+    hiddens: Optional[jnp.ndarray] = None  # (L_attn, B, D) last-token states
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def mlp_type(cfg) -> str:
+    return "gelu" if cfg.arch_type == "audio" or cfg.name.startswith(
+        "starcoder") else "swiglu"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_attn_layer(cfg, spec: LayerSpec, key):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "ln1": jnp.zeros((d,), _dt(cfg)),
+        "attn": attn_mod.init_attn(ks[0], cfg),
+        "ln2": jnp.zeros((d,), _dt(cfg)),
+    }
+    if spec.moe:
+        p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.num_experts, _dt(cfg))
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, _dt(cfg), mlp_type(cfg))
+    if spec.cross_attn:
+        p["ln_x"] = jnp.zeros((d,), _dt(cfg))
+        p["xattn"] = attn_mod.init_cross_attn(ks[2], cfg)
+    return p
+
+
+def _init_run(cfg, spec: LayerSpec, key):
+    if spec.kind == "shared_attn":
+        return None  # params live once at top level
+    keys = jax.random.split(key, spec.count)
+    if spec.kind == "attn":
+        return jax.vmap(lambda k: _init_attn_layer(cfg, spec, k))(keys)
+    if spec.kind == "mamba":
+        def one(k):
+            return {"ln": jnp.zeros((cfg.d_model,), _dt(cfg)),
+                    "mamba": ssm_mod.init_mamba(k, cfg)}
+        return jax.vmap(one)(keys)
+    if spec.kind == "rwkv":
+        def one(k):
+            return {"ln1": jnp.zeros((cfg.d_model,), _dt(cfg)),
+                    "ln2": jnp.zeros((cfg.d_model,), _dt(cfg)),
+                    "rwkv": ssm_mod.init_rwkv(k, cfg)}
+        return jax.vmap(one)(keys)
+    raise ValueError(spec.kind)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), _dt(cfg)),
+        "final_norm": jnp.zeros((cfg.d_model,), _dt(cfg)),
+    }
+    plan = cfg.layer_plan()
+    rkeys = jax.random.split(keys[1], len(plan))
+    params["blocks"] = [
+        _init_run(cfg, spec, rkeys[i]) for i, spec in enumerate(plan)]
+    if any(s.kind == "shared_attn" for s in plan):
+        params["shared_attn"] = _init_attn_layer(
+            cfg, LayerSpec(kind="attn", count=1), keys[2])
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[3], (cfg.d_model, cfg.vocab_size), _dt(cfg))
+    if cfg.encoder_layers:
+        eplan = cfg.encoder_plan()
+        ekeys = jax.random.split(keys[4], len(eplan))
+        params["encoder"] = {
+            "blocks": [_init_run(cfg, dataclasses.replace(s), ekeys[i])
+                       for i, s in enumerate(eplan)],
+            "final_norm": jnp.zeros((cfg.d_model,), _dt(cfg)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, shared=None, dtype=None) -> Dict[str, Any]:
+    """Build the serving cache. ``shared`` is a ``repro.core.SharedKV``;
+    its per-layer sender KV is written into cache positions [0, prefix_len)
+    of attention runs and its states seed SSM runs (state-sharing protocol).
+    """
+    dtype = dtype or _dt(cfg)
+    prefix_len = 0 if shared is None else shared.prefix_len
+    Smax = max_len + prefix_len
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    runs: List[Any] = []
+    attn_i = 0   # global attention-layer index (paper's layer index l)
+    ssm_i = 0
+    for spec in cfg.layer_plan():
+        n = spec.count
+        if spec.kind in ("attn", "shared_attn"):
+            S_buf = Smax
+            if cfg.ring_cache and spec.window and prefix_len == 0:
+                # ring buffer: a windowed layer never attends beyond the
+                # last `window` positions
+                S_buf = min(Smax, spec.window)
+            k = jnp.zeros((n, batch, S_buf, Hkv, Dh), dtype)
+            v = jnp.zeros((n, batch, S_buf, Hkv, Dh), dtype)
+            ctx_valid = jnp.zeros((n,), bool)
+            if shared is not None and shared.kv is not None:
+                sk = shared.kv["k"][attn_i:attn_i + n].astype(dtype)
+                sv = shared.kv["v"][attn_i:attn_i + n].astype(dtype)
+                k = k.at[:, :, :prefix_len].set(sk)
+                v = v.at[:, :, :prefix_len].set(sv)
+                ctx_valid = shared.select[attn_i:attn_i + n]
+            entry = {"k": k, "v": v, "ctx_valid": ctx_valid}
+            if spec.cross_attn:
+                Senc = cfg.encoder_seq
+                entry["xk"] = jnp.zeros((n, batch, Senc, Hkv, Dh), dtype)
+                entry["xv"] = jnp.zeros((n, batch, Senc, Hkv, Dh), dtype)
+            runs.append(entry)
+            attn_i += n
+        elif spec.kind == "mamba":
+            st = jax.vmap(lambda _: ssm_mod.init_mamba_state(cfg, batch))(
+                jnp.arange(n))
+            if shared is not None and shared.states is not None:
+                st = _seed_states(st, shared, ssm_i, n)
+            runs.append(st)
+            ssm_i += n
+        elif spec.kind == "rwkv":
+            st = jax.vmap(lambda _: ssm_mod.init_rwkv_state(cfg, batch))(
+                jnp.arange(n))
+            if shared is not None and shared.states is not None:
+                st = _seed_states(st, shared, ssm_i, n)
+            runs.append(st)
+            ssm_i += n
+    return {"len": jnp.asarray(prefix_len, jnp.int32), "runs": runs}
+
+
+def _seed_states(st, shared, ssm_i, n):
+    sel = shared.state_select[ssm_i:ssm_i + n]
+    def blend(z, s):
+        if s is None:
+            return z
+        s = s[ssm_i:ssm_i + n].astype(z.dtype)
+        w = sel.reshape((n,) + (1,) * (z.ndim - 1)).astype(z.dtype)
+        return z * (1 - w) + s * w
+    return jax.tree.map(blend, st, shared.states)
+
+
+# ---------------------------------------------------------------------------
+# run bodies
+# ---------------------------------------------------------------------------
+def _attn_layer_body(cfg, spec, mode, prefix_len, collect_mass, enc_out,
+                     capture_hidden=False, inject_mode=None):
+    """Returns f(x, per_layer) -> (x, ys) executing ONE attention layer."""
+    mt = mlp_type(cfg)
+    use_rope = cfg.arch_type != "audio"
+
+    def body(x, per):
+        p = per["params"]
+        cache = per.get("cache")
+        cap = x[:, -1, :] if capture_hidden else None
+        if inject_mode is not None:
+            # AC baseline (Ramesh & Li 2025): merge the sender's last-token
+            # hidden state into the receiver's at this layer's input.
+            vec = per["inject_vec"].astype(x.dtype)
+            last = x[:, -1, :]
+            comb = {"replace": vec, "sum": last + vec,
+                    "mean": 0.5 * (last + vec)}[inject_mode]
+            new_last = jnp.where(per["inject_flag"], comb, last)
+            x = x.at[:, -1, :].set(new_last)
+        out, kv, mass = attn_mod.self_attention(
+            p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            mode=mode, causal=spec.causal, use_rope=use_rope,
+            window=spec.window,
+            pos_shift=per["pos_shift"],
+            prefix_len=prefix_len,
+            ctx_valid=(cache or {}).get("ctx_valid"),
+            cache_k=(cache or {}).get("k"),
+            cache_v=(cache or {}).get("v"),
+            cache_len=per.get("cache_len"),
+            collect_mass=collect_mass,
+        )
+        x = x + out
+        ys = {}
+        if mode == "cached":
+            ys["k"], ys["v"] = kv
+            ys["ctx_valid"] = cache["ctx_valid"]
+        if spec.cross_attn:
+            h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            if mode == "cached":
+                if enc_out is not None:   # prefill: build cross KV
+                    xk, xv = attn_mod.cross_kv(p["xattn"], cfg, enc_out)
+                else:                     # decode: reuse cached cross KV
+                    xk, xv = cache["xk"], cache["xv"]
+                ys["xk"], ys["xv"] = xk, xv
+            else:
+                xk, xv = attn_mod.cross_kv(p["xattn"], cfg, enc_out)
+            x = x + attn_mod.cross_attention(p["xattn"], cfg, h, xk, xv)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            ffn, aux = apply_moe(p["moe"], h, cfg)
+        else:
+            ffn, aux = apply_mlp(p["mlp"], h, mt), jnp.zeros((), jnp.float32)
+        x = x + ffn
+        ys["aux"] = aux
+        if collect_mass:
+            ys["mass"] = (mass if mass is not None
+                          else jnp.zeros((x.shape[0],), jnp.float32))
+        if capture_hidden:
+            ys["h_last"] = cap
+        return x, ys
+
+    return body
+
+
+def _ssm_layer_body(cfg, spec, mode):
+    if spec.kind == "mamba":
+        def body(x, per):
+            p, st = per["params"], per["cache"]
+            out, new_st = ssm_mod.apply_mamba(
+                p["mamba"], cfg, rms_norm(x, p["ln"], cfg.norm_eps), st,
+                mode=mode)
+            return x + out, new_st
+        return body
+
+    def body(x, per):  # rwkv
+        p, st = per["params"], per["cache"]
+        r = p["rwkv"]
+        tm_out, new_wkv, new_tmx = ssm_mod.rwkv_time_mix(
+            r, cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            {"tm_x": st["tm_x"], "wkv": st["wkv"]})
+        x = x + tm_out
+        cm_out, new_cmx = ssm_mod.rwkv_channel_mix(
+            r, cfg, rms_norm(x, p["ln2"], cfg.norm_eps),
+            {"cm_x": st["cm_x"]})
+        x = x + cm_out
+        return x, {"wkv": new_wkv, "tm_x": new_tmx, "cm_x": new_cmx}
+    return body
+
+
+def _run_scan(body, x, per_layer, *, remat: bool, unroll: bool = False):
+    if remat:
+        body = jax.checkpoint(body)
+    def scan_body(carry, xs):
+        y, ys = body(carry, xs)
+        # pin the carried residual's sharding (no-op unless a launcher
+        # installed mesh hints) — keeps remat-saved per-layer residuals
+        # batch/sequence-sharded instead of replicated
+        return hints.shard_activations(y), ys
+    return jax.lax.scan(scan_body, x, per_layer, unroll=True if unroll
+                        else 1)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+def _embed(params, cfg, tokens, *, extra, pos_shift):
+    x = params["embed"][tokens]
+    if cfg.num_patches and extra and "patches" in extra:
+        P = extra["patches"].shape[1]
+        x = jnp.concatenate(
+            [extra["patches"].astype(x.dtype), x[:, P:, :]], axis=1)
+    if extra and "soft_embeds" in extra:
+        # CIPHER-style soft tokens: substitute expected embeddings
+        se = extra["soft_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, se, extra.get("soft_start", 0), axis=1)
+    if cfg.arch_type == "audio":  # whisper decoder: additive sinusoid
+        S = tokens.shape[1]
+        pos = pos_shift + jnp.arange(S)
+        x = x + sinusoid_positions(pos, cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+def _encoder_forward(params, cfg, frames):
+    enc = params["encoder"]
+    x = frames.astype(_dt(cfg))
+    Senc = x.shape[1]
+    x = x + sinusoid_positions(jnp.arange(Senc), cfg.d_model)[None].astype(
+        x.dtype)
+    for spec, run_p in zip(cfg.encoder_plan(), enc["blocks"]):
+        body = _attn_layer_body(cfg, spec, "train", 0, False, None)
+        per = {"params": run_p,
+               "pos_shift": jnp.zeros((spec.count,), jnp.int32)}
+        x, _ = _run_scan(body, x, per, remat=cfg.remat,
+                         unroll=cfg.scan_unroll)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def apply_model(
+    params, cfg: ModelConfig, tokens, *,
+    mode: str = "train",                 # "train" | "cached"
+    cache=None,
+    shared=None,                         # repro.core.SharedKV (for pos mode)
+    extra: Optional[Dict[str, jnp.ndarray]] = None,
+    collect_mass: bool = False,
+    logits_mode: str = "all",            # "all" | "last"
+    capture_hidden: bool = False,        # AC baseline: export last-token
+                                         # hidden at every attn layer input
+    inject: Optional[Dict[str, Any]] = None,
+    # inject = {"vec": (L_attn,B,D), "mask": (L_attn,), "mode": str}
+) -> ModelOut:
+    B, S = tokens.shape
+    prefix_len = 0 if shared is None else shared.prefix_len
+    pos_mode = "shift" if shared is None else shared.pos_mode
+
+    enc_out = None
+    if cfg.encoder_layers and extra and "frames" in extra:
+        enc_out = _encoder_forward(params, cfg, extra["frames"])
+
+    cache_len = cache["len"] if cache is not None else jnp.zeros((), jnp.int32)
+    base_shift = jnp.asarray(prefix_len, jnp.int32)
+    x = _embed(params, cfg, tokens, extra=extra,
+               pos_shift=(cache_len - prefix_len) + base_shift
+               if mode == "cached" else jnp.zeros((), jnp.int32))
+
+    plan = cfg.layer_plan()
+    new_runs: List[Any] = []
+    masses: List[jnp.ndarray] = []
+    hiddens: List[jnp.ndarray] = []
+    aux_total = jnp.zeros((), jnp.float32)
+    attn_i = 0
+
+    for ri, spec in enumerate(plan):
+        run_p = params["blocks"][ri]
+        run_cache = cache["runs"][ri] if cache is not None else None
+        n = spec.count
+        if spec.kind in ("attn", "shared_attn"):
+            if spec.kind == "shared_attn":
+                run_p = jax.tree.map(lambda a: a[None],
+                                     params["shared_attn"])
+            # per-layer positional shift (paper default: == prefix_len
+            # everywhere; KVComm-S: 0 at non-selected layers)
+            if prefix_len and pos_mode == "zero_unselected":
+                sel = jax.lax.dynamic_slice_in_dim(
+                    shared.select, attn_i, n, 0)
+                shift = jnp.where(sel, prefix_len, 0).astype(jnp.int32)
+            else:
+                shift = jnp.full((n,), prefix_len, jnp.int32)
+            per = {"params": run_p, "pos_shift": shift}
+            if mode == "cached":
+                per["cache"] = run_cache
+                per["cache_len"] = jnp.broadcast_to(cache_len, (n,))
+            if inject is not None:
+                per["inject_vec"] = jax.lax.dynamic_slice_in_dim(
+                    inject["vec"], attn_i, n, 0)
+                per["inject_flag"] = jax.lax.dynamic_slice_in_dim(
+                    inject["mask"], attn_i, n, 0)
+            eo = enc_out if (spec.cross_attn and not
+                             (mode == "cached" and S == 1)) else None
+            body = _attn_layer_body(
+                cfg, spec, mode, prefix_len, collect_mass, eo,
+                capture_hidden=capture_hidden,
+                inject_mode=inject["mode"] if inject is not None else None)
+            remat = cfg.remat and mode == "train"
+            x, ys = _run_scan(body, x, per, remat=remat,
+                              unroll=cfg.scan_unroll)
+            aux_total = aux_total + jnp.sum(ys["aux"])
+            if collect_mass:
+                masses.append(ys["mass"])
+            if capture_hidden:
+                hiddens.append(ys["h_last"])
+            if mode == "cached":
+                keys = ["k", "v", "ctx_valid"]
+                if spec.cross_attn:
+                    keys += ["xk", "xv"]
+                new_runs.append({kk: ys[kk] for kk in keys})
+            attn_i += n
+        else:
+            if run_cache is None:
+                init_fn = (ssm_mod.init_mamba_state if spec.kind == "mamba"
+                           else ssm_mod.init_rwkv_state)
+                run_cache = jax.vmap(lambda _: init_fn(cfg, B))(jnp.arange(n))
+            per = {"params": run_p, "cache": run_cache}
+            body = _ssm_layer_body(cfg, spec, mode)
+            remat = cfg.remat and mode == "train"
+            x, new_st = _run_scan(body, x, per, remat=remat,
+                                  unroll=cfg.scan_unroll)
+            new_runs.append(new_st)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = hints.shard_logits(logits.astype(jnp.float32))
+
+    new_cache = None
+    if mode == "cached":
+        new_cache = {"len": cache_len + S, "runs": new_runs}
+    mass_out = jnp.concatenate(masses, axis=0) if masses else None
+    hid_out = jnp.concatenate(hiddens, axis=0) if hiddens else None
+    return ModelOut(logits=logits, cache=new_cache, masses=mass_out,
+                    aux_loss=aux_total, hiddens=hid_out)

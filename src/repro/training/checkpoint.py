@@ -1,0 +1,58 @@
+"""Checkpointing: pytrees -> a single .npz + structure manifest.
+
+Dependency-free (no orbax offline). Arrays are flattened with stable
+path-derived keys; restore rebuilds into a caller-provided structure template
+(e.g. a freshly initialized TrainState) so dtypes/sharding survive.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"keys": sorted(flat), **(metadata or {})}
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_t, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                       for x in p)
+        arr = npz[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def load_metadata(path: str) -> dict:
+    with open(_meta_path(path)) as f:
+        return json.load(f)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"

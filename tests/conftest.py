@@ -1,0 +1,39 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.tokenizer import SymbolTokenizer
+
+
+@pytest.fixture(scope="session")
+def tok():
+    return SymbolTokenizer(num_entities=16, num_attributes=8)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg(tok):
+    """4-layer float32 dense model — fast enough for every protocol test."""
+    return dataclasses.replace(
+        get_config("llama3.2-3b-pair"),
+        num_layers=4, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
+        head_dim=16, vocab_size=tok.vocab_size, dtype="float32",
+        remat=False, tie_embeddings=False)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    from repro.models import transformer as tfm
+    return tfm.init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: every assigned arch, reduced config,
+one train forward + one prefill + one decode step on CPU; shapes + no NaNs;
+train logits must agree exactly with prefill logits (cache correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as tfm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _extra(cfg, B):
+    extra = {}
+    if cfg.encoder_layers:
+        extra["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.float32)
+    if cfg.num_patches:
+        extra["patches"] = jnp.ones((B, cfg.num_patches, cfg.d_model),
+                                    jnp.float32)
+    return extra or None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+class TestArchSmoke:
+    def test_full_config_loads(self, arch):
+        cfg = get_config(arch)
+        assert cfg.total_layers >= cfg.num_layers
+        assert cfg.vocab_size > 0
+
+    def test_reduced_forward_and_decode(self, arch):
+        cfg = get_config(arch).reduced()
+        params = tfm.init_params(cfg, KEY)
+        B, S = 2, 16
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        extra = _extra(cfg, B)
+
+        out = tfm.apply_model(params, cfg, toks, mode="train", extra=extra)
+        assert out.logits.shape == (B, S, cfg.vocab_size)
+        assert not bool(jnp.isnan(out.logits).any())
+
+        cache = tfm.init_cache(cfg, B, S + 4)
+        o2 = tfm.apply_model(params, cfg, toks, mode="cached", cache=cache,
+                             extra=extra)
+        np.testing.assert_allclose(np.asarray(out.logits),
+                                   np.asarray(o2.logits), atol=1e-4)
+
+        tok1 = jnp.argmax(o2.logits[:, -1:, :], axis=-1)
+        o3 = tfm.apply_model(params, cfg, tok1, mode="cached",
+                             cache=o2.cache, logits_mode="last")
+        assert o3.logits.shape == (B, 1, cfg.vocab_size)
+        assert not bool(jnp.isnan(o3.logits).any())
+        assert int(o3.cache["len"]) == S + 1
+
+    def test_one_train_step(self, arch):
+        from repro.training.optimizer import OptimizerConfig
+        from repro.training.train_loop import (init_train_state,
+                                               make_train_step)
+        cfg = get_config(arch).reduced()
+        state = init_train_state(cfg, KEY)
+        B, S = 2, 16
+        batch = {
+            "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+            "targets": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        }
+        extra = _extra(cfg, B)
+        if extra:
+            batch.update(extra)
+        step = make_train_step(cfg, OptimizerConfig(total_steps=10))
+        state2, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(state2.opt.step) == 1
+        # params actually changed
+        delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(state2.params)))
+        assert delta > 0
+
+
+def test_decode_matches_prefill_dense():
+    """Greedy prefill+decode equals one-shot prefill over the same tokens."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("gemma3-4b").reduced(),
+                              dtype="float32")
+    params = tfm.init_params(cfg, KEY)
+    B, S = 1, 12
+    toks = jax.random.randint(KEY, (B, S + 4), 0, cfg.vocab_size)
+    # one-shot logits for positions S..S+3
+    full = tfm.apply_model(params, cfg, toks, mode="train")
+    # prefill S then feed the next 4 tokens one at a time
+    cache = tfm.init_cache(cfg, B, S + 8)
+    out = tfm.apply_model(params, cfg, toks[:, :S], mode="cached",
+                          cache=cache)
+    cache = out.cache
+    for i in range(4):
+        o = tfm.apply_model(params, cfg, toks[:, S + i:S + i + 1],
+                            mode="cached", cache=cache)
+        cache = o.cache
+        np.testing.assert_allclose(
+            np.asarray(o.logits[:, -1]), np.asarray(full.logits[:, S + i]),
+            atol=1e-4)
+
+
+def test_long_500k_applicability_flags():
+    """DESIGN.md §6: exactly these archs admit the 500k decode shape."""
+    ok = {a for a in ASSIGNED_ARCHS if get_config(a).sub_quadratic}
+    assert ok == {"rwkv6-1.6b", "zamba2-2.7b", "mixtral-8x22b", "gemma3-4b"}
+
+
+def test_kv_sharing_applicability():
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        if a == "rwkv6-1.6b":
+            assert not cfg.supports_kv_sharing
+        else:
+            assert cfg.supports_kv_sharing
+
+
+def test_ring_cache_decode():
+    """Sliding-window ring buffer (ring_cache=True) must reproduce the
+    full-cache decode exactly, including evictions past the window."""
+    import dataclasses
+    cfg0 = dataclasses.replace(get_config("mixtral-8x22b").reduced(),
+                               dtype="float32")
+    assert cfg0.sliding_window == 8
+    params = tfm.init_params(cfg0, KEY)
+    B, S, steps = 1, 20, 9
+    toks = jax.random.randint(KEY, (B, S + steps), 0, cfg0.vocab_size)
+
+    def run(cfg):
+        cache = tfm.init_cache(cfg, B, S + steps)
+        out = tfm.apply_model(params, cfg, toks[:, :S], mode="cached",
+                              cache=cache)
+        logits, cache = [out.logits[:, -1]], out.cache
+        for i in range(steps):
+            o = tfm.apply_model(params, cfg, toks[:, S + i:S + i + 1],
+                                mode="cached", cache=cache)
+            cache = o.cache
+            logits.append(o.logits[:, -1])
+        return jnp.stack(logits)
+
+    full = run(cfg0)
+    ring = run(dataclasses.replace(cfg0, ring_cache=True))
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(full),
+                               atol=1e-4)
+    # and the buffer really is window-sized
+    ring_cache = tfm.init_cache(dataclasses.replace(cfg0, ring_cache=True),
+                                B, 26)
+    assert ring_cache["runs"][0]["k"].shape[2] == 8

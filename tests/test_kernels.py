@@ -1,0 +1,202 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Every Pallas kernel is swept over shapes and dtypes and asserted against
+ref.py; plus hypothesis property tests on the flash-decode LSE-combine
+(the distributed long-context decode correctness hinges on it).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Sc,Hq,Hkv,D", [
+        (1, 8, 0, 1, 1, 16),
+        (2, 24, 16, 4, 2, 32),
+        (1, 17, 5, 6, 3, 64),     # ragged, needs padding
+        (2, 32, 32, 8, 8, 16),    # MHA
+        (1, 64, 0, 4, 1, 128),    # MQA, no context
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, B, Sq, Sc, Hq, Hkv, D, dtype):
+        ks = jax.random.split(KEY, 3)
+        Skv = Sc + Sq
+        q = _rand(ks[0], (B, Sq, Hq, D), dtype)
+        k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
+        v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
+        out, mass = ops.flash_attention(
+            q, k, v, context_len=Sc, q_offset=Sc, collect_mass=Sc > 0,
+            blk_q=8, blk_k=8)
+        rout, rmass = ref.mha_reference(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), context_len=Sc, q_offset=Sc,
+            collect_mass=Sc > 0)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(rout, np.float32),
+                                   **_tol(dtype))
+        if Sc > 0:
+            np.testing.assert_allclose(np.asarray(mass),
+                                       np.asarray(rmass), **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [1, 4, 9, 64])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(KEY, 3)
+        q = _rand(ks[0], (1, 32, 2, 16))
+        k = _rand(ks[1], (1, 32, 2, 16))
+        v = _rand(ks[2], (1, 32, 2, 16))
+        out, _ = ops.flash_attention(q, k, v, window=window, blk_q=8,
+                                     blk_k=8)
+        rout, _ = ref.mha_reference(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_noncausal(self):
+        ks = jax.random.split(KEY, 3)
+        q = _rand(ks[0], (2, 16, 2, 16))
+        k = _rand(ks[1], (2, 16, 2, 16))
+        v = _rand(ks[2], (2, 16, 2, 16))
+        out, _ = ops.flash_attention(q, k, v, causal=False, blk_q=8,
+                                     blk_k=8)
+        rout, _ = ref.mha_reference(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_mass_excludes_self_segment(self):
+        """mass sums only over the context prefix, never self tokens."""
+        ks = jax.random.split(KEY, 3)
+        Sc, Sq = 12, 8
+        q = _rand(ks[0], (1, Sq, 2, 16))
+        k = _rand(ks[1], (1, Sc + Sq, 2, 16))
+        v = _rand(ks[2], (1, Sc + Sq, 2, 16))
+        _, mass = ops.flash_attention(q, k, v, context_len=Sc, q_offset=Sc,
+                                      collect_mass=True, blk_q=8, blk_k=8)
+        assert 0.0 < float(mass[0]) < 1.0
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+        (1, 16, 1, 1, 16),
+        (2, 64, 4, 2, 32),
+        (3, 40, 8, 8, 64),      # ragged
+        (2, 128, 8, 2, 128),
+    ])
+    def test_matches_oracle(self, B, S, Hq, Hkv, D):
+        ks = jax.random.split(KEY, 4)
+        q = _rand(ks[0], (B, Hq, D))
+        k = _rand(ks[1], (B, S, Hkv, D))
+        v = _rand(ks[2], (B, S, Hkv, D))
+        kv_len = jax.random.randint(ks[3], (B,), 1, S + 1)
+        out = ops.decode_attention(q, k, v, kv_len, blk_k=8)
+        rout = ref.decode_reference(q, k, v, kv_len=kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_window(self):
+        ks = jax.random.split(KEY, 3)
+        q = _rand(ks[0], (2, 4, 16))
+        k = _rand(ks[1], (2, 32, 2, 16))
+        v = _rand(ks[2], (2, 32, 2, 16))
+        out = ops.decode_attention(q, k, v, 32, window=5, blk_k=8)
+        rout = ref.decode_reference(q, k, v, kv_len=32, window=5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                                   atol=2e-5, rtol=2e-5)
+
+    @given(st.integers(1, 4), st.integers(2, 6))
+    @settings(max_examples=10, deadline=None)
+    def test_sharded_combine_equals_full(self, n_shards, blocks):
+        """Flash-decode partials LSE-combined across shards == full decode —
+        the invariant behind the distributed 500k-token cache."""
+        S = 8 * blocks * n_shards
+        ks = jax.random.split(KEY, 3)
+        q = _rand(ks[0], (2, 4, 32))
+        k = _rand(ks[1], (2, S, 2, 32))
+        v = _rand(ks[2], (2, S, 2, 32))
+        per = S // n_shards
+        os_, ms_, ls_ = [], [], []
+        for i in range(n_shards):
+            o, m, l = ops.decode_attention_partials(
+                q, k[:, i * per:(i + 1) * per],
+                v[:, i * per:(i + 1) * per], per, blk_k=8)
+            os_.append(o), ms_.append(m), ls_.append(l)
+        comb = ref.combine_decode_partials(
+            jnp.stack(os_), jnp.stack(ms_), jnp.stack(ls_))
+        full = ref.decode_reference(q, k, v, kv_len=S)
+        np.testing.assert_allclose(np.asarray(comb), np.asarray(full),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,T,H,hd,blk", [
+        (1, 16, 1, 8, 8),
+        (2, 40, 3, 16, 16),    # ragged T
+        (1, 64, 2, 32, 32),
+    ])
+    def test_matches_oracle(self, B, T, H, hd, blk):
+        ks = jax.random.split(KEY, 6)
+        r = _rand(ks[0], (B, T, H, hd))
+        k = _rand(ks[1], (B, T, H, hd))
+        v = _rand(ks[2], (B, T, H, hd))
+        w = jax.nn.sigmoid(_rand(ks[3], (B, T, H, hd)))
+        u = _rand(ks[4], (H, hd))
+        s0 = _rand(ks[5], (B, H, hd, hd))
+        y, sf = ops.wkv6_scan(r, k, v, w, u, s0, blk_t=blk)
+        ry, rsf = ref.wkv6_reference(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ry),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(rsf),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_chunking_invariance(self):
+        """Same result regardless of time-chunk size."""
+        ks = jax.random.split(KEY, 6)
+        B, T, H, hd = 1, 32, 2, 16
+        r = _rand(ks[0], (B, T, H, hd))
+        k = _rand(ks[1], (B, T, H, hd))
+        v = _rand(ks[2], (B, T, H, hd))
+        w = jax.nn.sigmoid(_rand(ks[3], (B, T, H, hd)))
+        u = _rand(ks[4], (H, hd))
+        s0 = jnp.zeros((B, H, hd, hd))
+        y8, s8 = ops.wkv6_scan(r, k, v, w, u, s0, blk_t=8)
+        y32, s32 = ops.wkv6_scan(r, k, v, w, u, s0, blk_t=32)
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s8), np.asarray(s32),
+                                   atol=1e-5)
+
+    def test_state_continuation(self):
+        """Running [0:T/2] then [T/2:T] from the carried state == full run —
+        the prefill/decode split and the state-sharing protocol rely on it."""
+        ks = jax.random.split(KEY, 6)
+        B, T, H, hd = 1, 32, 2, 16
+        r = _rand(ks[0], (B, T, H, hd))
+        k = _rand(ks[1], (B, T, H, hd))
+        v = _rand(ks[2], (B, T, H, hd))
+        w = jax.nn.sigmoid(_rand(ks[3], (B, T, H, hd)))
+        u = _rand(ks[4], (H, hd))
+        s0 = jnp.zeros((B, H, hd, hd))
+        y_full, s_full = ref.wkv6_reference(r, k, v, w, u, s0)
+        h = T // 2
+        y1, s1 = ref.wkv6_reference(r[:, :h], k[:, :h], v[:, :h], w[:, :h],
+                                    u, s0)
+        y2, s2 = ref.wkv6_reference(r[:, h:], k[:, h:], v[:, h:], w[:, h:],
+                                    u, s1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                                   atol=1e-5)

@@ -1,0 +1,117 @@
+"""Unit + property tests for the paper's layer-selection strategy (§3.2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.selection import (gaussian_prior, kendall_tau,
+                                  normalize_scores, select_layers,
+                                  selection_scores, topk_mask)
+from repro.core.types import KVCommConfig
+
+
+class TestGaussianPrior:
+    def test_peak_at_mu(self):
+        p = gaussian_prior(32, mu=16, sigma=10)
+        assert int(jnp.argmax(p)) == 15  # layer index 16 is position 15
+
+    def test_default_mu_is_midpoint(self):
+        p = gaussian_prior(28)
+        assert abs(int(jnp.argmax(p)) - 13) <= 1
+
+    def test_bounds(self):
+        p = gaussian_prior(48, sigma=10)
+        assert float(jnp.max(p)) <= 1.0 + 1e-6
+        assert float(jnp.min(p)) > 0.0
+
+    def test_symmetry(self):
+        p = np.asarray(gaussian_prior(31, mu=16, sigma=5))
+        assert np.allclose(p, p[::-1], atol=1e-6)
+
+
+class TestNormalize:
+    def test_range(self):
+        s = normalize_scores(jnp.array([3.0, 7.0, 5.0]))
+        assert float(jnp.min(s)) == 0.0 and float(jnp.max(s)) == 1.0
+
+    def test_batch_averaged(self):
+        raw = jnp.array([[1.0, 3.0], [2.0, 2.0]])  # (L=2, B=2)
+        s = normalize_scores(raw)
+        assert s.shape == (2,)
+
+    @given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_property_range(self, vals):
+        s = np.asarray(normalize_scores(jnp.array(vals, jnp.float32)))
+        assert np.all(s >= -1e-6) and np.all(s <= 1.0 + 1e-6)
+
+
+class TestSelection:
+    @given(st.integers(2, 80), st.floats(0.05, 1.0), st.integers(0, 10_000))
+    @settings(max_examples=60, deadline=None)
+    def test_topk_count_property(self, L, ratio, seed):
+        cfg = KVCommConfig(ratio=ratio, selector="random", seed=seed)
+        mask = np.asarray(select_layers(None, L, cfg))
+        assert mask.sum() == cfg.num_selected(L) == min(
+            L, max(1, int(np.ceil(ratio * L))))
+
+    def test_kvcomm_picks_top_scores_alpha1(self):
+        scores = jnp.array([0.1, 0.9, 0.3, 0.8, 0.2, 0.0])
+        cfg = KVCommConfig(ratio=0.5, alpha=1.0, selector="kvcomm")
+        mask = np.asarray(select_layers(scores, 6, cfg))
+        assert list(np.nonzero(mask)[0]) == [1, 2, 3]
+
+    def test_alpha0_equals_prior_only(self):
+        scores = jax.random.uniform(jax.random.PRNGKey(0), (32,))
+        a = select_layers(scores, 32,
+                          KVCommConfig(ratio=0.3, alpha=0.0,
+                                       selector="kvcomm"))
+        b = select_layers(None, 32,
+                          KVCommConfig(ratio=0.3, selector="prior_only"))
+        assert bool(jnp.all(a == b))
+
+    def test_contiguous_is_one_chunk(self):
+        cfg = KVCommConfig(ratio=0.25, selector="contiguous", layer_from=10)
+        mask = np.asarray(select_layers(None, 40, cfg))
+        idx = np.nonzero(mask)[0]
+        assert len(idx) == 10
+        assert np.all(np.diff(idx) == 1) and idx[0] == 10
+
+    def test_contiguous_clamps(self):
+        cfg = KVCommConfig(ratio=0.5, selector="contiguous", layer_from=99)
+        mask = np.asarray(select_layers(None, 8, cfg))
+        assert mask.sum() == 4 and mask[-1]
+
+    def test_non_contiguous_possible(self):
+        """The paper's key capability vs DroidSpeak: gaps in the subset."""
+        scores = jnp.array([1.0, 0.0, 0.9, 0.0, 0.8, 0.0])
+        cfg = KVCommConfig(ratio=0.5, alpha=1.0, selector="kvcomm")
+        idx = np.nonzero(np.asarray(select_layers(scores, 6, cfg)))[0]
+        assert list(idx) == [0, 2, 4]
+
+    @given(st.integers(4, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_all_selector(self, L):
+        mask = select_layers(None, L, KVCommConfig(selector="all"))
+        assert bool(jnp.all(mask))
+
+    def test_selection_scores_mix(self):
+        s = jnp.zeros((16,))
+        out = selection_scores(s, KVCommConfig(alpha=0.25))
+        pr = gaussian_prior(16)
+        assert np.allclose(np.asarray(out), 0.75 * np.asarray(pr),
+                           atol=1e-6)
+
+
+class TestKendallTau:
+    def test_identical_ranks(self):
+        a = jnp.arange(10.0)
+        assert float(kendall_tau(a, a)) == pytest.approx(1.0)
+
+    def test_reversed_ranks(self):
+        a = jnp.arange(10.0)
+        assert float(kendall_tau(a, a[::-1])) == pytest.approx(-1.0)

@@ -1,0 +1,83 @@
+"""End-to-end system behaviour: train a tiny pair on the retrieval task and
+verify the paper's headline structure emerges from the full pipeline
+(trained-checkpoint accuracy levels are asserted by the benchmark suite;
+here we train 250 quick steps and check structural behaviour)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import KVCommConfig
+from repro.data.pipeline import synthetic_lm_iter
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.serving.engine import CommEngine
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import train
+
+
+@pytest.fixture(scope="module")
+def trained(tok):
+    from repro.configs.registry import get_config
+    cfg = dataclasses.replace(
+        get_config("llama3.2-3b-pair"),
+        num_layers=4, d_model=96, d_ff=256, num_heads=4, num_kv_heads=4,
+        head_dim=24, vocab_size=tok.vocab_size, dtype="float32",
+        remat=False, tie_embeddings=False)
+    task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=4, seed=0))
+    it = synthetic_lm_iter(task, 32)
+    opt = OptimizerConfig(lr=3e-3, total_steps=250, warmup_steps=25)
+    state = train(cfg, opt, it, steps=250, log_every=0)
+    eval_task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=4,
+                                              seed=99))
+    return cfg, state.params, eval_task
+
+
+class TestEndToEnd:
+    def test_skyline_beats_baseline(self, trained, tok):
+        cfg, params, task = trained
+        eng = CommEngine(cfg, params, params, tok)
+        b = task.batch(48)
+        sky = eng.run("skyline", b)
+        base = eng.run("baseline", b)
+        assert sky.accuracy > base.accuracy
+
+    def test_kvcomm_full_matches_skyline_and_uses_less_compute_partial(
+            self, trained, tok):
+        cfg, params, task = trained
+        eng = CommEngine(cfg, params, params, tok)
+        b = task.batch(48)
+        sky = eng.run("skyline", b)
+        full = eng.run("kvcomm", b,
+                       kvcfg=KVCommConfig(ratio=1.0, selector="all"))
+        np.testing.assert_array_equal(full.preds, sky.preds)
+        part = eng.run("kvcomm", b,
+                       kvcfg=KVCommConfig(ratio=0.5, selector="prior_only"))
+        assert part.flops < sky.flops
+        assert part.wire_bytes < full.wire_bytes
+
+    def test_calibrated_selection_is_deterministic(self, trained, tok):
+        cfg, params, task = trained
+        eng = CommEngine(cfg, params, params, tok)
+        b = task.batch(2)
+        s1 = eng.calibrate(b["context"][:1], b["query"][:1])
+        s2 = eng.calibrate(b["context"][:1], b["query"][:1])
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   atol=1e-6)
+
+    def test_generation_loop(self, trained, tok):
+        from repro import core
+        from repro.core.types import SharedKV
+        cfg, params, task = trained
+        b = task.batch(2)
+        kv, _ = core.sender_prefill(params, cfg,
+                                    jnp.asarray(b["context"]))
+        L = cfg.attn_layer_count
+        shared = SharedKV(kv=kv, select=jnp.ones((L,), bool),
+                          prefix_len=b["context"].shape[1])
+        toks, cache = core.generate(params, cfg, jnp.asarray(b["query"]),
+                                    shared, max_new=4)
+        assert toks.shape == (2, 4)
+        assert int(cache["len"]) == (b["context"].shape[1]
+                                     + b["query"].shape[1] + 4)
