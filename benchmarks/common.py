@@ -1,4 +1,9 @@
-"""Shared benchmark plumbing: trained checkpoints, engines, eval loops."""
+"""Shared benchmark plumbing: the trained pair, comm sessions, eval loops.
+
+The pair itself (config / tokenizer / checkpoints / quick-train fallback)
+lives in ``repro.launch.pairs`` — re-exported here for convenience — and the
+benchmarks drive the ``repro.comm`` stack through ``make_session``.
+"""
 from __future__ import annotations
 
 import os
@@ -7,19 +12,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import numpy as np
-
-from repro.core.types import KVCommConfig
+from repro.comm import Agent, CommSession
 from repro.data.synthetic import SyntheticTask, TaskConfig
-from repro.data.tokenizer import SymbolTokenizer
-from repro.serving.engine import CommEngine
-from repro.training import checkpoint
-from repro.training.optimizer import OptimizerConfig
-from repro.training.train_loop import train
+from repro.launch.pairs import (load_pair, pair_config,  # noqa: F401
+                                pair_tokenizer, task_suite)
 
-CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                        "ckpt")
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
 # The evaluation "datasets": synthetic analogues of the paper's suite
@@ -34,58 +31,13 @@ DATASETS = {
 EVAL_N = int(os.environ.get("REPRO_EVAL_N", "128"))
 
 
-def pair_setup():
-    from examples.train_comm_pair import (pair_config, pair_tokenizer,
-                                          task_suite)
-    return pair_config(), pair_tokenizer()
-
-
-def _quick_train(cfg, tok, steps=1200):
-    from repro.data.pipeline import mixed_lm_iter
-    from examples.train_comm_pair import task_suite
-    print(f"[common] no checkpoint found -> quick-training {steps} steps "
-          "(run examples/train_comm_pair.py for the full pair)",
-          file=sys.stderr)
-    it = mixed_lm_iter(task_suite(tok, seed=0), 64, seed=0)
-    opt = OptimizerConfig(lr=2e-3, total_steps=steps,
-                          warmup_steps=steps // 20)
-    state = train(cfg, opt, it, steps=steps, log_every=0)
-    return state.params
-
-
-_CACHE = {}
-
-
-def load_pair():
-    """(cfg, tok, sender_params, receiver_params). Uses the trained
-    checkpoints when available, else quick-trains a single model for both
-    roles (engine still exercises the full protocol)."""
-    if "pair" in _CACHE:
-        return _CACHE["pair"]
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-    cfg, tok = pair_setup()
-    from repro.models import transformer as tfm
-    template = jax.eval_shape(
-        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
-    template = jax.tree.map(
-        lambda s: jax.numpy.zeros(s.shape, s.dtype), template)
-    s_path = os.path.join(CKPT_DIR, "sender.npz")
-    r_path = os.path.join(CKPT_DIR, "receiver.npz")
-    b_path = os.path.join(CKPT_DIR, "base.npz")
-    if os.path.exists(s_path) and os.path.exists(r_path):
-        sender = checkpoint.restore(s_path, template)
-        receiver = checkpoint.restore(r_path, template)
-    elif os.path.exists(b_path):
-        sender = receiver = checkpoint.restore(b_path, template)
-    else:
-        sender = receiver = _quick_train(cfg, tok)
-    _CACHE["pair"] = (cfg, tok, sender, receiver)
-    return _CACHE["pair"]
-
-
-def make_engine():
+def make_session(transport=None):
+    """(CommSession, cfg, tok) over the trained pair."""
     cfg, tok, sender, receiver = load_pair()
-    return CommEngine(cfg, sender, receiver, tok), cfg, tok
+    session = CommSession(Agent("sender", cfg, sender, tok),
+                          Agent("receiver", cfg, receiver, tok),
+                          transport)
+    return session, cfg, tok
 
 
 def eval_batch(tok, name: str, n: int | None = None):
@@ -93,14 +45,12 @@ def eval_batch(tok, name: str, n: int | None = None):
     return task.batch(n or EVAL_N)
 
 
-def calib_scores(eng, tok, name: str):
-    """Paper §H: a single calibration sample."""
-    key = f"calib/{name}"
-    if key not in _CACHE:
-        task = SyntheticTask(tok, DATASETS[name])
-        b = task.batch(1)
-        _CACHE[key] = eng.calibrate(b["context"], b["query"])
-    return _CACHE[key]
+def calib_scores(session, tok, name: str):
+    """Paper §H: a single calibration sample, cached per task inside the
+    session (``calib_key=name`` reuses it across batches)."""
+    task = SyntheticTask(tok, DATASETS[name])
+    b = task.batch(1)
+    return session.calibrate(b["context"], b["query"], key=name)
 
 
 class Timer:

@@ -16,7 +16,7 @@ from repro.data.synthetic import SyntheticTask
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     ds = "countries"
     test_batch = common.eval_batch(tok, ds)
     task = SyntheticTask(tok, common.DATASETS[ds])
@@ -24,9 +24,9 @@ def run(emit=common.emit) -> dict:
     ref_sel = None
     for n in (1, 2, 4, 8, 16):
         calib = task.batch(n)
-        scores = eng.calibrate(calib["context"], calib["query"])
+        scores = session.calibrate(calib["context"], calib["query"])
         kvcfg = KVCommConfig(ratio=0.5, alpha=0.7)
-        r = eng.run("kvcomm", test_batch, kvcfg=kvcfg, scores=scores)
+        r = session.run("kvcomm", test_batch, kvcfg=kvcfg, scores=scores)
         sel = np.nonzero(r.extras["select"])[0].tolist()
         if ref_sel is None:
             ref_sel = set(sel)

@@ -14,22 +14,22 @@ from repro.core.types import KVCommConfig
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     L = cfg.attn_layer_count
     ds = "countries"
     batch = common.eval_batch(tok, ds)
-    scores = common.calib_scores(eng, tok, ds)
+    scores = common.calib_scores(session, tok, ds)
     out = {}
     for ratio in (0.3, 0.5):
         M = KVCommConfig(ratio=ratio).num_selected(L)
         chunk_acc = {}
         for start in range(0, L - M + 1):
-            r = eng.run("contiguous", batch,
+            r = session.run("contiguous", batch,
                         kvcfg=KVCommConfig(ratio=ratio,
                                            selector="contiguous",
                                            layer_from=start))
             chunk_acc[start] = r.accuracy
-        kv = eng.run("kvcomm", batch,
+        kv = session.run("kvcomm", batch,
                      kvcfg=KVCommConfig(ratio=ratio, alpha=0.7),
                      scores=scores)
         accs = np.array(list(chunk_acc.values()))

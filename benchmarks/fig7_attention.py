@@ -16,22 +16,20 @@ from repro import core
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     out = {}
     for ds in common.DATASETS:
         batch = common.eval_batch(tok, ds)
-        scores = common.calib_scores(eng, tok, ds)
+        scores = common.calib_scores(session, tok, ds)
         L = cfg.attn_layer_count
         M = max(1, int(0.4 * L))
-        kv, states, Sc = eng.sender_kv(batch["context"])
+        kv, states, Sc = session.sender.export_kv(batch["context"])
         res = {}
         for which, sel in (("top", topk_mask(scores, M)),
                            ("bottom", topk_mask(-scores, M))):
             shared = SharedKV(kv=kv, select=sel, prefix_len=Sc)
-            o = core.receiver_prefill(eng.receiver, cfg,
-                                      jnp.asarray(batch["query"]), shared,
-                                      max_new=1)
-            preds = np.asarray(jnp.argmax(o.logits[:, -1, :], -1))
+            o = session.receiver.prefill(batch["query"], shared, max_new=1)
+            preds = session.receiver.predict_last(o.logits)
             res[which] = round(float(np.mean(preds == batch["answer"])), 4)
         out[ds] = res
         emit(f"fig7/{ds}", 0.0,

@@ -21,7 +21,7 @@ from repro.core.types import KVCommConfig, SharedKV
 from repro.serving import costs
 
 
-def measured_prefill_flops(eng, cfg, Sc: int, Sq: int, select) -> float:
+def measured_prefill_flops(session, cfg, Sc: int, Sq: int, select) -> float:
     """XLA-counted FLOPs of the receiver prefill consuming a prefix."""
     from repro.models import transformer as tfm
     B = 1
@@ -40,13 +40,13 @@ def measured_prefill_flops(eng, cfg, Sc: int, Sq: int, select) -> float:
                                logits_mode="last").logits
 
     toks = jnp.zeros((B, Sq), jnp.int32)
-    compiled = jax.jit(f).lower(eng.receiver, toks, kv).compile()
-    ca = compiled.cost_analysis() or {}
-    return float(ca.get("flops", 0.0))
+    compiled = jax.jit(f).lower(session.receiver.params, toks, kv).compile()
+    from repro.utils.hlo import cost_analysis_dict
+    return float(cost_analysis_dict(compiled).get("flops", 0.0))
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     out = {}
 
     # (a)-(c) analytic results use the PAPER-SCALE config (Llama-3.2-3B
@@ -100,9 +100,9 @@ def run(emit=common.emit) -> dict:
     # (d) measured XLA FLOPs cross-check on the tiny pair (C=96, Q=16)
     Lp = cfg.attn_layer_count
     Sc, Sq = 96, 16
-    full = measured_prefill_flops(eng, cfg, Sc, Sq,
+    full = measured_prefill_flops(session, cfg, Sc, Sq,
                                   jnp.ones((Lp,), bool))
-    none = measured_prefill_flops(eng, cfg, Sc, Sq,
+    none = measured_prefill_flops(session, cfg, Sc, Sq,
                                   jnp.zeros((Lp,), bool))
     out["measured_prefill_flops"] = {
         "all_layers": full, "no_layers": none,

@@ -1,46 +1,47 @@
 """Paper Table 10 / §J: two senders, one receiver. Each sender holds HALF the
 context facts; KVComm concatenates their per-layer KV. The paper finds two
 senders beat one (information diversification); here one sender literally
-lacks half the facts, so the composition effect is directly measurable."""
+lacks half the facts, so the composition effect is directly measurable.
+
+Uses the mailbox-style multi-sender API: each sender attaches to the session,
+deposits its SharedKV through the (byte-accounted) transport, and
+``session.combined()`` merges the prefixes along the context axis."""
 from __future__ import annotations
 
 import json
 import os
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro import core
-from repro.core.types import KVCommConfig, SharedKV
+from repro.core.types import KVCommConfig
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     out = {}
     for ds in ("countries", "hotpotqa"):
         batch = common.eval_batch(tok, ds)
         ctx = batch["context"]
         half = (ctx.shape[1] // 4) * 2   # even split on fact boundary
         c1, c2 = ctx[:, :half], ctx[:, half:]
-        scores = common.calib_scores(eng, tok, ds)
-        L = cfg.attn_layer_count
+        scores = common.calib_scores(session, tok, ds)
         kvcfg = KVCommConfig(ratio=0.7, alpha=0.7)
-        select = core.make_selection(cfg, kvcfg, scores)
+        select = session.selection(kvcfg, scores=scores)
 
-        def answer_with(shared):
-            o = core.receiver_prefill(eng.receiver, cfg,
-                                      jnp.asarray(batch["query"]), shared,
-                                      max_new=1)
-            preds = np.asarray(jnp.argmax(o.logits[:, -1, :], -1))
+        def accuracy(shared):
+            o = session.receiver.prefill(batch["query"], shared, max_new=1)
+            preds = session.receiver.predict_last(o.logits)
             return float(np.mean(preds == batch["answer"]))
 
-        kv1, _, s1 = eng.sender_kv(c1)
-        kv2, _, s2 = eng.sender_kv(c2)
-        one = answer_with(SharedKV(kv=kv1, select=select, prefix_len=s1))
-        both = answer_with(core.combine_senders([
-            SharedKV(kv=kv1, select=select, prefix_len=s1),
-            SharedKV(kv=kv2, select=select, prefix_len=s2)]))
+        # both halves arrive via sender mailboxes (§J composition); the
+        # same agent plays both senders here — each holds half the facts
+        a = session.attach_sender(session.sender, name="sender-A")
+        b = session.attach_sender(session.sender, name="sender-B")
+        s1 = a.send(c1, kvcfg, select=select)
+        b.send(c2, kvcfg, select=select)
+        one = accuracy(s1)
+        both = accuracy(session.combined(clear=True))
         out[ds] = {"one_sender_half_ctx": round(one, 4),
                    "two_senders": round(both, 4)}
         emit(f"table10/{ds}", 0.0, f"one={one:.3f};two={both:.3f}")

@@ -12,16 +12,16 @@ from repro.core.types import KVCommConfig
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     out = {}
     for ds in common.DATASETS:
         batch = common.eval_batch(tok, ds)
-        scores = common.calib_scores(eng, tok, ds)
+        scores = common.calib_scores(session, tok, ds)
         row = {}
         for ratio in (0.3, 0.5, 0.7):
             base = KVCommConfig(ratio=ratio, alpha=0.7)
-            a = eng.run("kvcomm", batch, kvcfg=base, scores=scores)
-            b = eng.run("kvcomm", batch,
+            a = session.run("kvcomm", batch, kvcfg=base, scores=scores)
+            b = session.run("kvcomm", batch,
                         kvcfg=dataclasses.replace(
                             base, pos_mode="zero_unselected"),
                         scores=scores)

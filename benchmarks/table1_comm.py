@@ -26,11 +26,11 @@ METHODS = [
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     table = {}
     for ds in common.DATASETS:
         batch = common.eval_batch(tok, ds)
-        scores = common.calib_scores(eng, tok, ds)
+        scores = common.calib_scores(session, tok, ds)
         row = {}
         for name, kw in METHODS:
             method = name.split("_0")[0] if name.startswith("kvcomm") \
@@ -39,7 +39,7 @@ def run(emit=common.emit) -> dict:
             if "kvcfg" in kw:
                 kw["scores"] = scores
             with common.Timer() as t:
-                r = eng.run(method, batch, **kw)
+                r = session.run(method, batch, **kw)
             row[name] = round(r.accuracy, 4)
             emit(f"table1/{ds}/{name}", t.us / len(batch["answer"]),
                  f"acc={r.accuracy:.3f};bytes={r.wire_bytes}")

@@ -14,19 +14,19 @@ from repro.core.types import KVCommConfig
 
 
 def run(emit=common.emit) -> dict:
-    eng, cfg, tok = common.make_engine()
+    session, cfg, tok = common.make_session()
     table = {}
     for ds in common.DATASETS:
         batch = common.eval_batch(tok, ds)
-        scores = common.calib_scores(eng, tok, ds)
+        scores = common.calib_scores(session, tok, ds)
         row = {}
         for ratio in (0.3, 0.5, 0.7):
-            kv = eng.run("kvcomm", batch,
+            kv = session.run("kvcomm", batch,
                          kvcfg=KVCommConfig(ratio=ratio, alpha=0.7),
                          scores=scores)
             rnd = []
             for seed in range(3):
-                r = eng.run("random", batch,
+                r = session.run("random", batch,
                             kvcfg=KVCommConfig(ratio=ratio,
                                                selector="random",
                                                seed=seed))

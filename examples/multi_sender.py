@@ -2,6 +2,9 @@
 receiver answers questions requiring either half by attending over both
 transmitted KV prefixes concatenated along the context axis.
 
+Each sender attaches to the session and deposits its SharedKV through the
+byte-accounted transport; ``session.combined()`` merges the mailbox.
+
     PYTHONPATH=src python examples/multi_sender.py
 """
 from __future__ import annotations
@@ -10,19 +13,19 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro import core
-from repro.core.types import KVCommConfig, SharedKV
+from repro.comm import Agent, CommSession
+from repro.core.types import KVCommConfig
 from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.launch.pairs import load_pair
 
 
 def main() -> None:
-    from benchmarks.common import load_pair
     cfg, tok, sender_params, receiver_params = load_pair()
+    session = CommSession(Agent("sender", cfg, sender_params, tok),
+                          Agent("receiver", cfg, receiver_params, tok))
     task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=8,
                                          seed=21))
     batch = task.batch(32)
@@ -31,25 +34,25 @@ def main() -> None:
     c1, c2 = ctx[:, :half], ctx[:, half:]
 
     kvcfg = KVCommConfig(ratio=0.7, selector="prior_only")
-    select = core.make_selection(cfg, kvcfg)
+    select = session.selection(kvcfg)
 
-    def shared_for(c):
-        kv, _ = core.sender_prefill(sender_params, cfg, jnp.asarray(c))
-        return SharedKV(kv=kv, select=select, prefix_len=c.shape[1])
-
-    s1, s2 = shared_for(c1), shared_for(c2)
+    # two mailbox senders (same weights here; disjoint knowledge)
+    sender_a = session.attach_sender(session.sender, name="A")
+    sender_b = session.attach_sender(session.sender, name="B")
+    s1 = sender_a.send(c1, kvcfg, select=select)
+    s2 = sender_b.send(c2, kvcfg, select=select)
 
     def acc(shared):
-        out = core.receiver_prefill(receiver_params, cfg,
-                                    jnp.asarray(batch["query"]), shared,
-                                    max_new=1)
-        preds = np.asarray(jnp.argmax(out.logits[:, -1, :], -1))
+        out = session.receiver.prefill(batch["query"], shared, max_new=1)
+        preds = session.receiver.predict_last(out.logits)
         return float(np.mean(preds == batch["answer"]))
 
-    both = core.combine_senders([s1, s2])
+    both = session.combined()
     print(f"sender A only (half the facts): acc {acc(s1):.3f}")
     print(f"sender B only (other half):     acc {acc(s2):.3f}")
     print(f"both senders combined (§J):     acc {acc(both):.3f}")
+    print(f"transport moved {session.transport.total_bytes / 1e6:.2f} MB "
+          f"over {len(session.transport.log)} transfers")
 
 
 if __name__ == "__main__":

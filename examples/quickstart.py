@@ -1,9 +1,15 @@
-"""KVComm quickstart: one sender, one receiver, one question.
+"""KVComm quickstart: one sender, one receiver, one question — on the
+``repro.comm`` stack.
 
-Builds a tiny untrained pair (or the trained checkpoints if you ran
-``train_comm_pair.py``), walks the full protocol explicitly — sender prefill
--> calibration -> layer selection -> transmission -> receiver prefill ->
-decode — and prints what moved over the wire.
+Builds the trained pair (or quick-trains a stand-in), then walks the
+communication round explicitly through the four API concepts:
+
+  Agent      — sender/receiver models with prefill/decode/export_kv
+  Transport  — SerializedTransport: the fp16 wire payload is actually
+               materialized and its bytes measured
+  selection  — calibrate -> Gaussian-prior-mixed scores -> top-M layers
+  CommSession— ties them together; ``session.run("kvcomm", ...)`` is the
+               one-line version of everything below
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,21 +19,22 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import core
+from repro.comm import Agent, CommSession, SerializedTransport
+from repro.core import kv_wire_bytes
 from repro.core.types import KVCommConfig
 from repro.data.synthetic import SyntheticTask, TaskConfig
-from repro.data.tokenizer import SymbolTokenizer
+from repro.launch.pairs import load_pair
 
 
 def main() -> None:
-    from benchmarks.common import load_pair
     cfg, tok, sender_params, receiver_params = load_pair()
+    session = CommSession(
+        Agent("sender", cfg, sender_params, tok),
+        Agent("receiver", cfg, receiver_params, tok),
+        transport=SerializedTransport(wire_dtype="float16"))
 
     task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=6, seed=7))
     sample = task.batch(1)
@@ -35,39 +42,40 @@ def main() -> None:
     print(f"query tokens   : {sample['query'][0]}")
     print(f"gold answer    : {sample['answer'][0]}")
 
-    # 1. sender prefills the context ONCE (no decoding!)
-    kv, states = core.sender_prefill(sender_params, cfg,
-                                     jnp.asarray(sample["context"]))
-    L = cfg.attn_layer_count
-    print(f"\nsender produced KV for {L} layers, "
-          f"shape per layer {tuple(kv['k'].shape[1:])}")
+    # 1. calibrate: one sample (paper §H). The sender prefills the context
+    #    ONCE; the receiver measures Eq.(1) attention mass per layer.
+    scores = session.calibrate(sample["context"], sample["query"],
+                               key="quickstart")
+    print(f"\nattention importance scores: "
+          f"{np.round(np.asarray(scores), 3)}")
 
-    # 2. calibrate: receiver measures Eq.(1) attention mass per layer
-    scores = core.calibrate(receiver_params, cfg,
-                            jnp.asarray(sample["query"]), kv)
-    print(f"attention importance scores: {np.round(np.asarray(scores), 3)}")
-
-    # 3. select top-M layers under the Gaussian prior
+    # 2. select top-M layers under the Gaussian prior, frozen for the task
     kvcfg = KVCommConfig(ratio=0.5, alpha=0.7)
-    select = core.make_selection(cfg, kvcfg, scores)
+    select = session.selection(kvcfg, scores=scores, key="quickstart")
     print(f"selected layers ({kvcfg.ratio:.0%}): "
           f"{np.nonzero(np.asarray(select))[0]}")
 
-    # 4. transmit exactly those layers
-    channel = core.Channel()
-    shared = channel.send_kv(cfg, kvcfg, kv, select)
-    print(f"wire bytes: {channel.total_bytes} "
-          f"(full sharing would be "
-          f"{core.kv_wire_bytes(cfg, 1, shared.prefix_len, L, 4)})")
+    # 3. share: sender prefill -> transport. The SerializedTransport
+    #    gathers exactly the selected layers, casts to fp16, and counts
+    #    the payload's real bytes.
+    shared, _ = session.share(sample["context"], kvcfg, key="quickstart")
+    rec = session.transport.last
+    L = cfg.attn_layer_count
+    print(f"wire bytes: {rec.n_bytes} ({rec.layers} layers, "
+          f"{rec.wire_dtype} wire; full sharing would be "
+          f"{kv_wire_bytes(cfg, 1, shared.prefix_len, L, 2)})")
 
-    # 5. receiver answers
-    toks, _ = core.generate(receiver_params, cfg,
-                            jnp.asarray(sample["query"]), shared, max_new=1)
-    pred = int(jnp.argmax(core.receiver_prefill(
-        receiver_params, cfg, jnp.asarray(sample["query"]), shared,
-        max_new=1).logits[:, -1, :], -1)[0])
+    # 4. the receiver answers, streaming one token per decode step
+    first = next(iter(session.stream(sample["query"], shared, max_new=1)))
+    pred = int(first[0])
     print(f"\nreceiver prediction: {pred} "
           f"({'CORRECT' if pred == sample['answer'][0] else 'wrong'})")
+
+    # ... or in one line, with byte/FLOP/latency accounting attached:
+    r = session.run("kvcomm", task.batch(16), kvcfg=kvcfg,
+                    calib_key="quickstart")
+    print(f"session.run('kvcomm'): acc={r.accuracy:.2f} "
+          f"bytes={r.wire_bytes} latency={r.latency_s * 1e3:.0f}ms")
 
 
 if __name__ == "__main__":

@@ -14,53 +14,19 @@ Run:  PYTHONPATH=src python examples/train_comm_pair.py [--steps 6000]
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
-import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.registry import get_config
-from repro.data.pipeline import mixed_lm_iter, synthetic_lm_iter
-from repro.data.synthetic import SyntheticTask, TaskConfig
-from repro.data.tokenizer import SymbolTokenizer
+from repro.data.pipeline import mixed_lm_iter
+# pair definitions live in the package so serving / benchmarks / examples
+# share one source of truth (no sys.path games)
+from repro.launch.pairs import (CKPT_DIR, pair_config, pair_tokenizer,
+                                task_suite)
 from repro.training import checkpoint
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_loop import TrainState, init_train_state, train
-
-CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                        "ckpt")
-
-
-def pair_tokenizer() -> SymbolTokenizer:
-    return SymbolTokenizer(num_entities=32, num_attributes=16)
-
-
-def pair_config():
-    """Tiny Llama-3.2-family stand-in: 8 layers so layer selection has room
-    to matter, float32 for CPU numerics."""
-    tok = pair_tokenizer()
-    return dataclasses.replace(
-        get_config("llama3.2-3b-pair"),
-        num_layers=8, d_model=192, d_ff=512, num_heads=6, num_kv_heads=6,
-        head_dim=32, vocab_size=tok.vocab_size, dtype="float32",
-        remat=False, tie_embeddings=False)
-
-
-def task_suite(tok, seed=0):
-    return [
-        SyntheticTask(tok, TaskConfig("retrieval", num_facts=4, seed=seed)),
-        SyntheticTask(tok, TaskConfig("retrieval", num_facts=6,
-                                      seed=seed + 1)),
-        SyntheticTask(tok, TaskConfig("retrieval", num_facts=8,
-                                      seed=seed + 2)),
-        SyntheticTask(tok, TaskConfig("multihop", num_facts=6, hops=2,
-                                      seed=seed + 3)),
-        SyntheticTask(tok, TaskConfig("decision", num_options=3,
-                                      seed=seed + 4)),
-    ]
 
 
 def main() -> None:

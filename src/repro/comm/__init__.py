@@ -1,0 +1,46 @@
+"""repro.comm — the composable communication stack.
+
+The paper frames KVComm as a *communication framework* between LLM agents;
+this package is the repo's public API for it, built from four first-class
+concepts (each its own module):
+
+  Agent       (``agent.py``)     — params + ModelConfig + tokenizer with
+                                   prefill / decode / export_kv methods.
+                                   An Agent can play sender or receiver.
+  Transport   (``transport.py``) — how KV crosses the wire. ``InMemoryTransport``
+                                   hands over device buffers zero-copy;
+                                   ``SerializedTransport`` materializes the
+                                   gathered payload (configurable wire dtype:
+                                   fp16 / bf16 / int8) and self-accounts
+                                   bytes *from the payload*.
+  CommMethod  (``methods.py``)   — one protocol class per compared method
+                                   (baseline, skyline, kvcomm + selector
+                                   ablations, nld, cipher, ac_*), looked up
+                                   in the ``METHODS`` registry.
+  CommSession (``session.py``)   — a sender/receiver pairing over a
+                                   transport: calibration caching, frozen
+                                   selections, multi-sender composition via
+                                   ``attach_sender`` mailboxes, batched and
+                                   streaming generation.
+
+``repro.serving.engine.CommEngine`` remains as a thin compatibility facade
+over this stack; new code should use ``CommSession`` directly::
+
+    from repro.comm import Agent, CommSession, InMemoryTransport
+    session = CommSession(Agent("s", cfg, sender_params, tok),
+                          Agent("r", cfg, receiver_params, tok))
+    result = session.run("kvcomm", batch, kvcfg=KVCommConfig(ratio=0.5),
+                         scores=session.calibrate(ctx, qry))
+"""
+from repro.comm.agent import Agent
+from repro.comm.methods import (METHODS, CommMethod, CommRequest,
+                                MethodResult, get_method, register)
+from repro.comm.session import CommSession, SenderHandle
+from repro.comm.transport import (InMemoryTransport, SerializedTransport,
+                                  TransferRecord, Transport)
+
+__all__ = [
+    "Agent", "CommMethod", "CommRequest", "CommSession", "InMemoryTransport",
+    "METHODS", "MethodResult", "SenderHandle", "SerializedTransport",
+    "TransferRecord", "Transport", "get_method", "register",
+]

@@ -1,0 +1,187 @@
+"""CommSession: a sender/receiver pairing over a transport.
+
+The session is the stateful piece of the stack: it owns
+
+  * calibration state — Eq. (1) scores and frozen layer selections, cached
+    per (task key, KVCommConfig) so a selection calibrated once is reused
+    across every batch of that task (the paper's "one sample suffices", §H);
+  * the transport — every KV transfer is byte-accounted in one log;
+  * multi-sender composition (§J) — extra senders attach via
+    ``attach_sender`` and deposit SharedKV views into a mailbox that
+    ``combined()`` merges with ``combine_senders``;
+  * batched and streaming generation on the receiver.
+
+``session.run(method, batch, ...)`` dispatches through the ``METHODS``
+registry — the replacement for the old 200-line ``CommEngine.run`` if-chain.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.comm.agent import Agent
+from repro.comm.methods import CommRequest, MethodResult, get_method
+from repro.comm.transport import InMemoryTransport, Transport
+from repro.core.channel import combine_senders
+from repro.core.types import KVCommConfig, SharedKV
+
+
+@dataclass
+class SenderHandle:
+    """A registered extra sender. ``send`` prefills its context, pushes the
+    selected KV through the session transport, and deposits the receiver-side
+    view in the session mailbox (mailbox-style multi-sender composition)."""
+    session: "CommSession"
+    agent: Agent
+    name: str
+
+    def send(self, context: np.ndarray, kvcfg: KVCommConfig,
+             select: Optional[jnp.ndarray] = None,
+             scores: Optional[jnp.ndarray] = None) -> SharedKV:
+        sess = self.session
+        if select is None:
+            select = sess.selection(kvcfg, scores=scores)
+        kv, states, _ = self.agent.export_kv(context)
+        state_select = sess._state_selection(kvcfg, states)
+        shared = sess.transport.send(sess.cfg, kvcfg, kv, select,
+                                     states, state_select)
+        sess.mailbox.append((self.name, shared))
+        return shared
+
+
+class CommSession:
+    """Holds calibration state, frozen selections, the transport log, and
+    the (possibly >1) senders talking to one receiver."""
+
+    def __init__(self, sender: Agent, receiver: Agent,
+                 transport: Optional[Transport] = None):
+        assert sender.cfg.attn_layer_count == receiver.cfg.attn_layer_count, \
+            "sender/receiver must agree on attention layer count"
+        self.sender = sender
+        self.receiver = receiver
+        self.transport = transport if transport is not None \
+            else InMemoryTransport()
+        self.cfg = receiver.cfg
+        self._score_cache: Dict[Optional[str], jnp.ndarray] = {}
+        self._sel_cache: Dict[Tuple[Optional[str], KVCommConfig],
+                              jnp.ndarray] = {}
+        self.mailbox: List[Tuple[str, SharedKV]] = []
+        self._n_handles = 0
+
+    # ---- calibration + frozen selections ---------------------------------
+    def calibrate(self, context: np.ndarray, query: np.ndarray,
+                  key: Optional[str] = None) -> jnp.ndarray:
+        """Eq. (1) scores from one calibration sample; cached under ``key``
+        (a task identifier) so repeated batches skip the extra prefills."""
+        if key is not None and key in self._score_cache:
+            return self._score_cache[key]
+        kv, states, _ = self.sender.export_kv(context)
+        scores = self.receiver.calibrate(query, kv, states)
+        if key is not None:
+            self._score_cache[key] = scores
+        return scores
+
+    def selection(self, kvcfg: KVCommConfig,
+                  scores: Optional[jnp.ndarray] = None,
+                  key: Optional[str] = None) -> jnp.ndarray:
+        """The frozen layer subset S for (task key, kvcfg) — computed once,
+        then reused for every batch (replaces CommEngine._sel_cache).
+        Explicitly passed ``scores`` always recompute (and refresh the
+        cache); the frozen selection serves only score-less calls."""
+        cache_key = (key, kvcfg)
+        if scores is None and key is not None:
+            if cache_key in self._sel_cache:
+                return self._sel_cache[cache_key]
+            scores = self._score_cache.get(key)
+        select = core.make_selection(self.cfg, kvcfg, scores)
+        if key is not None:
+            self._sel_cache[cache_key] = select
+        return select
+
+    def _state_selection(self, kvcfg: KVCommConfig, states):
+        """SSM layers have no attention mass — share by depth prior."""
+        if states is None:
+            return None
+        import dataclasses
+        n_ssm = jax.tree.leaves(states)[0].shape[0]
+        return core.select_layers(
+            None, n_ssm, dataclasses.replace(kvcfg, selector="prior_only"))
+
+    # ---- one communication round -----------------------------------------
+    def share(self, context: np.ndarray, kvcfg: KVCommConfig,
+              scores: Optional[jnp.ndarray] = None,
+              key: Optional[str] = None
+              ) -> Tuple[SharedKV, jnp.ndarray]:
+        """Primary-sender round: prefill the context, select layers, push
+        through the transport. Returns (receiver-side SharedKV, select)."""
+        select = self.selection(kvcfg, scores=scores, key=key)
+        kv, states, _ = self.sender.export_kv(context)
+        state_select = self._state_selection(kvcfg, states)
+        shared = self.transport.send(self.cfg, kvcfg, kv, select,
+                                     states, state_select)
+        return shared, select
+
+    # ---- multi-sender (§J) ------------------------------------------------
+    def attach_sender(self, agent: Agent,
+                      name: Optional[str] = None) -> SenderHandle:
+        """Register an additional sender; returns its mailbox handle."""
+        handle = SenderHandle(self, agent,
+                              name or f"{agent.name}#{self._n_handles}")
+        self._n_handles += 1
+        return handle
+
+    def combined(self, clear: bool = False) -> SharedKV:
+        """Merge every mailbox deposit along the context axis
+        (``combine_senders``: one joint selection covers all prefixes)."""
+        assert self.mailbox, "no sender has deposited a SharedKV yet"
+        merged = combine_senders([s for _, s in self.mailbox])
+        if clear:
+            self.mailbox.clear()
+        return merged
+
+    # ---- dispatch ---------------------------------------------------------
+    def run(self, method: str, batch: Dict[str, np.ndarray],
+            kvcfg: Optional[KVCommConfig] = None,
+            scores: Optional[jnp.ndarray] = None,
+            ac_layer: Optional[int] = None,
+            nld_tokens: int = 16,
+            max_new: int = 1,
+            calib_key: Optional[str] = None) -> MethodResult:
+        """Run one registered method over a batch. Thin registry lookup —
+        the signature mirrors the legacy ``CommEngine.run``."""
+        req = CommRequest(kvcfg=kvcfg, scores=scores, ac_layer=ac_layer,
+                          nld_tokens=nld_tokens, max_new=max_new,
+                          calib_key=calib_key)
+        t0 = time.perf_counter()
+        result = get_method(method).run(self, batch, req)
+        result.latency_s = time.perf_counter() - t0
+        return result
+
+    # ---- generation -------------------------------------------------------
+    def generate(self, query: np.ndarray, shared: Optional[SharedKV] = None,
+                 max_new: int = 32) -> np.ndarray:
+        """Batched greedy generation on the receiver. (B, max_new) tokens."""
+        toks, _ = self.receiver.generate(query, shared, max_new=max_new)
+        return np.asarray(toks)
+
+    def stream(self, query: np.ndarray, shared: Optional[SharedKV] = None,
+               max_new: int = 32) -> Iterator[np.ndarray]:
+        """Streaming greedy generation: yields one (B,) token per step (the
+        serving path — first token after prefill, then step-wise decode)."""
+        if max_new <= 0:
+            return
+        out = self.receiver.prefill(query, shared, max_new=max_new)
+        cache = out.cache
+        tok = jnp.argmax(out.logits[:, -1, :], axis=-1)[:, None]
+        yield np.asarray(tok[:, 0])
+        for _ in range(max_new - 1):
+            o = self.receiver.decode(tok, cache, shared)
+            cache = o.cache
+            tok = jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+            yield np.asarray(tok[:, 0])

@@ -1,0 +1,212 @@
+"""Transports: how KV moves from sender to receiver, with exact byte
+accounting.
+
+A ``Transport`` owns the wire.  ``send`` takes the sender's full per-layer KV
+stack plus the selection mask and returns the *receiver-side* ``SharedKV``
+view, appending a ``TransferRecord`` to its log.  Byte counting lives here —
+NOT in ``repro.core.protocol`` — because the transport runs on the host where
+the selected-layer count is static (``int(jnp.sum(select))`` inside a traced
+function would force a trace break).
+
+Two implementations:
+
+  InMemoryTransport   — zero-copy hand-over of device buffers (the two
+                        agents co-located in one process).  Bytes are the
+                        analytic payload size of the selected layers.
+  SerializedTransport — actually materializes the wire payload: gathers the
+                        selected layers (``gather_selected``), casts to the
+                        configured wire dtype (fp16 / bf16 / int8 with
+                        per-layer symmetric scales), measures ``nbytes`` from
+                        the buffers themselves, and scatters back into a
+                        dense receiver-side stack.  Measured bytes agree with
+                        ``repro.core.channel.kv_wire_bytes`` analytics by
+                        construction (asserted in tests).
+
+Both subsume the legacy ``repro.core.Channel`` (kept as a deprecated alias
+surface for old callers); records are the same ``TransferRecord`` type so
+logs interoperate.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.channel import TransferRecord
+from repro.core.protocol import build_shared, gather_selected
+from repro.core.types import KVCommConfig, SharedKV
+
+_WIRE_DTYPES = {
+    "float16": jnp.float16,
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "int8": jnp.int8,
+}
+
+
+def selected_count(select) -> int:
+    """Host-side static count of selected layers (0 for a None mask)."""
+    if select is None:
+        return 0
+    return int(np.asarray(select).sum())
+
+
+def payload_bytes(kv, select, states=None, state_select=None,
+                  itemsize: Optional[int] = None) -> int:
+    """Analytic wire bytes of the selected subset of a KV stack (+ states).
+
+    ``itemsize`` overrides the KV dtype's itemsize (e.g. 2 for an fp16 wire
+    regardless of the compute dtype).
+    """
+    n = 0
+    if kv is not None:
+        m = selected_count(select)
+        _, B, Sc, Hkv, Dh = kv["k"].shape
+        isz = itemsize if itemsize is not None else kv["k"].dtype.itemsize
+        n += 2 * m * B * Sc * Hkv * Dh * isz
+    if states is not None and state_select is not None:
+        m = selected_count(state_select)
+        n_layers = jax.tree.leaves(states)[0].shape[0]
+        total = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(states))
+        n += int(total * m / max(n_layers, 1))
+    return n
+
+
+class Transport(abc.ABC):
+    """A byte-accounted link M_s -> M_r. Subclasses define what physically
+    crosses and how it is counted; the log format is shared."""
+
+    def __init__(self) -> None:
+        self.log: List[TransferRecord] = []
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.n_bytes for r in self.log)
+
+    @property
+    def last(self) -> TransferRecord:
+        return self.log[-1]
+
+    @abc.abstractmethod
+    def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+             states=None, state_select=None) -> SharedKV:
+        """Move the selected KV (and states) across; return the receiver-side
+        view and record a TransferRecord."""
+
+    def send_text(self, token_count: int, bytes_per_token: int = 2) -> int:
+        """Account an NLD/CIPHER-style natural-language transfer."""
+        n = token_count * bytes_per_token
+        self.log.append(TransferRecord("text", n, 0, token_count))
+        return n
+
+    def send_hidden(self, batch: int, d_model: int, itemsize: int = 2) -> int:
+        """Account an activation-communication transfer (one d-vector per
+        sample, Ramesh & Li 2025)."""
+        n = batch * d_model * itemsize
+        self.log.append(TransferRecord("hidden", n, 1, 1))
+        return n
+
+    def _record_kv(self, n_bytes: int, select, prefix_len: int,
+                   wire_dtype: str) -> None:
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=n_bytes, layers=selected_count(select),
+            context_len=prefix_len, wire_dtype=wire_dtype))
+
+
+class InMemoryTransport(Transport):
+    """Zero-copy hand-over: the receiver reads the sender's device buffers.
+
+    Nothing is materialized, so bytes are the analytic payload size of the
+    selected layers at the KV's own dtype (identical to what a lossless wire
+    at that dtype would move)."""
+
+    def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+             states=None, state_select=None) -> SharedKV:
+        shared = build_shared(kvcfg, kv, select, states, state_select)
+        n = payload_bytes(kv, select, states, state_select)
+        self._record_kv(n, select, shared.prefix_len, wire_dtype="model")
+        return shared
+
+
+class SerializedTransport(Transport):
+    """Materializes the actual wire payload and counts its bytes.
+
+    The selected layers' KV is gathered along the layer axis, cast to
+    ``wire_dtype``, counted via ``nbytes``, then scattered back into a dense
+    (L, B, Sc, Hkv, Dh) receiver-side stack at the compute dtype (non-selected
+    layers are zeros — they are masked out by ``select`` on the receiver, so
+    the round-trip is exact modulo the wire cast).
+
+    ``wire_dtype``: "float16" (default) | "bfloat16" | "float32" | "int8".
+    int8 uses per-layer symmetric quantization; the fp32 scales are counted
+    as part of the payload.
+    """
+
+    def __init__(self, wire_dtype: str = "float16") -> None:
+        super().__init__()
+        if wire_dtype not in _WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                             f"one of {sorted(_WIRE_DTYPES)}")
+        self.wire_dtype = wire_dtype
+
+    # -- wire codec --------------------------------------------------------
+    def _encode(self, x: jnp.ndarray):
+        """(M, B, Sc, Hkv, Dh) -> (wire arrays..., n_bytes)."""
+        if self.wire_dtype == "int8":
+            # symmetric per-layer scales (leading axis), shipped alongside
+            # the payload; works for KV stacks and SSM state leaves alike
+            absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
+                             keepdims=True)
+            scale = jnp.maximum(absmax, 1e-8) / 127.0
+            q = np.asarray(jnp.clip(jnp.round(x / scale), -127, 127)
+                           .astype(jnp.int8))
+            s = np.asarray(scale, dtype=np.float32)
+            return (q, s), q.nbytes + s.nbytes
+        wire = np.asarray(x.astype(_WIRE_DTYPES[self.wire_dtype]))
+        return (wire,), wire.nbytes
+
+    def _decode(self, wire, dtype) -> jnp.ndarray:
+        if self.wire_dtype == "int8":
+            q, s = wire
+            return (jnp.asarray(q).astype(jnp.float32) * jnp.asarray(s)) \
+                .astype(dtype)
+        return jnp.asarray(wire[0]).astype(dtype)
+
+    # -- transport ---------------------------------------------------------
+    def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+             states=None, state_select=None) -> SharedKV:
+        n_bytes = 0
+        rx_kv = None
+        if kv is not None:
+            idx = np.nonzero(np.asarray(select))[0]
+            payload = gather_selected(kv, jnp.asarray(select))
+            rx_kv = {}
+            for part in ("k", "v"):
+                wire, n = self._encode(payload[part])
+                n_bytes += n
+                dense = jnp.zeros_like(kv[part])
+                rx_kv[part] = dense.at[idx].set(
+                    self._decode(wire, kv[part].dtype))
+        rx_states = states
+        if states is not None and state_select is not None:
+            sel = np.nonzero(np.asarray(state_select))[0]
+            counted = [0]
+
+            def roundtrip(x):
+                wire, n = self._encode(jnp.asarray(x)[sel])
+                counted[0] += n
+                dense = jnp.zeros_like(x)
+                return dense.at[sel].set(self._decode(wire, x.dtype))
+
+            rx_states = jax.tree.map(roundtrip, states)
+            n_bytes += counted[0]
+        shared = build_shared(kvcfg, rx_kv, select, rx_states, state_select)
+        self._record_kv(n_bytes, select, shared.prefix_len,
+                        wire_dtype=self.wire_dtype)
+        return shared

@@ -20,15 +20,20 @@ from repro.core.types import KVCommConfig, SharedKV
 
 @dataclass
 class TransferRecord:
-    kind: str           # "kv" | "state" | "text"
+    kind: str           # "kv" | "state" | "text" | "hidden"
     n_bytes: int
     layers: int
     context_len: int
+    wire_dtype: str = "model"   # payload dtype ("model" = compute dtype)
 
 
 @dataclass
 class Channel:
-    """A byte-accounted link M_s -> M_r."""
+    """A byte-accounted link M_s -> M_r.
+
+    Legacy surface: new code should use ``repro.comm.transport`` (Transport /
+    InMemoryTransport / SerializedTransport), which subsumes this class and
+    shares the same ``TransferRecord`` log format."""
     log: List[TransferRecord] = field(default_factory=list)
 
     @property

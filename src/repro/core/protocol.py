@@ -104,32 +104,33 @@ def make_selection(cfg: ModelConfig, kvcfg: KVCommConfig,
 # ---------------------------------------------------------------------------
 # transmission
 # ---------------------------------------------------------------------------
-def transmit(cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
-             states=None, state_select=None) -> Tuple[SharedKV, int]:
-    """Build the receiver-side SharedKV and count exact wire bytes.
+def build_shared(kvcfg: KVCommConfig, kv, select,
+                 states=None, state_select=None) -> SharedKV:
+    """Assemble the receiver-side ``SharedKV`` view (pure, jit-friendly —
+    no byte accounting; that is the transport's job, see
+    ``repro.comm.transport``).
 
-    Only selected layers' KV crosses the wire:
-      bytes = M * B * Sc * Hkv * Dh * 2 (K and V) * itemsize.
-    (The returned SharedKV carries the full stack + mask so the uniform-scan
-    receiver can consume it; a real wire would send the gathered subset —
-    ``gather_selected`` below materializes exactly that.)
+    The view carries the full stack + mask so the uniform-scan receiver can
+    consume it; a real wire sends only the gathered subset —
+    ``gather_selected`` below materializes exactly that payload.
     """
-    n_bytes = 0
-    if kv is not None:
-        m = int(jnp.sum(select))
-        _, B, Sc, Hkv, Dh = kv["k"].shape
-        n_bytes += 2 * m * B * Sc * Hkv * Dh * kv["k"].dtype.itemsize
-    if states is not None and state_select is not None:
-        # states are stacked (L_ssm, ...): wire bytes = (m / L_ssm) * total
-        m = int(jnp.sum(state_select))
-        n_layers = jax.tree.leaves(states)[0].shape[0]
-        total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(states))
-        n_bytes += int(total * m / max(n_layers, 1))
-    shared = SharedKV(
+    return SharedKV(
         kv=kv, select=select, states=states, state_select=state_select,
         prefix_len=0 if kv is None else kv["k"].shape[2],
         pos_mode=kvcfg.pos_mode)
-    return shared, n_bytes
+
+
+def transmit(cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+             states=None, state_select=None) -> Tuple[SharedKV, int]:
+    """Deprecated shim: ``build_shared`` + analytic byte count in one call.
+
+    Byte accounting lives in ``repro.comm.transport`` (host-side, where the
+    selected-layer count is static); this wrapper remains for legacy callers
+    and forces ``select`` to a concrete value — do not call under ``jit``.
+    """
+    from repro.comm.transport import payload_bytes
+    return (build_shared(kvcfg, kv, select, states, state_select),
+            payload_bytes(kv, select, states, state_select))
 
 
 def gather_selected(kv, select) -> Dict[str, jnp.ndarray]:

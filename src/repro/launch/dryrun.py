@@ -28,7 +28,7 @@ from repro.configs.registry import ASSIGNED_ARCHS, get_config
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import make_kvcomm_prefill_fn, make_step_fn
-from repro.utils.hlo import (collective_bytes,
+from repro.utils.hlo import (collective_bytes, cost_analysis_dict,
                              loop_aware_collective_bytes,
                              op_census)
 
@@ -131,7 +131,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             t1 = time.time()
             compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 1)
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec["flops"] = float(ca.get("flops", 0.0))
         rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
         ma = compiled.memory_analysis()

@@ -1,0 +1,110 @@
+"""The trained sender/receiver pair: config, tokenizer, tasks, checkpoints.
+
+Single home for the communication pair's definition — the tiny
+Llama-3.2-family stand-in trained from scratch on the synthetic task suite —
+so the serving launcher, the examples, and the benchmark harness all load
+the same pair without ``sys.path`` games.  Checkpoints are produced by
+``examples/train_comm_pair.py`` (which imports these definitions) and land
+in ``experiments/ckpt/{base,sender,receiver}.npz``; when absent,
+``load_pair`` quick-trains a single model for both roles so every entry
+point still runs end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Any, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.data.tokenizer import SymbolTokenizer
+from repro.training import checkpoint
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import train
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+CKPT_DIR = os.path.join(_REPO_ROOT, "experiments", "ckpt")
+
+
+def pair_tokenizer() -> SymbolTokenizer:
+    return SymbolTokenizer(num_entities=32, num_attributes=16)
+
+
+def pair_config() -> ModelConfig:
+    """Tiny Llama-3.2-family stand-in: 8 layers so layer selection has room
+    to matter, float32 for CPU numerics."""
+    tok = pair_tokenizer()
+    return dataclasses.replace(
+        get_config("llama3.2-3b-pair"),
+        num_layers=8, d_model=192, d_ff=512, num_heads=6, num_kv_heads=6,
+        head_dim=32, vocab_size=tok.vocab_size, dtype="float32",
+        remat=False, tie_embeddings=False)
+
+
+def task_suite(tok: SymbolTokenizer, seed: int = 0):
+    """The training mixture: the Countries / HotpotQA / Tipsheets analogues."""
+    return [
+        SyntheticTask(tok, TaskConfig("retrieval", num_facts=4, seed=seed)),
+        SyntheticTask(tok, TaskConfig("retrieval", num_facts=6,
+                                      seed=seed + 1)),
+        SyntheticTask(tok, TaskConfig("retrieval", num_facts=8,
+                                      seed=seed + 2)),
+        SyntheticTask(tok, TaskConfig("multihop", num_facts=6, hops=2,
+                                      seed=seed + 3)),
+        SyntheticTask(tok, TaskConfig("decision", num_options=3,
+                                      seed=seed + 4)),
+    ]
+
+
+def _quick_train(cfg, tok, steps: int = 1200):
+    from repro.data.pipeline import mixed_lm_iter
+    print(f"[pairs] no checkpoint found -> quick-training {steps} steps "
+          "(run examples/train_comm_pair.py for the full pair)",
+          file=sys.stderr)
+    it = mixed_lm_iter(task_suite(tok, seed=0), 64, seed=0)
+    opt = OptimizerConfig(lr=2e-3, total_steps=steps,
+                          warmup_steps=steps // 20)
+    state = train(cfg, opt, it, steps=steps, log_every=0)
+    # cache as the shared base checkpoint so the next entry point skips
+    # the quick-train (load_pair prefers sender/receiver fine-tunes)
+    try:
+        os.makedirs(CKPT_DIR, exist_ok=True)
+        checkpoint.save(os.path.join(CKPT_DIR, "base"), state.params,
+                        {"role": "base", "quick_train_steps": steps})
+    except OSError as e:
+        print(f"[pairs] could not cache quick-train checkpoint: {e}",
+              file=sys.stderr)
+    return state.params
+
+
+_CACHE: dict = {}
+
+
+def load_pair() -> Tuple[ModelConfig, SymbolTokenizer, Any, Any]:
+    """(cfg, tok, sender_params, receiver_params). Uses the trained
+    checkpoints when available, else quick-trains a single model for both
+    roles (the protocol is still exercised end to end)."""
+    if "pair" in _CACHE:
+        return _CACHE["pair"]
+    cfg, tok = pair_config(), pair_tokenizer()
+    from repro.models import transformer as tfm
+    template = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    template = jax.tree.map(
+        lambda s: jax.numpy.zeros(s.shape, s.dtype), template)
+    s_path = os.path.join(CKPT_DIR, "sender.npz")
+    r_path = os.path.join(CKPT_DIR, "receiver.npz")
+    b_path = os.path.join(CKPT_DIR, "base.npz")
+    if os.path.exists(s_path) and os.path.exists(r_path):
+        sender = checkpoint.restore(s_path, template)
+        receiver = checkpoint.restore(r_path, template)
+    elif os.path.exists(b_path):
+        sender = receiver = checkpoint.restore(b_path, template)
+    else:
+        sender = receiver = _quick_train(cfg, tok)
+    _CACHE["pair"] = (cfg, tok, sender, receiver)
+    return _CACHE["pair"]

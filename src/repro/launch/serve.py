@@ -1,8 +1,10 @@
 """KVComm serving launcher: batched sender->receiver communication rounds.
 
-The serving driver the paper's deployment implies: a sender agent holding
-contexts, a receiver agent answering queries, KV flowing between them through
-the byte-accounted channel with calibrated layer selection.
+The serving driver the paper's deployment implies, on the ``repro.comm``
+stack: a sender Agent holding contexts, a receiver Agent answering queries,
+KV flowing between them through a byte-accounted Transport with calibrated,
+per-task-frozen layer selection. ``--transport serialized`` materializes the
+actual wire payload (fp16/bf16/int8 cast) instead of the zero-copy hand-over.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 32 --ratio 0.5
 """
@@ -11,12 +13,13 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
+from repro.comm import (Agent, CommSession, InMemoryTransport,
+                        SerializedTransport)
 from repro.core.types import KVCommConfig
 from repro.data.synthetic import SyntheticTask, TaskConfig
-from repro.serving.engine import CommEngine
+from repro.launch.pairs import load_pair
 
 
 def main() -> None:
@@ -27,34 +30,44 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=0.7)
     ap.add_argument("--task", default="retrieval",
                     choices=["retrieval", "multihop", "decision"])
+    ap.add_argument("--method", default="kvcomm")
+    ap.add_argument("--transport", default="inmemory",
+                    choices=["inmemory", "serialized"])
+    ap.add_argument("--wire-dtype", default="float16",
+                    choices=["float16", "bfloat16", "float32", "int8"])
     args = ap.parse_args()
 
-    import sys, os
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
-                                    "..", "..", ".."))
-    from benchmarks.common import load_pair
     cfg, tok, sender, receiver = load_pair()
-    eng = CommEngine(cfg, sender, receiver, tok)
+    transport = (SerializedTransport(args.wire_dtype)
+                 if args.transport == "serialized" else InMemoryTransport())
+    session = CommSession(Agent("sender", cfg, sender, tok),
+                          Agent("receiver", cfg, receiver, tok),
+                          transport)
     task = SyntheticTask(tok, TaskConfig(args.task, num_facts=6, seed=42))
 
-    # one-sample calibration (paper §H), then frozen selection
+    # one-sample calibration (paper §H), then the selection is frozen
+    # under the task key for every subsequent batch
     calib = task.batch(1)
-    scores = eng.calibrate(calib["context"], calib["query"])
+    scores = session.calibrate(calib["context"], calib["query"],
+                               key=args.task)
     kvcfg = KVCommConfig(ratio=args.ratio, alpha=args.alpha)
     print(f"calibrated scores: {np.round(np.asarray(scores), 3)}")
 
     n_correct, n_total, t0 = 0, 0, time.time()
-    for _ in range(args.requests // args.batch):
+    for _ in range(max(args.requests // args.batch, 1)):
         batch = task.batch(args.batch)
-        r = eng.run("kvcomm", batch, kvcfg=kvcfg, scores=scores)
+        r = session.run(args.method, batch, kvcfg=kvcfg,
+                        calib_key=args.task)
         n_correct += int(r.accuracy * args.batch)
         n_total += args.batch
     dt = time.time() - t0
     print(f"served {n_total} requests in {dt:.1f}s "
-          f"({n_total / dt:.1f} req/s CPU)")
+          f"({n_total / dt:.1f} req/s CPU; "
+          f"last batch {r.latency_s * 1e3:.0f} ms)")
     print(f"accuracy {n_correct / n_total:.3f} | "
-          f"channel moved {eng.channel.total_bytes / 1e6:.2f} MB over "
-          f"{len(eng.channel.log)} transfers")
+          f"transport[{args.transport}] moved "
+          f"{session.transport.total_bytes / 1e6:.2f} MB over "
+          f"{len(session.transport.log)} transfers")
 
 
 if __name__ == "__main__":

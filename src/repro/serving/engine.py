@@ -1,210 +1,84 @@
-"""CommEngine: serve a sender/receiver model pair under every communication
-protocol the paper compares (§4.1 "Compared Methods").
+"""CommEngine: legacy facade over the ``repro.comm`` stack.
 
-Methods:
-  baseline   — receiver answers from the query alone.
-  skyline    — receiver consumes [BOS context query] (upper bound).
-  kvcomm     — the paper: sender prefills context once, selected layers' KV
-               transmitted, receiver attends over them (ratio, selector,
-               alpha, positional mode all configurable).
-  random / contiguous / prior_only — selection ablations (Table 2, Fig 4).
-  nld        — sender greedy-decodes a message; receiver reads it as text.
-  cipher     — like nld but transmits expected embeddings (soft tokens).
-  ac_replace / ac_mean / ac_sum — last-token hidden-state transfer at a
-               chosen layer (Ramesh & Li 2025).
+Historically this module WAS the communication framework — one 200-line
+``run(method: str, ...)`` if-chain.  The framework now lives in
+``repro.comm`` (Agent / Transport / CommMethod / CommSession); this class
+keeps the old constructor and ``run`` signature so existing benchmarks and
+tests pass unchanged, delegating every call to a ``CommSession`` whose
+method dispatch is the ``METHODS`` registry.
 
-Every call returns predictions plus exact wire bytes and analytic FLOPs so
-the efficiency figures (Fig. 8) fall out of the same harness as accuracy.
+New code should build a ``CommSession`` directly::
+
+    from repro.comm import Agent, CommSession
+    session = CommSession(Agent("s", cfg, sender_params, tok),
+                          Agent("r", cfg, receiver_params, tok))
+
+Methods (paper §4.1 "Compared Methods") and their accounting semantics are
+documented in ``repro.comm.methods``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core
+from repro.comm import Agent, CommSession, MethodResult, Transport
+from repro.comm.methods import _override_selector  # legacy re-export
 from repro.configs.base import ModelConfig
-from repro.core.types import KVCommConfig, SharedKV
+from repro.core.types import KVCommConfig
 from repro.data.tokenizer import SymbolTokenizer
-from repro.models import transformer as tfm
-from repro.serving import costs
 
-
-@dataclass
-class MethodResult:
-    preds: np.ndarray
-    accuracy: float
-    wire_bytes: int
-    flops: float
-    extras: Dict[str, Any] = field(default_factory=dict)
-
-
-def _bos(tok, arr):
-    b = np.full((arr.shape[0], 1), tok.BOS, np.int32)
-    return np.concatenate([b, arr], axis=1)
+__all__ = ["CommEngine", "MethodResult", "_override_selector"]
 
 
 class CommEngine:
+    """Compatibility facade: (cfg, sender_params, receiver_params, tok) in,
+    ``MethodResult`` out — implemented as a thin ``CommSession`` wrapper."""
+
     def __init__(self, cfg: ModelConfig, sender_params, receiver_params,
-                 tok: SymbolTokenizer):
+                 tok: SymbolTokenizer,
+                 transport: Optional[Transport] = None):
         self.cfg = cfg
-        self.sender = sender_params
-        self.receiver = receiver_params
         self.tok = tok
-        self.channel = core.Channel()
-        self._sel_cache: Dict[str, jnp.ndarray] = {}
+        self.session = CommSession(
+            Agent("sender", cfg, sender_params, tok),
+            Agent("receiver", cfg, receiver_params, tok),
+            transport)
 
-    # ---- shared plumbing -------------------------------------------------
-    def _predict_from_logits(self, logits) -> np.ndarray:
-        return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+    # legacy attribute surface ---------------------------------------------
+    @property
+    def sender(self):
+        return self.session.sender.params
 
-    def _result(self, preds, answers, wire_bytes, flops, **extras):
-        acc = float(np.mean(preds == np.asarray(answers)))
-        return MethodResult(preds=preds, accuracy=acc,
-                            wire_bytes=wire_bytes, flops=flops,
-                            extras=extras)
+    @property
+    def receiver(self):
+        return self.session.receiver.params
 
+    @property
+    def channel(self) -> Transport:
+        """The byte-accounted link (``.log`` / ``.total_bytes``)."""
+        return self.session.transport
+
+    # legacy methods --------------------------------------------------------
     def sender_kv(self, context: np.ndarray):
         """Sender prefill over [BOS context]; returns (kv, states, Sc)."""
-        ctx = _bos(self.tok, context)
-        kv, states = core.sender_prefill(self.sender, self.cfg,
-                                         jnp.asarray(ctx))
-        return kv, states, ctx.shape[1]
+        return self.session.sender.export_kv(context)
 
-    # ---- calibration (paper §H: one sample suffices) ----------------------
     def calibrate(self, context: np.ndarray, query: np.ndarray
                   ) -> jnp.ndarray:
-        kv, states, _ = self.sender_kv(context)
-        return core.calibrate(self.receiver, self.cfg, jnp.asarray(query),
-                              kv, states)
+        return self.session.calibrate(context, query)
 
     def selection_for(self, kvcfg: KVCommConfig,
                       scores: Optional[jnp.ndarray]) -> jnp.ndarray:
-        return core.make_selection(self.cfg, kvcfg, scores)
+        return self.session.selection(kvcfg, scores=scores)
 
-    # ---- methods ----------------------------------------------------------
     def run(self, method: str, batch: Dict[str, np.ndarray],
             kvcfg: Optional[KVCommConfig] = None,
             scores: Optional[jnp.ndarray] = None,
             ac_layer: Optional[int] = None,
             nld_tokens: int = 16,
             max_new: int = 1) -> MethodResult:
-        ctx, qry, ans = batch["context"], batch["query"], batch["answer"]
-        B, Sc = ctx.shape
-        Sq = qry.shape[1]
-        cfg = self.cfg
-
-        if method == "baseline":
-            inp = _bos(self.tok, qry)
-            out = core.receiver_prefill(self.receiver, cfg,
-                                        jnp.asarray(inp), None, max_new=1)
-            return self._result(self._predict_from_logits(out.logits), ans,
-                                0, costs.flops_baseline(cfg, Sq, max_new))
-
-        if method == "skyline":
-            inp = np.concatenate([_bos(self.tok, ctx), qry], axis=1)
-            out = core.receiver_prefill(self.receiver, cfg,
-                                        jnp.asarray(inp), None, max_new=1)
-            return self._result(self._predict_from_logits(out.logits), ans,
-                                0, costs.flops_skyline(cfg, Sc + 1, Sq,
-                                                       max_new))
-
-        if method in ("kvcomm", "random", "contiguous", "prior_only",
-                      "full_kv"):
-            assert kvcfg is not None
-            if method != "kvcomm":
-                kvcfg = _override_selector(kvcfg, method)
-            kv, states, Sc1 = self.sender_kv(ctx)
-            select = self.selection_for(kvcfg, scores)
-            state_select = None
-            if states is not None:
-                n_ssm = jax.tree.leaves(states)[0].shape[0]
-                state_select = core.select_layers(
-                    None, n_ssm,
-                    _override_selector(kvcfg, "prior_only"))
-            shared = self.channel.send_kv(cfg, kvcfg, kv, select,
-                                          states, state_select)
-            out = core.receiver_prefill(self.receiver, cfg,
-                                        jnp.asarray(qry), shared, max_new=1)
-            M = int(jnp.sum(select))
-            return self._result(
-                self._predict_from_logits(out.logits), ans,
-                self.channel.log[-1].n_bytes,
-                costs.flops_kvcomm(cfg, Sc1, Sq, max_new, M),
-                select=np.asarray(select), M=M)
-
-        if method in ("nld", "cipher"):
-            msg_tok, msg_emb = self._sender_message(ctx, nld_tokens)
-            if method == "nld":
-                inp = np.concatenate(
-                    [_bos(self.tok, np.asarray(msg_tok)), qry], axis=1)
-                out = core.receiver_prefill(self.receiver, cfg,
-                                            jnp.asarray(inp), None,
-                                            max_new=1)
-                wire = self.channel.send_text(nld_tokens * B)
-            else:
-                # CIPHER: receiver consumes expected embeddings (soft tokens)
-                inp = _bos(self.tok,
-                           np.concatenate([np.zeros_like(msg_tok), qry], 1))
-                out = tfm.apply_model(
-                    self.receiver, cfg, jnp.asarray(inp), mode="cached",
-                    cache=tfm.init_cache(cfg, B, inp.shape[1] + 1),
-                    extra={"soft_embeds": msg_emb, "soft_start": 1})
-                wire = self.channel.send_text(
-                    nld_tokens * B, bytes_per_token=cfg.d_model * 2)
-            fl = costs.flops_nld(cfg, Sc, Sq, max_new, nld_tokens)
-            return self._result(self._predict_from_logits(out.logits), ans,
-                                wire, fl)
-
-        if method in ("ac_replace", "ac_mean", "ac_sum"):
-            mode = method.split("_")[1]
-            L = cfg.attn_layer_count
-            layer = ac_layer if ac_layer is not None else L // 2
-            s_out = tfm.apply_model(
-                self.sender, cfg, jnp.asarray(_bos(self.tok, ctx)),
-                mode="train", capture_hidden=True)
-            vec = s_out.hiddens                        # (L, B, D)
-            mask = jnp.zeros((L,), bool).at[layer].set(True)
-            inp = _bos(self.tok, qry)
-            out = tfm.apply_model(
-                self.receiver, cfg, jnp.asarray(inp), mode="train",
-                inject={"vec": vec, "mask": mask, "mode": mode})
-            wire = B * cfg.d_model * 2
-            return self._result(self._predict_from_logits(out.logits), ans,
-                                wire, costs.flops_ac(cfg, Sc, Sq, max_new))
-
-        raise ValueError(f"unknown method {method!r}")
-
-    # ---- NLD / CIPHER sender message --------------------------------------
-    def _sender_message(self, ctx: np.ndarray, n_tokens: int):
-        """Sender continues after [BOS C]: greedy tokens (NLD) and expected
-        embeddings under the output distribution (CIPHER)."""
-        cfg, B = self.cfg, ctx.shape[0]
-        inp = jnp.asarray(_bos(self.tok, ctx))
-        cache = tfm.init_cache(cfg, B, inp.shape[1] + n_tokens)
-        out = tfm.apply_model(self.sender, cfg, inp, mode="cached",
-                              cache=cache)
-        cache = out.cache
-        toks, embs = [], []
-        logits = out.logits[:, -1, :]
-        embed = self.sender["embed"].astype(jnp.float32)
-        for _ in range(n_tokens):
-            nt = jnp.argmax(logits, axis=-1)[:, None]
-            probs = jax.nn.softmax(logits, axis=-1)
-            embs.append(probs @ embed)
-            toks.append(np.asarray(nt[:, 0]))
-            o = tfm.apply_model(self.sender, cfg, nt, mode="cached",
-                                cache=cache, logits_mode="last")
-            cache, logits = o.cache, o.logits[:, -1, :]
-        return (np.stack(toks, 1),
-                jnp.stack(embs, 1))
-
-
-def _override_selector(kvcfg: KVCommConfig, selector: str) -> KVCommConfig:
-    import dataclasses
-    if selector == "full_kv":
-        return dataclasses.replace(kvcfg, selector="all", ratio=1.0)
-    return dataclasses.replace(kvcfg, selector=selector)
+        return self.session.run(method, batch, kvcfg=kvcfg, scores=scores,
+                                ac_layer=ac_layer, nld_tokens=nld_tokens,
+                                max_new=max_new)

@@ -1,0 +1,275 @@
+"""The repro.comm stack: registry coverage, transport byte accounting,
+multi-sender composition, and old->new facade parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import (METHODS, Agent, CommSession, InMemoryTransport,
+                        SerializedTransport)
+from repro.core.types import KVCommConfig, SharedKV
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import CommEngine
+
+# every method string the legacy string-dispatch engine accepted
+LEGACY_METHODS = ["baseline", "skyline", "kvcomm", "random", "contiguous",
+                  "prior_only", "full_kv", "nld", "cipher", "ac_replace",
+                  "ac_mean", "ac_sum"]
+
+
+@pytest.fixture(scope="module")
+def pair(tok):
+    import conftest  # noqa: F401
+    from repro.configs.registry import get_config
+    cfg = dataclasses.replace(
+        get_config("llama3.2-3b-pair"),
+        num_layers=4, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
+        head_dim=16, vocab_size=tok.vocab_size, dtype="float32",
+        remat=False, tie_embeddings=False)
+    sender = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    receiver = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, sender, receiver
+
+
+def _session(cfg, sender, receiver, tok, transport=None):
+    return CommSession(Agent("s", cfg, sender, tok),
+                       Agent("r", cfg, receiver, tok), transport)
+
+
+@pytest.fixture(scope="module")
+def batch(tok):
+    task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=4, seed=3))
+    return task.batch(4)
+
+
+class TestRegistry:
+    def test_covers_every_legacy_method(self):
+        missing = [m for m in LEGACY_METHODS if m not in METHODS]
+        assert not missing, f"registry lacks legacy methods: {missing}"
+
+    def test_unknown_method_raises(self, pair, batch, tok):
+        cfg, s, r = pair
+        with pytest.raises(ValueError, match="unknown method"):
+            _session(cfg, s, r, tok).run("quantum_telepathy", batch)
+
+    @pytest.mark.parametrize("method", LEGACY_METHODS)
+    def test_every_method_runs_with_result_fields(self, pair, batch, tok,
+                                                  method):
+        cfg, s, r = pair
+        sess = _session(cfg, s, r, tok)
+        res = sess.run(method, batch,
+                       kvcfg=KVCommConfig(ratio=0.5, selector="prior_only"),
+                       nld_tokens=4)
+        assert res.preds.shape == (4,)
+        assert res.flops > 0
+        assert res.latency_s > 0
+
+
+class TestSerializedTransport:
+    # three shapes x kv-head configs (the analytic formula must hold for
+    # MQA/GQA alike); fp16 wire => itemsize 2 in the analytics
+    CONFIGS = [
+        dict(B=1, Sc=6, num_kv_heads=2, head_dim=16, ratio=0.5),
+        dict(B=3, Sc=10, num_kv_heads=1, head_dim=32, ratio=0.25),
+        dict(B=2, Sc=17, num_kv_heads=4, head_dim=8, ratio=1.0),
+    ]
+
+    @pytest.mark.parametrize("spec", CONFIGS)
+    def test_measured_bytes_match_analytics_fp16(self, pair, tok, spec):
+        cfg0, sender, _ = pair
+        cfg = dataclasses.replace(cfg0, num_kv_heads=spec["num_kv_heads"],
+                                  num_heads=4, head_dim=spec["head_dim"])
+        params = tfm.init_params(cfg, jax.random.PRNGKey(2))
+        ctx = jax.random.randint(jax.random.PRNGKey(3),
+                                 (spec["B"], spec["Sc"]), 4, cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        kvcfg = KVCommConfig(ratio=spec["ratio"], selector="prior_only")
+        select = core.make_selection(cfg, kvcfg)
+        t = SerializedTransport(wire_dtype="float16")
+        t.send(cfg, kvcfg, kv, select)
+        M = int(np.asarray(select).sum())
+        expect = core.kv_wire_bytes(cfg, spec["B"], spec["Sc"], M,
+                                    itemsize=2)
+        assert t.total_bytes == expect
+        assert t.last.layers == M
+
+    def test_int8_wire_smaller_than_fp16_and_lossy_but_close(self, pair,
+                                                             tok):
+        cfg, sender, _ = pair
+        ctx = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(sender, cfg, ctx)
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        select = core.make_selection(cfg, kvcfg)
+        t16 = SerializedTransport("float16")
+        t8 = SerializedTransport("int8")
+        sh16 = t16.send(cfg, kvcfg, kv, select)
+        sh8 = t8.send(cfg, kvcfg, kv, select)
+        assert t8.total_bytes < t16.total_bytes
+        idx = np.nonzero(np.asarray(select))[0]
+        a = np.asarray(sh16.kv["k"])[idx]
+        b = np.asarray(sh8.kv["k"])[idx]
+        # int8 symmetric quant: ~1% of the dynamic range
+        assert float(np.max(np.abs(a - b))) < 0.02 * float(np.max(np.abs(a)))
+
+    def test_roundtrip_preserves_selected_unselected_zero(self, pair, tok):
+        cfg, sender, _ = pair
+        ctx = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(sender, cfg, ctx)
+        select = jnp.array([True, False, False, True])
+        t = SerializedTransport("float32")
+        shared = t.send(cfg, KVCommConfig(), kv, select)
+        np.testing.assert_array_equal(np.asarray(shared.kv["k"][0]),
+                                      np.asarray(kv["k"][0]))
+        np.testing.assert_array_equal(np.asarray(shared.kv["k"][3]),
+                                      np.asarray(kv["k"][3]))
+        assert not np.any(np.asarray(shared.kv["k"][1]))
+        assert not np.any(np.asarray(shared.kv["v"][2]))
+
+    def test_int8_handles_ssm_state_leaves(self, tok):
+        """SSM state leaves are rank 3-4, not the 5-D KV stack — the int8
+        per-layer quantizer must reduce over every non-layer axis."""
+        from repro.configs.registry import get_config
+        cfg = dataclasses.replace(get_config("rwkv6-1.6b").reduced(),
+                                  dtype="float32")
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        sess = CommSession(Agent("s", cfg, params, tok),
+                           Agent("r", cfg, params, tok),
+                           SerializedTransport("int8"))
+        rng = np.random.default_rng(0)
+        ctx = rng.integers(2, cfg.vocab_size, (2, 8)).astype(np.int32)
+        qry = rng.integers(2, cfg.vocab_size, (2, 4)).astype(np.int32)
+        shared, _ = sess.share(ctx, KVCommConfig(ratio=0.5,
+                                                 selector="prior_only"))
+        out = sess.receiver.prefill(qry, shared, max_new=0)
+        assert sess.transport.total_bytes > 0
+        assert np.isfinite(np.asarray(out.logits)).all()
+
+    def test_serialized_fp32_preds_match_inmemory(self, pair, batch, tok):
+        """A lossless wire must not change a single prediction."""
+        cfg, s, r = pair
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        a = _session(cfg, s, r, tok).run("kvcomm", batch, kvcfg=kvcfg)
+        b = _session(cfg, s, r, tok,
+                     SerializedTransport("float32")).run(
+            "kvcomm", batch, kvcfg=kvcfg)
+        np.testing.assert_array_equal(a.preds, b.preds)
+
+
+class TestMultiSender:
+    def test_two_sender_session_matches_combine_senders(self, pair, tok):
+        """Mailbox composition must be bit-exact against the §J reference
+        (same prefixes, same joint mask, same concat order)."""
+        cfg, sender, receiver = pair
+        sess = _session(cfg, sender, receiver, tok)
+        kvcfg = KVCommConfig(ratio=0.7, selector="prior_only")
+        select = sess.selection(kvcfg)
+        rng = np.random.default_rng(0)
+        c1 = rng.integers(4, cfg.vocab_size, (2, 6)).astype(np.int32)
+        c2 = rng.integers(4, cfg.vocab_size, (2, 9)).astype(np.int32)
+
+        h1 = sess.attach_sender(sess.sender, name="A")
+        h2 = sess.attach_sender(sess.sender, name="B")
+        h1.send(c1, kvcfg, select=select)
+        h2.send(c2, kvcfg, select=select)
+        combined = sess.combined()
+
+        # reference: direct protocol-level composition
+        kv1, _, p1 = sess.sender.export_kv(c1)
+        kv2, _, p2 = sess.sender.export_kv(c2)
+        ref = core.combine_senders([
+            SharedKV(kv=kv1, select=select, prefix_len=p1,
+                     pos_mode=kvcfg.pos_mode),
+            SharedKV(kv=kv2, select=select, prefix_len=p2,
+                     pos_mode=kvcfg.pos_mode)])
+        assert combined.prefix_len == ref.prefix_len == p1 + p2
+        np.testing.assert_array_equal(np.asarray(combined.kv["k"]),
+                                      np.asarray(ref.kv["k"]))
+        np.testing.assert_array_equal(np.asarray(combined.kv["v"]),
+                                      np.asarray(ref.kv["v"]))
+        np.testing.assert_array_equal(np.asarray(combined.select),
+                                      np.asarray(ref.select))
+        # and the receiver can consume it
+        qry = rng.integers(4, cfg.vocab_size, (2, 4)).astype(np.int32)
+        out = sess.receiver.prefill(qry, combined, max_new=0)
+        assert np.isfinite(np.asarray(out.logits)).all()
+
+
+class TestFacadeParity:
+    """Old CommEngine surface == new CommSession path, prediction-for-
+    prediction and byte-for-byte."""
+
+    @pytest.mark.parametrize("method", ["kvcomm", "baseline", "skyline",
+                                        "nld"])
+    def test_preds_and_bytes_identical(self, pair, batch, tok, method):
+        cfg, s, r = pair
+        eng = CommEngine(cfg, s, r, tok)
+        sess = _session(cfg, s, r, tok)
+        kw = {}
+        if method == "kvcomm":
+            scores_e = eng.calibrate(batch["context"][:1],
+                                     batch["query"][:1])
+            scores_s = sess.calibrate(batch["context"][:1],
+                                      batch["query"][:1])
+            np.testing.assert_allclose(np.asarray(scores_e),
+                                       np.asarray(scores_s))
+            kw = dict(kvcfg=KVCommConfig(ratio=0.5, alpha=0.7),
+                      scores=scores_s)
+        a = eng.run(method, batch, nld_tokens=4, **kw)
+        b = sess.run(method, batch, nld_tokens=4, **kw)
+        np.testing.assert_array_equal(a.preds, b.preds)
+        assert a.wire_bytes == b.wire_bytes
+        assert a.flops == b.flops
+
+    def test_channel_log_compatible(self, pair, batch, tok):
+        cfg, s, r = pair
+        eng = CommEngine(cfg, s, r, tok)
+        eng.run("kvcomm", batch,
+                kvcfg=KVCommConfig(ratio=0.5, selector="prior_only"))
+        assert len(eng.channel.log) == 1
+        rec = eng.channel.log[-1]
+        assert rec.kind == "kv" and rec.layers == 2
+        assert eng.channel.total_bytes == rec.n_bytes
+
+    def test_selection_cache_frozen_per_task(self, pair, batch, tok):
+        cfg, s, r = pair
+        sess = _session(cfg, s, r, tok)
+        scores = sess.calibrate(batch["context"][:1], batch["query"][:1],
+                                key="t1")
+        kvcfg = KVCommConfig(ratio=0.5, alpha=0.7)
+        s1 = sess.selection(kvcfg, scores=scores, key="t1")
+        s2 = sess.selection(kvcfg, key="t1")     # cache hit, no scores given
+        assert s1 is s2
+        r1 = sess.run("kvcomm", batch, kvcfg=kvcfg, calib_key="t1")
+        np.testing.assert_array_equal(r1.extras["select"], np.asarray(s1))
+
+    def test_explicit_scores_bypass_selection_cache(self, pair, batch, tok):
+        """Fresh scores must not be silently ignored on a cache hit."""
+        cfg, s, r = pair
+        sess = _session(cfg, s, r, tok)
+        kvcfg = KVCommConfig(ratio=0.5, alpha=1.0)
+        low_first = jnp.linspace(0.0, 1.0, cfg.attn_layer_count)
+        high_first = low_first[::-1]
+        s1 = sess.selection(kvcfg, scores=low_first, key="t")
+        s2 = sess.selection(kvcfg, scores=high_first, key="t")
+        assert not np.array_equal(np.asarray(s1), np.asarray(s2))
+        # and the score-less call now serves the refreshed selection
+        np.testing.assert_array_equal(
+            np.asarray(sess.selection(kvcfg, key="t")), np.asarray(s2))
+
+
+class TestGeneration:
+    def test_stream_matches_batched_generate(self, pair, batch, tok):
+        cfg, s, r = pair
+        sess = _session(cfg, s, r, tok)
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        shared, _ = sess.share(batch["context"], kvcfg)
+        toks = sess.generate(batch["query"], shared, max_new=4)
+        streamed = np.stack(list(sess.stream(batch["query"], shared,
+                                             max_new=4)), axis=1)
+        np.testing.assert_array_equal(toks, streamed)

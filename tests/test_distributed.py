@@ -111,7 +111,8 @@ for arch, shape in {combos!r}:
     with mesh:
         lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {{}}
+    from repro.utils.hlo import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     results[f"{{arch}}/{{shape}}"] = float(ca.get("flops", 0))
 print("JSON" + json.dumps(results))
 """

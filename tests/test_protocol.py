@@ -142,7 +142,14 @@ class TestCalibration:
 
 
 class TestPositionalModes:
-    def test_zero_unselected_differs(self, tiny_cfg, tiny_params):
+    def test_zero_unselected_noop_under_rope(self, tiny_cfg, tiny_params):
+        """KVComm-S (§M) zeroes the positional shift at NON-selected layers.
+        At those layers the prefix is masked out and only query-query
+        attention remains; RoPE scores depend on position *differences*, so
+        a uniform shift of the query block is unobservable — the two modes
+        must agree to float tolerance. (This used to assert they differ,
+        which is impossible for relative-position models; the interesting
+        ablation is shifting *selected* layers, covered by the benchmark.)"""
         cfg, params = tiny_cfg, tiny_params
         B, Sc, Sq = 1, 8, 4
         ctx = _toks(jax.random.PRNGKey(1), cfg, B, Sc)
@@ -157,7 +164,8 @@ class TestPositionalModes:
             params, cfg, qry,
             SharedKV(kv=kv, select=select, prefix_len=Sc,
                      pos_mode="zero_unselected"), max_new=0)
-        assert not np.allclose(np.asarray(a.logits), np.asarray(b.logits))
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=2e-4)
 
     def test_modes_agree_when_all_selected(self, tiny_cfg, tiny_params):
         cfg, params = tiny_cfg, tiny_params
