@@ -1,0 +1,112 @@
+"""Decode-path perf: eager op-by-op dispatch vs the jitted donated step.
+
+Starts the perf trajectory for the receiver decode loop (§Perf): at each
+selection ratio the receiver prefills the query against the packed shared
+prefix, then decodes ``STEPS`` tokens twice —
+
+  eager  : ``receiver_decode`` per token (dispatch-bound reference; also
+           what ``CommSession.stream`` did before this iteration), and
+  jitted : ``core.decode_step`` — ONE compiled call per token with the KV
+           cache donated, so steady-state decode updates buffers in place.
+
+Writes ``BENCH_decode.json`` at the repo root: prefill ms, steady-state
+tokens/s for both paths, speedup, per ratio in {0.3, 0.5, 1.0}.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import core
+from repro.core.types import KVCommConfig
+
+STEPS = int(os.environ.get("REPRO_DECODE_STEPS", "64"))
+BATCH = int(os.environ.get("REPRO_DECODE_BATCH", "8"))
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_decode.json")
+
+
+def _sync(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def bench_ratio(session, cfg, tok, ratio: float) -> dict:
+    b = common.eval_batch(tok, "countries", BATCH)
+    kvcfg = KVCommConfig(ratio=ratio, selector="prior_only")
+    shared, select = session.share(b["context"], kvcfg)
+    rx = session.receiver
+    qry = b["query"]
+
+    # --- prefill (compile once, then measure) ---
+    out = rx.prefill(qry, shared, max_new=STEPS + 2)
+    _sync(out.logits)
+    t0 = time.perf_counter()
+    out = rx.prefill(qry, shared, max_new=STEPS + 2)
+    _sync(out.logits)
+    prefill_ms = (time.perf_counter() - t0) * 1e3
+    tok0 = jnp.argmax(out.logits[:, -1, :], axis=-1)[:, None]
+
+    # --- eager decode (reference): op-by-op dispatch, fresh cache/token ---
+    cache, t = out.cache, tok0
+    for _ in range(2):   # warm the eager path (fills the partition cache)
+        o = rx.decode(t, cache, shared)
+        cache, t = o.cache, jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+    _sync(t)
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        o = rx.decode(t, cache, shared)
+        cache, t = o.cache, jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+    _sync(t)
+    eager_s = time.perf_counter() - t0
+
+    # --- jitted donated decode: one compiled call per token ---
+    out = rx.prefill(qry, shared, max_new=STEPS + 2)
+    cache, t = out.cache, tok0
+    t, _, cache = rx.decode_step(t, cache, shared)   # compile
+    _sync(t)
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        t, _, cache = rx.decode_step(t, cache, shared)
+    _sync(t)
+    jit_s = time.perf_counter() - t0
+
+    eager_tps = STEPS * BATCH / eager_s
+    jit_tps = STEPS * BATCH / jit_s
+    return {
+        "M": int(np.asarray(select).sum()),
+        "prefill_ms": round(prefill_ms, 3),
+        "eager_tokens_per_s": round(eager_tps, 1),
+        "jitted_donated_tokens_per_s": round(jit_tps, 1),
+        "speedup": round(jit_tps / eager_tps, 2),
+    }
+
+
+def run(emit=common.emit) -> dict:
+    session, cfg, tok = common.make_session()
+    out = {
+        "config": {"batch": BATCH, "steps": STEPS,
+                   "L": cfg.attn_layer_count, "d_model": cfg.d_model},
+        "ratios": {},
+    }
+    for ratio in (0.3, 0.5, 1.0):
+        r = bench_ratio(session, cfg, tok, ratio)
+        out["ratios"][str(ratio)] = r
+        emit(f"decode/ratio_{ratio}", 0.0,
+             f"eager={r['eager_tokens_per_s']}tok/s;"
+             f"jit={r['jitted_donated_tokens_per_s']}tok/s;"
+             f"x{r['speedup']}")
+    out["min_speedup"] = min(r["speedup"] for r in out["ratios"].values())
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

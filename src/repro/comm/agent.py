@@ -92,9 +92,15 @@ class Agent:
                                      max_new=max_new, extra=extra)
 
     def decode(self, token, cache, shared: Optional[SharedKV] = None):
-        """One greedy decode step; ``token`` is (B, 1)."""
+        """One greedy decode step, eager dispatch; ``token`` is (B, 1)."""
         return core.receiver_decode(self.params, self.cfg, token, cache,
                                     shared)
+
+    def decode_step(self, token, cache, shared: Optional[SharedKV] = None):
+        """One greedy decode step as a single jitted call with the cache
+        donated — the steady-state serving path. Returns
+        (next_token (B, 1), last_logits, new_cache); ``cache`` is consumed."""
+        return core.decode_step(self.params, self.cfg, token, cache, shared)
 
     def generate(self, tokens, shared: Optional[SharedKV] = None,
                  max_new: int = 32, extra=None):

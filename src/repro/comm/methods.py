@@ -152,7 +152,8 @@ class SelectiveKV(CommMethod):
             rx.predict_last(out.logits), batch["answer"], rec.n_bytes,
             costs.flops_kvcomm(cfg, shared.prefix_len, qry.shape[1],
                                req.max_new, M),
-            transfer=rec, select=np.asarray(select), M=M)
+            transfer=rec, select=np.asarray(select), M=M,
+            packed=shared.is_packed)
 
 
 # ---------------------------------------------------------------------------

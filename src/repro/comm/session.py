@@ -43,10 +43,13 @@ class SenderHandle:
 
     def send(self, context: np.ndarray, kvcfg: KVCommConfig,
              select: Optional[jnp.ndarray] = None,
-             scores: Optional[jnp.ndarray] = None) -> SharedKV:
+             scores: Optional[jnp.ndarray] = None,
+             calib_key: Optional[str] = None) -> SharedKV:
         sess = self.session
         if select is None:
-            select = sess.selection(kvcfg, scores=scores)
+            # thread the task key so extra senders reuse the task's frozen
+            # selection instead of recomputing from prior-only scores
+            select = sess.selection(kvcfg, scores=scores, key=calib_key)
         kv, states, _ = self.agent.export_kv(context)
         state_select = sess._state_selection(kvcfg, states)
         shared = sess.transport.send(sess.cfg, kvcfg, kv, select,
@@ -160,6 +163,10 @@ class CommSession:
                           calib_key=calib_key)
         t0 = time.perf_counter()
         result = get_method(method).run(self, batch, req)
+        # wall clock around async JAX dispatch measures enqueue, not
+        # compute: sync everything the method produced before stopping
+        # the timer (preds are host numpy already; extras may not be)
+        jax.block_until_ready((result.preds, result.extras))
         result.latency_s = time.perf_counter() - t0
         return result
 
@@ -173,7 +180,11 @@ class CommSession:
     def stream(self, query: np.ndarray, shared: Optional[SharedKV] = None,
                max_new: int = 32) -> Iterator[np.ndarray]:
         """Streaming greedy generation: yields one (B,) token per step (the
-        serving path — first token after prefill, then step-wise decode)."""
+        serving path — first token after prefill, then step-wise decode).
+
+        Each step is one compiled call with the cache donated
+        (``core.decode_step``): steady-state decode updates the cache in
+        place instead of re-materializing it per token."""
         if max_new <= 0:
             return
         out = self.receiver.prefill(query, shared, max_new=max_new)
@@ -181,7 +192,5 @@ class CommSession:
         tok = jnp.argmax(out.logits[:, -1, :], axis=-1)[:, None]
         yield np.asarray(tok[:, 0])
         for _ in range(max_new - 1):
-            o = self.receiver.decode(tok, cache, shared)
-            cache = o.cache
-            tok = jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+            tok, _, cache = self.receiver.decode_step(tok, cache, shared)
             yield np.asarray(tok[:, 0])

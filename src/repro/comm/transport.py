@@ -6,19 +6,28 @@ stack plus the selection mask and returns the *receiver-side* ``SharedKV``
 view, appending a ``TransferRecord`` to its log.  Byte counting lives here —
 NOT in ``repro.core.protocol`` — because the transport runs on the host where
 the selected-layer count is static (``int(jnp.sum(select))`` inside a traced
-function would force a trace break).
+function would force a trace break).  ``send`` also stamps the record's
+``latency_s`` (device-synced wall clock around the transfer) — the async
+scheduler's prerequisite.
+
+Both transports hand over the *packed* receiver view by default
+(``packed=True``): the (M, B, Sc, Hkv, Dh) selected-layer payload plus its
+static layer-index map, which the receiver consumes directly via the
+selection-specialized cache (`repro.models.transformer._init_cache_packed`)
+— no dense zero-padded scatter on either side. ``packed=False`` restores
+the legacy dense (L, ...) view for the uniform-scan path.
 
 Two implementations:
 
-  InMemoryTransport   — zero-copy hand-over of device buffers (the two
-                        agents co-located in one process).  Bytes are the
-                        analytic payload size of the selected layers.
+  InMemoryTransport   — hand-over of device buffers (the two agents
+                        co-located in one process); packed mode gathers the
+                        selected layers, dense mode is zero-copy.  Bytes are
+                        the analytic payload size of the selected layers.
   SerializedTransport — actually materializes the wire payload: gathers the
                         selected layers (``gather_selected``), casts to the
                         configured wire dtype (fp16 / bf16 / int8 with
                         per-layer symmetric scales), measures ``nbytes`` from
-                        the buffers themselves, and scatters back into a
-                        dense receiver-side stack.  Measured bytes agree with
+                        the buffers themselves.  Measured bytes agree with
                         ``repro.core.channel.kv_wire_bytes`` analytics by
                         construction (asserted in tests).
 
@@ -29,6 +38,7 @@ logs interoperate.
 from __future__ import annotations
 
 import abc
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -38,7 +48,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import TransferRecord
-from repro.core.protocol import build_shared, gather_selected
+from repro.core.protocol import (build_packed, build_shared, gather_selected,
+                                 pack_shared, selected_layer_ids)
 from repro.core.types import KVCommConfig, SharedKV
 
 _WIRE_DTYPES = {
@@ -80,10 +91,12 @@ def payload_bytes(kv, select, states=None, state_select=None,
 
 class Transport(abc.ABC):
     """A byte-accounted link M_s -> M_r. Subclasses define what physically
-    crosses and how it is counted; the log format is shared."""
+    crosses and how it is counted; the log format and per-transfer latency
+    stamping are shared."""
 
-    def __init__(self) -> None:
+    def __init__(self, packed: bool = True) -> None:
         self.log: List[TransferRecord] = []
+        self.packed = packed
 
     @property
     def total_bytes(self) -> int:
@@ -93,11 +106,22 @@ class Transport(abc.ABC):
     def last(self) -> TransferRecord:
         return self.log[-1]
 
-    @abc.abstractmethod
     def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
              states=None, state_select=None) -> SharedKV:
         """Move the selected KV (and states) across; return the receiver-side
-        view and record a TransferRecord."""
+        view and record a latency-stamped TransferRecord."""
+        t0 = time.perf_counter()
+        shared = self._send(cfg, kvcfg, kv, select, states, state_select)
+        # wall clock around async JAX dispatch measures enqueue, not
+        # compute: sync the produced view before stopping the timer
+        jax.block_until_ready(shared)
+        self.log[-1].latency_s = time.perf_counter() - t0
+        return shared
+
+    @abc.abstractmethod
+    def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+              states=None, state_select=None) -> SharedKV:
+        """Transport-specific transfer; must append a TransferRecord."""
 
     def send_text(self, token_count: int, bytes_per_token: int = 2) -> int:
         """Account an NLD/CIPHER-style natural-language transfer."""
@@ -120,15 +144,16 @@ class Transport(abc.ABC):
 
 
 class InMemoryTransport(Transport):
-    """Zero-copy hand-over: the receiver reads the sender's device buffers.
+    """In-process hand-over: the receiver reads the sender's device buffers
+    (packed mode gathers the M selected layers first; dense mode is a pure
+    zero-copy view).  Nothing crosses a wire, so bytes are the analytic
+    payload size of the selected layers at the KV's own dtype (identical to
+    what a lossless wire at that dtype would move)."""
 
-    Nothing is materialized, so bytes are the analytic payload size of the
-    selected layers at the KV's own dtype (identical to what a lossless wire
-    at that dtype would move)."""
-
-    def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
-             states=None, state_select=None) -> SharedKV:
-        shared = build_shared(kvcfg, kv, select, states, state_select)
+    def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+              states=None, state_select=None) -> SharedKV:
+        build = pack_shared if self.packed else build_shared
+        shared = build(kvcfg, kv, select, states, state_select)
         n = payload_bytes(kv, select, states, state_select)
         self._record_kv(n, select, shared.prefix_len, wire_dtype="model")
         return shared
@@ -138,18 +163,21 @@ class SerializedTransport(Transport):
     """Materializes the actual wire payload and counts its bytes.
 
     The selected layers' KV is gathered along the layer axis, cast to
-    ``wire_dtype``, counted via ``nbytes``, then scattered back into a dense
-    (L, B, Sc, Hkv, Dh) receiver-side stack at the compute dtype (non-selected
-    layers are zeros — they are masked out by ``select`` on the receiver, so
-    the round-trip is exact modulo the wire cast).
+    ``wire_dtype``, counted via ``nbytes``, and decoded back at the compute
+    dtype.  In packed mode (default) the decoded (M, ...) payload plus its
+    static layer map IS the receiver-side view; in dense mode it is
+    scattered back into a zero-padded (L, ...) stack (non-selected layers
+    are zeros — masked out by ``select`` on the receiver), so either
+    round-trip is exact modulo the wire cast.
 
     ``wire_dtype``: "float16" (default) | "bfloat16" | "float32" | "int8".
     int8 uses per-layer symmetric quantization; the fp32 scales are counted
     as part of the payload.
     """
 
-    def __init__(self, wire_dtype: str = "float16") -> None:
-        super().__init__()
+    def __init__(self, wire_dtype: str = "float16",
+                 packed: bool = True) -> None:
+        super().__init__(packed=packed)
         if wire_dtype not in _WIRE_DTYPES:
             raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                              f"one of {sorted(_WIRE_DTYPES)}")
@@ -179,20 +207,20 @@ class SerializedTransport(Transport):
         return jnp.asarray(wire[0]).astype(dtype)
 
     # -- transport ---------------------------------------------------------
-    def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
-             states=None, state_select=None) -> SharedKV:
+    def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+              states=None, state_select=None) -> SharedKV:
         n_bytes = 0
-        rx_kv = None
+        rx_payload = None
+        layers = selected_layer_ids(select)
+        prefix_len = 0
         if kv is not None:
-            idx = np.nonzero(np.asarray(select))[0]
+            prefix_len = int(kv["k"].shape[2])
             payload = gather_selected(kv, jnp.asarray(select))
-            rx_kv = {}
+            rx_payload = {}
             for part in ("k", "v"):
                 wire, n = self._encode(payload[part])
                 n_bytes += n
-                dense = jnp.zeros_like(kv[part])
-                rx_kv[part] = dense.at[idx].set(
-                    self._decode(wire, kv[part].dtype))
+                rx_payload[part] = self._decode(wire, kv[part].dtype)
         rx_states = states
         if states is not None and state_select is not None:
             sel = np.nonzero(np.asarray(state_select))[0]
@@ -206,7 +234,21 @@ class SerializedTransport(Transport):
 
             rx_states = jax.tree.map(roundtrip, states)
             n_bytes += counted[0]
-        shared = build_shared(kvcfg, rx_kv, select, rx_states, state_select)
+        if kv is None:
+            shared = build_shared(kvcfg, None, select, rx_states,
+                                  state_select)
+        elif self.packed:
+            shared = build_packed(kvcfg, rx_payload, layers, prefix_len,
+                                  select=select, states=rx_states,
+                                  state_select=state_select)
+        else:
+            idx = np.asarray(layers, np.int32)
+            rx_kv = {}
+            for part in ("k", "v"):
+                dense = jnp.zeros_like(kv[part])
+                rx_kv[part] = dense.at[idx].set(rx_payload[part])
+            shared = build_shared(kvcfg, rx_kv, select, rx_states,
+                                  state_select)
         self._record_kv(n_bytes, select, shared.prefix_len,
                         wire_dtype=self.wire_dtype)
         return shared

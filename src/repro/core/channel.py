@@ -25,6 +25,9 @@ class TransferRecord:
     layers: int
     context_len: int
     wire_dtype: str = "model"   # payload dtype ("model" = compute dtype)
+    latency_s: float = 0.0      # device-synced wall clock of the transfer
+                                # (stamped by Transport.send; 0.0 = unstamped
+                                # legacy path) — the async scheduler's input
 
 
 @dataclass
@@ -70,6 +73,22 @@ def combine_senders(shareds: List[SharedKV]) -> SharedKV:
     base = shareds[0]
     for s in shareds[1:]:
         assert s.pos_mode == base.pos_mode
+    prefix_len = sum(s.prefix_len for s in shareds)
+    if all(s.is_packed for s in shareds):
+        if len({s.layers for s in shareds}) == 1:
+            # packed stays packed: identical layer maps concatenate along
+            # the context axis without ever materializing the dense stack
+            packed = {p: jnp.concatenate([s.packed_kv[p] for s in shareds],
+                                         axis=2) for p in ("k", "v")}
+            return SharedKV(packed_kv=packed, layers=base.layers,
+                            select=base.select, states=base.states,
+                            state_select=base.state_select,
+                            prefix_len=prefix_len, pos_mode=base.pos_mode)
+        # differing per-sender maps would need per-position layer validity;
+        # fall back to the dense masked view (correct, just not packed)
+        shareds = [s.to_dense() for s in shareds]
+    elif any(s.is_packed for s in shareds):
+        shareds = [s.to_dense() if s.is_packed else s for s in shareds]
     kv = {
         "k": jnp.concatenate([s.kv["k"] for s in shareds], axis=2),
         "v": jnp.concatenate([s.kv["v"] for s in shareds], axis=2),
@@ -77,7 +96,6 @@ def combine_senders(shareds: List[SharedKV]) -> SharedKV:
     select = shareds[0].select
     for s in shareds[1:]:
         select = select | s.select
-    prefix_len = sum(s.prefix_len for s in shareds)
     return SharedKV(kv=kv, select=select, states=base.states,
                     state_select=base.state_select,
                     prefix_len=prefix_len, pos_mode=base.pos_mode)

@@ -17,10 +17,11 @@ batching and scheduling.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.selection import normalize_scores, select_layers
@@ -140,6 +141,47 @@ def gather_selected(kv, select) -> Dict[str, jnp.ndarray]:
     return {"k": kv["k"][idx], "v": kv["v"][idx]}
 
 
+def selected_layer_ids(select) -> Tuple[int, ...]:
+    """Host-side static tuple of selected attention-layer indices (the
+    packed form's layer-index map). Forces ``select`` concrete — do not
+    call under ``jit``."""
+    if select is None:
+        return ()
+    return tuple(int(i) for i in np.nonzero(np.asarray(select))[0])
+
+
+def build_packed(kvcfg: KVCommConfig, payload, layers: Sequence[int],
+                 prefix_len: int, select=None, states=None,
+                 state_select=None) -> SharedKV:
+    """Assemble the packed receiver-side view from an already-gathered
+    payload ({"k","v"} of (M, B, Sc, Hkv, Dh)) plus its static layer-index
+    map — what a transport that moved exactly the wire bytes hands over."""
+    layers = tuple(int(i) for i in layers)
+    if select is None:
+        raise ValueError("build_packed needs the (L,) selection mask so the "
+                         "packed view can be densified / recombined")
+    return SharedKV(packed_kv=payload, layers=layers,
+                    select=jnp.asarray(select), states=states,
+                    state_select=state_select, prefix_len=prefix_len,
+                    pos_mode=kvcfg.pos_mode)
+
+
+def pack_shared(kvcfg: KVCommConfig, kv, select,
+                states=None, state_select=None) -> SharedKV:
+    """``build_shared``'s selection-specialized sibling: gather the selected
+    layers into the (M, B, Sc, Hkv, Dh) packed payload + static layer map.
+    Host-side (the selection must be concrete) — exactly the transport's
+    situation, where the selected-layer count is static anyway."""
+    if kv is None:
+        return build_shared(kvcfg, kv, select, states, state_select)
+    layers = selected_layer_ids(select)
+    idx = np.asarray(layers, np.int32)
+    payload = {"k": kv["k"][idx], "v": kv["v"][idx]}
+    return build_packed(kvcfg, payload, layers, int(kv["k"].shape[2]),
+                        select=select, states=states,
+                        state_select=state_select)
+
+
 # ---------------------------------------------------------------------------
 # receiver side
 # ---------------------------------------------------------------------------
@@ -164,10 +206,42 @@ def receiver_prefill(params, cfg: ModelConfig, query_tokens,
 
 def receiver_decode(params, cfg: ModelConfig, token, cache,
                     shared: Optional[SharedKV] = None):
-    """One greedy decode step. token: (B, 1)."""
+    """One greedy decode step, eager (op-by-op dispatch). token: (B, 1).
+
+    The serving path is ``decode_step`` below — one compiled call per token
+    with the cache donated; this stays as the reference implementation and
+    the benchmark's eager baseline."""
     out = tfm.apply_model(params, cfg, token, mode="cached", cache=cache,
                           shared=shared, logits_mode="last")
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+def _decode_step_jit(params, cfg, token, cache, shared):
+    out = tfm.apply_model(params, cfg, token, mode="cached", cache=cache,
+                          shared=shared, logits_mode="last")
+    next_tok = jnp.argmax(out.logits[:, -1, :], axis=-1)
+    return next_tok, out.logits[:, -1, :], out.cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache,
+                shared: Optional[SharedKV] = None):
+    """One greedy decode step as ONE compiled call with the cache donated
+    (``donate_argnums``): steady-state decode re-uses the cache buffers
+    in place instead of materializing a fresh KV stack every token (on
+    backends that implement donation; elsewhere it degrades gracefully).
+
+    The caller must treat the passed ``cache`` as consumed. ``shared`` is
+    reduced to its payload-free ``meta()`` view — the prefix already lives
+    in the cache — so per-step transfers are just the token.
+
+    Returns (next_token (B, 1), last_logits (B, V), new_cache).
+    """
+    meta = shared.meta() if shared is not None else None
+    next_tok, logits, cache = _decode_step_jit(params, cfg,
+                                               jnp.asarray(token), cache,
+                                               meta)
+    return next_tok[:, None], logits, cache
 
 
 def generate(params, cfg: ModelConfig, query_tokens, shared=None,

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,15 +13,29 @@ import jax.numpy as jnp
 class SharedKV:
     """Everything the receiver needs from the sender(s).
 
-    kv      : {"k","v"} each (L_attn, B, prefix_len, Hkv, Dh) — the sender's
-              per-attention-layer KV pairs for the context tokens (selected
-              and non-selected alike; ``select`` decides what is *used*; the
-              channel decides what is *transmitted*).
-    select  : (L_attn,) bool — the paper's layer subset S.
+    Two interchangeable forms:
+
+    dense  — ``kv`` holds {"k","v"} of (L_attn, B, prefix_len, Hkv, Dh):
+             every attention layer's sender KV, selected and non-selected
+             alike; ``select`` decides what is *used* (the uniform-scan
+             receiver masks the rest).
+    packed — ``packed_kv`` holds {"k","v"} of (M, B, prefix_len, Hkv, Dh):
+             ONLY the selected layers' KV (exactly the wire payload), plus
+             ``layers``, the static tuple of selected attention-layer
+             indices. This is the selection-specialized fast path: the
+             receiver partitions its layer scans on ``layers`` so prefix
+             attention FLOPs and cache HBM scale with M, not L.
+
+    select  : (L_attn,) bool — the paper's layer subset S (kept in both
+              forms; in the packed form it is redundant with ``layers`` but
+              cheap, and lets ``to_dense`` recover the dense view).
     states  : optional SSM state pytree stacked over SSM layers (the
               state-sharing analogue for attention-free layers).
     state_select : (L_ssm,) bool.
-    prefix_len / pos_mode are static (shape-determining / branch-determining).
+    prefix_len / pos_mode / layers are static (shape- or
+    partition-determining): they live in the pytree aux data, so a jitted
+    receiver specializes (compiles) per frozen selection — which is exactly
+    what the per-task frozen-selection cache makes cheap.
     """
     kv: Optional[dict] = None
     select: Optional[jnp.ndarray] = None
@@ -29,18 +43,57 @@ class SharedKV:
     state_select: Optional[jnp.ndarray] = None
     prefix_len: int = 0
     pos_mode: str = "shift"          # "shift" (paper) | "zero_unselected" (S)
+    packed_kv: Optional[dict] = None
+    layers: Optional[Tuple[int, ...]] = None
 
     def tree_flatten(self):
-        return ((self.kv, self.select, self.states, self.state_select),
-                (self.prefix_len, self.pos_mode))
+        return ((self.kv, self.select, self.states, self.state_select,
+                 self.packed_kv),
+                (self.prefix_len, self.pos_mode, self.layers))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        kv, select, states, state_select = children
-        prefix_len, pos_mode = aux
+        kv, select, states, state_select, packed_kv = children
+        prefix_len, pos_mode, layers = aux
         return cls(kv=kv, select=select, states=states,
                    state_select=state_select, prefix_len=prefix_len,
-                   pos_mode=pos_mode)
+                   pos_mode=pos_mode, packed_kv=packed_kv, layers=layers)
+
+    # ---- packed-form helpers ---------------------------------------------
+    @property
+    def is_packed(self) -> bool:
+        return self.layers is not None
+
+    def meta(self) -> "SharedKV":
+        """Payload-free view for decode steps: after prefill the KV lives in
+        the receiver's cache, so per-step calls need only the static layout
+        (prefix_len / pos_mode / layers) and the selection mask — shipping
+        the full prefix into every jitted decode call would defeat the
+        donated in-place cache update."""
+        return SharedKV(select=self.select, prefix_len=self.prefix_len,
+                        pos_mode=self.pos_mode, layers=self.layers)
+
+    def to_dense(self, num_layers: Optional[int] = None) -> "SharedKV":
+        """Scatter the packed payload back into a zero-padded dense stack
+        (the legacy uniform-scan view). ``num_layers`` defaults to the
+        length of ``select``."""
+        if not self.is_packed:
+            return self
+        kv = None
+        if self.packed_kv is not None:
+            L = num_layers if num_layers is not None \
+                else int(self.select.shape[0])
+            idx = jnp.asarray(self.layers, jnp.int32)
+            kv = {}
+            for part in ("k", "v"):
+                pk = self.packed_kv[part]
+                dense = jnp.zeros((L,) + tuple(pk.shape[1:]), pk.dtype)
+                if len(self.layers):
+                    dense = dense.at[idx].set(pk)
+                kv[part] = dense
+        return SharedKV(kv=kv, select=self.select, states=self.states,
+                        state_select=self.state_select,
+                        prefix_len=self.prefix_len, pos_mode=self.pos_mode)
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,10 @@ The sender's transmitted KV occupies cache positions ``[0, prefix_len)``.
 ``ctx_valid`` (a per-layer scalar bool threaded through the layer scan) masks
 the prefix out at non-selected layers — numerically identical to never
 concatenating it (softmax over -1e30), which lets the paper's non-contiguous
-layer selections run under a uniform ``lax.scan``.
+layer selections run under a uniform ``lax.scan``.  The packed fast path
+(``transformer._apply_packed_attn_run``) instead calls this block with
+``prefix_len == 0`` for unselected sub-scans — no prefix buffer, no masking,
+attention FLOPs scale with the selection ratio.
 
 Positional coherence (paper §K): receiver tokens live at absolute positions
 ``pos_shift + j``. The paper's default sets ``pos_shift == prefix_len`` at
@@ -155,16 +158,23 @@ def self_attention(
     cv = jax.lax.dynamic_update_slice_in_dim(
         cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
     idx = jnp.arange(Smax)
-    kv_pos = jnp.where(idx < prefix_len, idx,
-                       pos_shift + (idx - prefix_len))
+    if prefix_len:
+        kv_pos = jnp.where(idx < prefix_len, idx,
+                           pos_shift + (idx - prefix_len))
+    else:
+        kv_pos = pos_shift + idx   # packed unselected / plain serving cache
     valid = idx < cache_len + S
     if prefix_len and ctx_valid is not None:
         valid = valid & jnp.where(idx < prefix_len, ctx_valid, True)
     mass_mask = ((idx < prefix_len) if (collect_mass and prefix_len)
                  else None)
+    # decode (S == 1): every valid slot precedes the query by construction
+    # (self entries sit at kv_pos <= q_pos; prefix entries are either below
+    # the shifted query position or masked by ctx_valid), so the causal
+    # comparison over the whole buffer is dead work in the per-token step
     out, mass = _core(cfg)(
         q, ck, cv, q_pos=q_pos, kv_pos=kv_pos, kv_valid=valid,
-        causal=causal, window=window, mass_mask=mass_mask)
+        causal=causal and S > 1, window=window, mass_mask=mass_mask)
     return out.reshape(B, S, -1) @ p["wo"], (ck, cv), mass
 
 

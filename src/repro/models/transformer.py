@@ -24,6 +24,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.distributed import hints
@@ -120,14 +121,98 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# selection partitioning (the packed fast path)
+# ---------------------------------------------------------------------------
+def _run_partition(attn_i: int, n: int, layers: Tuple[int, ...]):
+    """Partition one attention run's n layers on the static selection.
+
+    ``layers`` is the global selected-layer index map (``SharedKV.layers``).
+    Returns (sel, unsel, segments):
+      sel / unsel : local layer indices (within the run) of each stack;
+      segments    : maximal contiguous blocks of same selection status, in
+                    layer order, as (is_sel, start_in_stack, length) — each
+                    segment is a contiguous slice of its stack because both
+                    stacks preserve layer order.
+    """
+    sel_set = {i - attn_i for i in layers if attn_i <= i < attn_i + n}
+    sel = tuple(sorted(sel_set))
+    unsel = tuple(i for i in range(n) if i not in sel_set)
+    segments = []
+    taken = {True: 0, False: 0}
+    j = 0
+    while j < n:
+        is_sel = j in sel_set
+        j0 = j
+        while j < n and (j in sel_set) == is_sel:
+            j += 1
+        segments.append((is_sel, taken[is_sel], j - j0))
+        taken[is_sel] += j - j0
+    return sel, unsel, tuple(segments)
+
+
+# Host-side gather cache: selection-partitioned parameter stacks keyed by
+# (buffer id of the first leaf, local index tuple). Only populated for
+# concrete arrays (eager decode); under jit the gather is traced once per
+# compile and amortized by the jit cache. The source leaf is pinned in the
+# value so a garbage-collected buffer cannot alias a stale id.
+_PART_CACHE: Dict[Tuple[int, Tuple[int, ...]], Tuple[Any, Any]] = {}
+
+
+def _gather_layers(tree, idx: Tuple[int, ...]):
+    """Static-index gather of a stacked-parameter (or cache) pytree along
+    the leading layer axis, identity-cached per selection bitmask."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree
+    if idx == tuple(range(leaves[0].shape[0])):
+        return tree   # full stack in order: nothing to gather
+    key = (id(leaves[0]), idx)
+    hit = _PART_CACHE.get(key)
+    if hit is not None and hit[0] is leaves[0]:
+        return hit[1]   # stored values are always concrete: safe anywhere
+    ia = np.asarray(idx, np.int32)
+    out = jax.tree.map(lambda a: a[ia], tree)
+    # cache only fully-concrete results: with ANY trace active (jit, scan,
+    # grad) ops are staged and `out` holds tracers, which must never
+    # outlive their trace
+    if not any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves((tree, out))):
+        if len(_PART_CACHE) > 64:
+            _PART_CACHE.clear()
+        _PART_CACHE[key] = (leaves[0], out)
+    return out
+
+
+def _is_packed_entry(run_cache) -> bool:
+    return isinstance(run_cache, dict) and "sel" in run_cache
+
+
+# ---------------------------------------------------------------------------
 # cache
 # ---------------------------------------------------------------------------
+def _init_ssm_run(cfg, spec, batch, shared, ssm_i):
+    init_fn = (ssm_mod.init_mamba_state if spec.kind == "mamba"
+               else ssm_mod.init_rwkv_state)
+    st = jax.vmap(lambda _: init_fn(cfg, batch))(jnp.arange(spec.count))
+    if shared is not None and shared.states is not None:
+        st = _seed_states(st, shared, ssm_i, spec.count)
+    return st
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                *, shared=None, dtype=None) -> Dict[str, Any]:
     """Build the serving cache. ``shared`` is a ``repro.core.SharedKV``;
     its per-layer sender KV is written into cache positions [0, prefix_len)
     of attention runs and its states seed SSM runs (state-sharing protocol).
+
+    A *packed* ``shared`` (static ``layers`` map) builds the
+    selection-specialized cache instead: each attention run is split into a
+    "sel" stack whose buffers carry the prefix and an "unsel" stack whose
+    buffers are prefix-free — prefix HBM scales with M selected layers, not
+    all L.
     """
+    if shared is not None and shared.is_packed:
+        return _init_cache_packed(cfg, batch, max_len, shared, dtype)
     dtype = dtype or _dt(cfg)
     prefix_len = 0 if shared is None else shared.prefix_len
     Smax = max_len + prefix_len
@@ -159,19 +244,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                 entry["xv"] = jnp.zeros((n, batch, Senc, Hkv, Dh), dtype)
             runs.append(entry)
             attn_i += n
-        elif spec.kind == "mamba":
-            st = jax.vmap(lambda _: ssm_mod.init_mamba_state(cfg, batch))(
-                jnp.arange(n))
-            if shared is not None and shared.states is not None:
-                st = _seed_states(st, shared, ssm_i, n)
-            runs.append(st)
+        elif spec.kind in ("mamba", "rwkv"):
+            runs.append(_init_ssm_run(cfg, spec, batch, shared, ssm_i))
             ssm_i += n
-        elif spec.kind == "rwkv":
-            st = jax.vmap(lambda _: ssm_mod.init_rwkv_state(cfg, batch))(
-                jnp.arange(n))
-            if shared is not None and shared.states is not None:
-                st = _seed_states(st, shared, ssm_i, n)
-            runs.append(st)
+    return {"len": jnp.asarray(prefix_len, jnp.int32), "runs": runs}
+
+
+def _init_cache_packed(cfg: ModelConfig, batch: int, max_len: int,
+                       shared, dtype=None) -> Dict[str, Any]:
+    """Selection-specialized cache: per attention run, a prefix-carrying
+    "sel" stack (seeded straight from the packed wire payload — no dense
+    zero-padded scatter) and a prefix-free "unsel" stack."""
+    dtype = dtype or _dt(cfg)
+    prefix_len = shared.prefix_len
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    runs: List[Any] = []
+    attn_i = 0
+    ssm_i = 0
+    packed_i = 0   # cursor into the packed (M, ...) payload, layer-ordered
+    for spec in cfg.layer_plan():
+        n = spec.count
+        if spec.kind in ("attn", "shared_attn"):
+            sel, unsel, _ = _run_partition(attn_i, n, shared.layers)
+            entry = {}
+            for name, idx, has_prefix in (("sel", sel, True),
+                                          ("unsel", unsel, False)):
+                m = len(idx)
+                S_buf = max_len + (prefix_len if has_prefix else 0)
+                k = jnp.zeros((m, batch, S_buf, Hkv, Dh), dtype)
+                v = jnp.zeros((m, batch, S_buf, Hkv, Dh), dtype)
+                if has_prefix and m and shared.packed_kv is not None:
+                    sk = shared.packed_kv["k"][packed_i:packed_i + m]
+                    sv = shared.packed_kv["v"][packed_i:packed_i + m]
+                    k = k.at[:, :, :prefix_len].set(sk.astype(dtype))
+                    v = v.at[:, :, :prefix_len].set(sv.astype(dtype))
+                sub = {"k": k, "v": v,
+                       "ctx_valid": jnp.full((m,), has_prefix, bool)}
+                if spec.cross_attn:
+                    Senc = cfg.encoder_seq
+                    sub["xk"] = jnp.zeros((m, batch, Senc, Hkv, Dh), dtype)
+                    sub["xv"] = jnp.zeros((m, batch, Senc, Hkv, Dh), dtype)
+                entry[name] = sub
+            packed_i += len(sel)
+            runs.append(entry)
+            attn_i += n
+        elif spec.kind in ("mamba", "rwkv"):
+            runs.append(_init_ssm_run(cfg, spec, batch, shared, ssm_i))
             ssm_i += n
     return {"len": jnp.asarray(prefix_len, jnp.int32), "runs": runs}
 
@@ -279,6 +397,66 @@ def _ssm_layer_body(cfg, spec, mode):
     return body
 
 
+def _apply_packed_attn_run(run_p, cfg, spec, x, run_cache, *, shared,
+                           attn_i, cache_len, prefix_len, collect_mass,
+                           capture_hidden, enc_out):
+    """Execute one attention run under the selection-specialized fast path.
+
+    The run's stacked params are partitioned (static, host-gathered and
+    cached per selection bitmask) into a selected stack whose cache carries
+    the sender prefix and an unselected stack whose cache is prefix-free;
+    layer order is preserved by scanning maximal contiguous same-status
+    segments in sequence. Prefix attention FLOPs therefore scale with the
+    number of selected layers, not the run length, and the unselected
+    buffers never hold (or mask) prefix entries.
+    """
+    sel, unsel, segments = _run_partition(attn_i, spec.count, shared.layers)
+    stacks = {"sel": (_gather_layers(run_p, sel), len(sel)),
+              "unsel": (_gather_layers(run_p, unsel), len(unsel))}
+    cache_keys = ["k", "v", "ctx_valid"]
+    if spec.cross_attn:
+        cache_keys += ["xk", "xv"]
+    new_sub = {"sel": [], "unsel": []}
+    masses, hiddens = [], []
+    aux = jnp.zeros((), jnp.float32)
+    zero_unsel = shared.pos_mode == "zero_unselected"
+    for is_sel, s0, ln in segments:
+        name = "sel" if is_sel else "unsel"
+        p_stack, stack_len = stacks[name]
+        whole = ln == stack_len
+        sub_p = p_stack if whole else jax.tree.map(
+            lambda a: a[s0:s0 + ln], p_stack)
+        sub_cache = {kk: (run_cache[name][kk] if whole
+                          else run_cache[name][kk][s0:s0 + ln])
+                     for kk in cache_keys}
+        pfx = prefix_len if is_sel else 0
+        shift = 0 if (zero_unsel and not is_sel) else prefix_len
+        clen = cache_len if is_sel else cache_len - prefix_len
+        per = {"params": sub_p,
+               "pos_shift": jnp.full((ln,), shift, jnp.int32),
+               "cache": sub_cache,
+               "cache_len": jnp.broadcast_to(clen, (ln,))}
+        body = _attn_layer_body(cfg, spec, "cached", pfx, collect_mass,
+                                enc_out, capture_hidden=capture_hidden)
+        x, ys = _run_scan(body, x, per, remat=False, unroll=cfg.scan_unroll)
+        aux = aux + jnp.sum(ys["aux"])
+        if collect_mass:
+            masses.append(ys["mass"])
+        if capture_hidden:
+            hiddens.append(ys["h_last"])
+        new_sub[name].append({kk: ys[kk] for kk in cache_keys})
+    entry = {}
+    for name in ("sel", "unsel"):
+        if len(new_sub[name]) > 1:
+            entry[name] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_sub[name])
+        elif new_sub[name]:
+            entry[name] = new_sub[name][0]
+        else:
+            entry[name] = run_cache[name]   # empty stack: passes through
+    return x, entry, aux, masses, hiddens
+
+
 def _run_scan(body, x, per_layer, *, remat: bool, unroll: bool = False):
     if remat:
         body = jax.checkpoint(body)
@@ -342,6 +520,10 @@ def apply_model(
     # inject = {"vec": (L_attn,B,D), "mask": (L_attn,), "mode": str}
 ) -> ModelOut:
     B, S = tokens.shape
+    if shared is not None and shared.is_packed and mode != "cached":
+        # the packed fast path is cache-resident by construction; anything
+        # else (e.g. AC-baseline train-mode calls) takes the dense view
+        shared = shared.to_dense(cfg.attn_layer_count)
     prefix_len = 0 if shared is None else shared.prefix_len
     pos_mode = "shift" if shared is None else shared.pos_mode
 
@@ -370,6 +552,23 @@ def apply_model(
             if spec.kind == "shared_attn":
                 run_p = jax.tree.map(lambda a: a[None],
                                      params["shared_attn"])
+            if _is_packed_entry(run_cache):
+                assert shared is not None and shared.is_packed, \
+                    "packed cache needs its packed SharedKV (or its .meta())"
+                assert inject is None, \
+                    "AC injection runs on the dense path"
+                eo = enc_out if (spec.cross_attn and not S == 1) else None
+                x, entry, aux, m_list, h_list = _apply_packed_attn_run(
+                    run_p, cfg, spec, x, run_cache, shared=shared,
+                    attn_i=attn_i, cache_len=cache_len,
+                    prefix_len=prefix_len, collect_mass=collect_mass,
+                    capture_hidden=capture_hidden, enc_out=eo)
+                aux_total = aux_total + aux
+                masses.extend(m_list)
+                hiddens.extend(h_list)
+                new_runs.append(entry)
+                attn_i += n
+                continue
             # per-layer positional shift (paper default: == prefix_len
             # everywhere; KVComm-S: 0 at non-selected layers)
             if prefix_len and pos_mode == "zero_unselected":

@@ -61,6 +61,25 @@ def flops_kvcomm_receiver(cfg: ModelConfig, C: int, Q: int, Tr: int,
     return recv_pre + recv_dec
 
 
+def flops_receiver_prefill(cfg: ModelConfig, C: int, Q: int,
+                           M: int) -> float:
+    """Receiver prefill alone under the packed fast path: all L layers pay
+    the dense (d^2) terms, but only the M selected layers attend over the
+    C-token prefix — the quantity the fig8 XLA cross-check measures.
+    Dense full-sharing prefill is the M == L case."""
+    L, d = cfg.num_layers, cfg.d_model
+    return L * Q * d * d + M * (C + Q) * Q * d + (L - M) * Q * Q * d
+
+
+def flops_decode_step(cfg: ModelConfig, C: int, Q: int, t: int,
+                      M: int) -> float:
+    """One decode step at generated-token index t (packed receiver): the
+    per-token cost the jitted donated step pays — selected layers attend
+    C + Q + t entries, unselected Q + t."""
+    L, d = cfg.num_layers, cfg.d_model
+    return L * d * d + (M * (C + Q + t) + (L - M) * (Q + t)) * d
+
+
 def flops_ac(cfg: ModelConfig, C: int, Q: int, Tr: int) -> float:
     """Sender prefill of C + receiver prefill/decode of Q only (a single
     d-vector crosses; no extra attention cost)."""
@@ -84,7 +103,9 @@ def kv_bytes(cfg: ModelConfig, C: int, M: int, itemsize: int = 2) -> int:
 def kv_cache_memory(cfg: ModelConfig, C: int, Q: int, Tr: int, M: int,
                     itemsize: int = 2) -> int:
     """Receiver-side KV memory: selected layers hold C+Q+Tr entries, others
-    Q+Tr (the paper's 23–73% memory saving vs Skyline)."""
+    Q+Tr (the paper's 23–73% memory saving vs Skyline). This is exactly the
+    buffer footprint the packed selection-specialized cache allocates
+    (dense masked sharing allocates the M == L skyline footprint)."""
     per_tok = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize
     L = cfg.num_layers
     return per_tok * (M * (C + Q + Tr) + (L - M) * (Q + Tr))

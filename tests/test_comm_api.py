@@ -110,9 +110,11 @@ class TestSerializedTransport:
         sh16 = t16.send(cfg, kvcfg, kv, select)
         sh8 = t8.send(cfg, kvcfg, kv, select)
         assert t8.total_bytes < t16.total_bytes
-        idx = np.nonzero(np.asarray(select))[0]
-        a = np.asarray(sh16.kv["k"])[idx]
-        b = np.asarray(sh8.kv["k"])[idx]
+        # packed hand-over: the payload IS the selected layers
+        assert sh16.layers == sh8.layers == tuple(
+            np.nonzero(np.asarray(select))[0])
+        a = np.asarray(sh16.packed_kv["k"])
+        b = np.asarray(sh8.packed_kv["k"])
         # int8 symmetric quant: ~1% of the dynamic range
         assert float(np.max(np.abs(a - b))) < 0.02 * float(np.max(np.abs(a)))
 
@@ -122,14 +124,23 @@ class TestSerializedTransport:
                                  cfg.vocab_size)
         kv, _ = core.sender_prefill(sender, cfg, ctx)
         select = jnp.array([True, False, False, True])
-        t = SerializedTransport("float32")
+        # legacy dense hand-over: scattered back with zeros at non-selected
+        t = SerializedTransport("float32", packed=False)
         shared = t.send(cfg, KVCommConfig(), kv, select)
+        assert not shared.is_packed
         np.testing.assert_array_equal(np.asarray(shared.kv["k"][0]),
                                       np.asarray(kv["k"][0]))
         np.testing.assert_array_equal(np.asarray(shared.kv["k"][3]),
                                       np.asarray(kv["k"][3]))
         assert not np.any(np.asarray(shared.kv["k"][1]))
         assert not np.any(np.asarray(shared.kv["v"][2]))
+        # packed hand-over densifies to exactly the same view
+        tp = SerializedTransport("float32")
+        dense = tp.send(cfg, KVCommConfig(), kv, select).to_dense()
+        np.testing.assert_array_equal(np.asarray(dense.kv["k"]),
+                                      np.asarray(shared.kv["k"]))
+        np.testing.assert_array_equal(np.asarray(dense.kv["v"]),
+                                      np.asarray(shared.kv["v"]))
 
     def test_int8_handles_ssm_state_leaves(self, tok):
         """SSM state leaves are rank 3-4, not the 5-D KV stack — the int8
@@ -179,7 +190,7 @@ class TestMultiSender:
         h2.send(c2, kvcfg, select=select)
         combined = sess.combined()
 
-        # reference: direct protocol-level composition
+        # reference: direct protocol-level composition (dense view)
         kv1, _, p1 = sess.sender.export_kv(c1)
         kv2, _, p2 = sess.sender.export_kv(c2)
         ref = core.combine_senders([
@@ -188,12 +199,22 @@ class TestMultiSender:
             SharedKV(kv=kv2, select=select, prefix_len=p2,
                      pos_mode=kvcfg.pos_mode)])
         assert combined.prefix_len == ref.prefix_len == p1 + p2
-        np.testing.assert_array_equal(np.asarray(combined.kv["k"]),
-                                      np.asarray(ref.kv["k"]))
-        np.testing.assert_array_equal(np.asarray(combined.kv["v"]),
-                                      np.asarray(ref.kv["v"]))
+        # the packed mailbox composition carries exactly the selected
+        # layers of the dense reference
+        assert combined.is_packed
+        idx = np.nonzero(np.asarray(select))[0]
+        np.testing.assert_array_equal(np.asarray(combined.packed_kv["k"]),
+                                      np.asarray(ref.kv["k"])[idx])
+        np.testing.assert_array_equal(np.asarray(combined.packed_kv["v"]),
+                                      np.asarray(ref.kv["v"])[idx])
         np.testing.assert_array_equal(np.asarray(combined.select),
                                       np.asarray(ref.select))
+        # and the two views drive the receiver to identical logits
+        qry0 = rng.integers(4, cfg.vocab_size, (2, 4)).astype(np.int32)
+        a = sess.receiver.prefill(qry0, combined, max_new=0)
+        b = sess.receiver.prefill(qry0, ref, max_new=0)
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=2e-5)
         # and the receiver can consume it
         qry = rng.integers(4, cfg.vocab_size, (2, 4)).astype(np.int32)
         out = sess.receiver.prefill(qry, combined, max_new=0)

@@ -1,0 +1,272 @@
+"""The selection-specialized receiver fast path: packed shared prefix +
+partitioned sub-scans + jitted donated decode must be numerically
+indistinguishable from the dense masked uniform-scan path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import (Agent, CommSession, InMemoryTransport,
+                        SerializedTransport)
+from repro.core.types import KVCommConfig, SharedKV
+from repro.models import transformer as tfm
+
+
+def _toks(key, cfg, B, S):
+    return jax.random.randint(key, (B, S), 4, cfg.vocab_size)
+
+
+def _shared_pair(cfg, params, select, pos_mode, Sc=8, B=2):
+    """(dense view, packed view) of the same sender prefix."""
+    ctx = _toks(jax.random.PRNGKey(1), cfg, B, Sc)
+    kv, states = core.sender_prefill(params, cfg, ctx)
+    n_ssm = sum(s.count for s in cfg.layer_plan()
+                if s.kind in ("mamba", "rwkv"))
+    ss = jnp.ones((n_ssm,), bool) if states is not None else None
+    kvcfg = KVCommConfig(pos_mode=pos_mode)
+    return (core.build_shared(kvcfg, kv, select, states, ss),
+            core.pack_shared(kvcfg, kv, select, states, ss))
+
+
+class TestPackedDenseParity:
+    @pytest.mark.parametrize("sel", [
+        (True, False, True, False),
+        (False, True, True, False),
+        (True, True, True, True),
+        (False, False, False, False),
+        (False, False, False, True),
+    ])
+    @pytest.mark.parametrize("pos_mode", ["shift", "zero_unselected"])
+    def test_prefill_logits_identical(self, tiny_cfg, tiny_params, sel,
+                                      pos_mode):
+        cfg, params = tiny_cfg, tiny_params
+        dense, packed = _shared_pair(cfg, params, jnp.array(sel), pos_mode)
+        qry = _toks(jax.random.PRNGKey(2), cfg, 2, 5)
+        a = core.receiver_prefill(params, cfg, qry, dense, max_new=0)
+        b = core.receiver_prefill(params, cfg, qry, packed, max_new=0)
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=2e-5)
+
+    @pytest.mark.parametrize("pos_mode", ["shift", "zero_unselected"])
+    def test_generate_tokens_identical(self, tiny_cfg, tiny_params,
+                                       pos_mode):
+        cfg, params = tiny_cfg, tiny_params
+        select = jnp.array([True, False, True, False])
+        dense, packed = _shared_pair(cfg, params, select, pos_mode)
+        qry = _toks(jax.random.PRNGKey(2), cfg, 2, 5)
+        ta, _ = core.generate(params, cfg, qry, dense, max_new=6)
+        tb, _ = core.generate(params, cfg, qry, packed, max_new=6)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+    @pytest.mark.parametrize("arch", ["zamba2-2.7b", "whisper-medium"])
+    def test_ssm_and_cross_attn_configs(self, tok, arch):
+        """Hybrid (mamba + shared_attn) and encoder-decoder (cross-attn)
+        cache entries partition like plain attention runs; SSM state
+        seeding stays dense."""
+        from repro.configs.registry import get_config
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  dtype="float32",
+                                  vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        L = cfg.attn_layer_count
+        sel = np.zeros((L,), bool)
+        sel[::2] = True
+        dense, packed = _shared_pair(cfg, params, jnp.asarray(sel), "shift")
+        extra = None
+        if cfg.encoder_layers:
+            extra = {"frames": jnp.zeros((2, cfg.encoder_seq, cfg.d_model))}
+        qry = _toks(jax.random.PRNGKey(2), cfg, 2, 4)
+        a = core.receiver_prefill(params, cfg, qry, dense, max_new=2,
+                                  extra=extra)
+        b = core.receiver_prefill(params, cfg, qry, packed, max_new=2,
+                                  extra=extra)
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=3e-5,
+                                   rtol=1e-5)
+        ta, _ = core.generate(params, cfg, qry, dense, max_new=3,
+                              extra=extra)
+        tb, _ = core.generate(params, cfg, qry, packed, max_new=3,
+                              extra=extra)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+    def test_packed_cache_is_smaller(self, tiny_cfg, tiny_params):
+        """The point of the exercise: unselected layers allocate no prefix
+        HBM — cache bytes follow costs.kv_cache_memory's M-scaling."""
+        cfg, params = tiny_cfg, tiny_params
+        select = jnp.array([True, False, False, False])
+        dense, packed = _shared_pair(cfg, params, select, "shift", Sc=32)
+        cd = tfm.init_cache(cfg, 2, 8, shared=dense)
+        cp = tfm.init_cache(cfg, 2, 8, shared=packed)
+        size = lambda c: sum(x.size * x.dtype.itemsize
+                             for x in jax.tree.leaves(c))
+        # dense: 4 layers x (32+8); packed: 1 x (32+8) + 3 x 8
+        assert size(cp) < 0.5 * size(cd)
+
+    def test_roundtrip_to_dense(self, tiny_cfg, tiny_params):
+        cfg, params = tiny_cfg, tiny_params
+        select = jnp.array([True, False, True, False])
+        dense, packed = _shared_pair(cfg, params, select, "shift")
+        rt = packed.to_dense()
+        idx = np.nonzero(np.asarray(select))[0]
+        np.testing.assert_array_equal(np.asarray(rt.kv["k"])[idx],
+                                      np.asarray(dense.kv["k"])[idx])
+        assert not np.any(np.asarray(rt.kv["k"])[[1, 3]])
+
+
+class TestJittedDecode:
+    def test_decode_step_matches_eager(self, tiny_cfg, tiny_params):
+        cfg, params = tiny_cfg, tiny_params
+        select = jnp.array([True, False, True, False])
+        dense, packed = _shared_pair(cfg, params, select, "shift")
+        qry = _toks(jax.random.PRNGKey(2), cfg, 2, 5)
+        pe = core.receiver_prefill(params, cfg, qry, dense, max_new=4)
+        pj = core.receiver_prefill(params, cfg, qry, packed, max_new=4)
+        tok_e = jnp.argmax(pe.logits[:, -1, :], axis=-1)[:, None]
+        tok_j = tok_e
+        cache_e, cache_j = pe.cache, pj.cache
+        for _ in range(4):
+            o = core.receiver_decode(params, cfg, tok_e, cache_e, dense)
+            cache_e = o.cache
+            tok_e = jnp.argmax(o.logits[:, -1, :], axis=-1)[:, None]
+            tok_j, logits_j, cache_j = core.decode_step(
+                params, cfg, tok_j, cache_j, packed)
+            np.testing.assert_allclose(np.asarray(logits_j),
+                                       np.asarray(o.logits[:, -1, :]),
+                                       atol=2e-5)
+            np.testing.assert_array_equal(np.asarray(tok_e),
+                                          np.asarray(tok_j))
+
+    @pytest.mark.parametrize("transport", [
+        lambda: InMemoryTransport(),
+        lambda: SerializedTransport("float32"),
+    ])
+    def test_stream_matches_generate_on_packed_transport(
+            self, tiny_cfg, tiny_params, tok, transport):
+        """stream (jitted donated steps) == generate (compiled scan), the
+        serving-path regression for the new decode step."""
+        cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        sess = CommSession(Agent("s", cfg, params, tok),
+                           Agent("r", cfg, params, tok), transport())
+        rng = np.random.default_rng(0)
+        ctx = rng.integers(4, cfg.vocab_size, (2, 8)).astype(np.int32)
+        qry = rng.integers(4, cfg.vocab_size, (2, 4)).astype(np.int32)
+        shared, _ = sess.share(ctx, KVCommConfig(ratio=0.5,
+                                                 selector="prior_only"))
+        assert shared.is_packed
+        toks = sess.generate(qry, shared, max_new=5)
+        streamed = np.stack(list(sess.stream(qry, shared, max_new=5)),
+                            axis=1)
+        np.testing.assert_array_equal(toks, streamed)
+
+
+class TestTransportsPacked:
+    def test_both_transports_same_preds_as_dense(self, tiny_cfg,
+                                                 tiny_params, tok):
+        cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        from repro.data.synthetic import SyntheticTask, TaskConfig
+        batch = SyntheticTask(tok, TaskConfig("retrieval", num_facts=4,
+                                              seed=7)).batch(4)
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        preds = {}
+        for name, tr in [("mem_packed", InMemoryTransport()),
+                         ("mem_dense", InMemoryTransport(packed=False)),
+                         ("ser_packed", SerializedTransport("float32")),
+                         ("ser_dense", SerializedTransport("float32",
+                                                           packed=False))]:
+            sess = CommSession(Agent("s", cfg, params, tok),
+                               Agent("r", cfg, params, tok), tr)
+            preds[name] = sess.run("kvcomm", batch, kvcfg=kvcfg).preds
+        for name in preds:
+            np.testing.assert_array_equal(preds[name], preds["mem_packed"])
+
+    def test_packed_bytes_match_dense_bytes(self, tiny_cfg, tiny_params):
+        """Packing changes the receiver view, never the accounted wire."""
+        cfg, params = tiny_cfg, tiny_params
+        ctx = _toks(jax.random.PRNGKey(1), cfg, 2, 8)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        for make in (lambda p: InMemoryTransport(packed=p),
+                     lambda p: SerializedTransport("float16", packed=p)):
+            tp, td = make(True), make(False)
+            tp.send(cfg, KVCommConfig(), kv, select)
+            td.send(cfg, KVCommConfig(), kv, select)
+            assert tp.total_bytes == td.total_bytes
+            assert tp.last.layers == td.last.layers == 2
+
+    def test_transfer_record_latency_stamped(self, tiny_cfg, tiny_params):
+        cfg, params = tiny_cfg, tiny_params
+        ctx = _toks(jax.random.PRNGKey(1), cfg, 2, 8)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        for tr in (InMemoryTransport(), SerializedTransport("float16")):
+            tr.send(cfg, KVCommConfig(), kv, select)
+            assert tr.last.latency_s > 0.0
+
+    def test_multi_sender_packed_combine(self, tiny_cfg, tiny_params, tok):
+        cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        sess = CommSession(Agent("s", cfg, params, tok),
+                           Agent("r", cfg, params, tok))
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        select = sess.selection(kvcfg)
+        rng = np.random.default_rng(0)
+        c1 = rng.integers(4, cfg.vocab_size, (2, 6)).astype(np.int32)
+        c2 = rng.integers(4, cfg.vocab_size, (2, 9)).astype(np.int32)
+        sess.attach_sender(sess.sender, name="A").send(c1, kvcfg,
+                                                       select=select)
+        sess.attach_sender(sess.sender, name="B").send(c2, kvcfg,
+                                                       select=select)
+        combined = sess.combined()
+        # export_kv prepends BOS: prefixes are 7 and 10
+        assert combined.is_packed and combined.prefix_len == 17
+        qry = rng.integers(4, cfg.vocab_size, (2, 4)).astype(np.int32)
+        a = sess.receiver.prefill(qry, combined, max_new=0)
+        b = sess.receiver.prefill(qry, combined.to_dense(), max_new=0)
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=2e-5)
+
+
+class TestSessionSatellites:
+    def test_sender_handle_reuses_frozen_selection(self, tiny_cfg,
+                                                   tiny_params, tok):
+        """An extra sender given only the task key must reuse the task's
+        frozen (calibrated) selection, not recompute from prior scores."""
+        cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        sess = CommSession(Agent("s", cfg, params, tok),
+                           Agent("r", cfg, params, tok))
+        kvcfg = KVCommConfig(ratio=0.5, alpha=1.0)
+        # freeze a selection for task "t" that the depth prior would never
+        # produce (top-scored first layers)
+        scores = jnp.linspace(1.0, 0.0, cfg.attn_layer_count)
+        frozen = sess.selection(kvcfg, scores=scores, key="t")
+        rng = np.random.default_rng(0)
+        ctx = rng.integers(4, cfg.vocab_size, (2, 6)).astype(np.int32)
+        h = sess.attach_sender(sess.sender, name="extra")
+        shared = h.send(ctx, kvcfg, calib_key="t")
+        np.testing.assert_array_equal(np.asarray(shared.select),
+                                      np.asarray(frozen))
+        # without the key, the handle falls back to selection from scratch
+        prior_cfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        prior = sess.selection(prior_cfg)
+        shared2 = h.send(ctx, prior_cfg)
+        np.testing.assert_array_equal(np.asarray(shared2.select),
+                                      np.asarray(prior))
+
+    def test_method_latency_is_synced(self, tiny_cfg, tiny_params, tok):
+        cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        sess = CommSession(Agent("s", cfg, params, tok),
+                           Agent("r", cfg, params, tok))
+        from repro.data.synthetic import SyntheticTask, TaskConfig
+        batch = SyntheticTask(tok, TaskConfig("retrieval", num_facts=4,
+                                              seed=7)).batch(2)
+        res = sess.run("kvcomm", batch,
+                       kvcfg=KVCommConfig(ratio=0.5, selector="prior_only"))
+        assert res.latency_s > 0
+        assert res.transfer is not None and res.transfer.latency_s > 0
