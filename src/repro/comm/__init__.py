@@ -23,6 +23,12 @@ concepts (each its own module):
                                    ``attach_sender`` mailboxes, batched and
                                    streaming generation.
 
+Heterogeneous pairs (sender and receiver disagreeing on depth) are first
+class: ``CommSession.calibrate_side``/``side_selection`` score each model
+over its own layers and a pluggable ``LayerMap`` policy
+(``repro.core.layermap``; re-exported here) aligns them — see the README's
+"Heterogeneous pairs" section and the ``hetero_kvcomm`` method.
+
 ``repro.serving.engine.CommEngine`` remains as a thin compatibility facade
 over this stack; new code should use ``CommSession`` directly::
 
@@ -38,9 +44,12 @@ from repro.comm.methods import (METHODS, CommMethod, CommRequest,
 from repro.comm.session import CommSession, SenderHandle
 from repro.comm.transport import (InMemoryTransport, SerializedTransport,
                                   TransferRecord, Transport)
+from repro.core.layermap import (LAYER_MAPS, LayerAssignment, LayerMap,
+                                 get_layer_map, register_layer_map)
 
 __all__ = [
     "Agent", "CommMethod", "CommRequest", "CommSession", "InMemoryTransport",
-    "METHODS", "MethodResult", "SenderHandle", "SerializedTransport",
-    "TransferRecord", "Transport", "get_method", "register",
+    "LAYER_MAPS", "LayerAssignment", "LayerMap", "METHODS", "MethodResult",
+    "SenderHandle", "SerializedTransport", "TransferRecord", "Transport",
+    "get_layer_map", "get_method", "register", "register_layer_map",
 ]

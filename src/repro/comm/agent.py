@@ -114,6 +114,15 @@ class Agent:
         return core.calibrate(self.params, self.cfg, jnp.asarray(query),
                               kv, states)
 
+    def self_scores(self, context: np.ndarray, query) -> jnp.ndarray:
+        """Per-side Eq. (1) scores over THIS model's own layers: export the
+        agent's own KV for the context and calibrate against it.  This is
+        what heterogeneous pairs calibrate with — cross-model calibration
+        needs matching depths, self-calibration never does; each side
+        scores its own L_attn and a ``LayerMap`` aligns the two."""
+        kv, states, _ = self.export_kv(context)
+        return self.calibrate(query, kv, states)
+
     def predict_last(self, logits) -> np.ndarray:
         """argmax over the final position — the single-token answer."""
         return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))

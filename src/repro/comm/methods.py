@@ -7,6 +7,9 @@ added by registration, not by editing an if-chain:
   baseline   — receiver answers from the query alone.
   skyline    — receiver consumes [BOS context query] (upper bound).
   kvcomm     — the paper: selected layers' KV cross the transport.
+  hetero_kvcomm — kvcomm across a depth-mismatched pair: per-side
+               selection + a LayerMap policy (req.layer_map) aligning
+               sender layers to receiver slots.
   random / contiguous / prior_only / full_kv — selector ablations
                (Table 2, Fig. 4; full_kv = all layers, the comm upper bound).
   nld        — sender greedy-decodes a message; receiver reads it as text.
@@ -45,6 +48,7 @@ class CommRequest:
     nld_tokens: int = 16
     max_new: int = 1
     calib_key: Optional[str] = None   # selection-cache key (task id)
+    layer_map: str = "depth_proportional"   # hetero_kvcomm mapping policy
 
 
 @dataclass
@@ -156,6 +160,38 @@ class SelectiveKV(CommMethod):
             packed=shared.is_packed)
 
 
+class HeteroSelectiveKV(CommMethod):
+    """KV sharing across a depth-mismatched pair: selection runs on the
+    sender over its own L_attn (``req.scores`` are SENDER-side, e.g. from
+    ``session.calibrate_side('sender', ...)``), the ``req.layer_map``
+    policy places the selected layers into receiver slots, and the
+    transport moves exactly the mapped payload.  On a homogeneous pair
+    with policy='identity' this degenerates to the classic kvcomm path
+    bit for bit (the conformance matrix pins it)."""
+    name = "hetero_kvcomm"
+
+    def run(self, session, batch, req):
+        assert req.kvcfg is not None, f"{self.name} needs a KVCommConfig"
+        rx, tx = session.receiver, session.sender
+        ctx, qry = batch["context"], batch["query"]
+        shared, assignment = session.share_mapped(
+            ctx, req.kvcfg, policy=req.layer_map, src_scores=req.scores,
+            key=req.calib_key)
+        out = rx.prefill(qry, shared, max_new=1)
+        rec = session.transport.last
+        P = rec.layers           # mapped pairs = receiver-consumed layers
+        # receiver-side cost at the receiver's depth + the sender's prefill
+        # at its own (flops_baseline at Tr=0 is exactly one prefill of C)
+        fl = (costs.flops_kvcomm_receiver(rx.cfg, shared.prefix_len,
+                                          qry.shape[1], req.max_new, P)
+              + costs.flops_baseline(tx.cfg, ctx.shape[1] + 1, 0))
+        return _result(
+            rx.predict_last(out.logits), batch["answer"], rec.n_bytes, fl,
+            transfer=rec, M=P, policy=req.layer_map,
+            src_layers=assignment.src, dst_layers=assignment.dst,
+            select=np.asarray(shared.select), packed=shared.is_packed)
+
+
 # ---------------------------------------------------------------------------
 # natural-language / soft-token baselines
 # ---------------------------------------------------------------------------
@@ -170,8 +206,9 @@ class NLD(CommMethod):
         inp = np.concatenate([rx.with_bos(np.asarray(msg_tok)), qry], axis=1)
         out = rx.prefill(inp, None, max_new=1)
         wire = session.transport.send_text(req.nld_tokens * B)
-        fl = costs.flops_nld(cfg, ctx.shape[1], qry.shape[1], req.max_new,
-                             req.nld_tokens)
+        fl = costs.flops_nld(rx.cfg, ctx.shape[1], qry.shape[1],
+                             req.max_new, req.nld_tokens,
+                             sender_cfg=tx.cfg)
         return _result(rx.predict_last(out.logits), batch["answer"], wire,
                        fl, transfer=session.transport.last)
 
@@ -193,8 +230,9 @@ class Cipher(CommMethod):
             extra={"soft_embeds": msg_emb, "soft_start": 1})
         wire = session.transport.send_text(
             req.nld_tokens * B, bytes_per_token=cfg.d_model * 2)
-        fl = costs.flops_nld(cfg, ctx.shape[1], qry.shape[1], req.max_new,
-                             req.nld_tokens)
+        fl = costs.flops_nld(rx.cfg, ctx.shape[1], qry.shape[1],
+                             req.max_new, req.nld_tokens,
+                             sender_cfg=tx.cfg)
         return _result(rx.predict_last(out.logits), batch["answer"], wire,
                        fl, transfer=session.transport.last)
 
@@ -208,6 +246,11 @@ class ActivationComm(CommMethod):
         self.mode = mode
 
     def run(self, session, batch, req):
+        # hidden-state injection is same-index by construction: the mask
+        # addresses receiver layers but the vectors come stacked over
+        # SENDER layers — depth-mismatched pairs have no aligned slot
+        assert not session.is_hetero, \
+            "ac_* baselines need equal depths (hetero pairs: hetero_kvcomm)"
         tx, rx, cfg = session.sender, session.receiver, session.cfg
         ctx, qry = batch["context"], batch["query"]
         B = ctx.shape[0]
@@ -235,6 +278,7 @@ register(SelectiveKV("random", selector_override="random"))
 register(SelectiveKV("contiguous", selector_override="contiguous"))
 register(SelectiveKV("prior_only", selector_override="prior_only"))
 register(SelectiveKV("full_kv", selector_override="full_kv"))
+register(HeteroSelectiveKV())
 register(NLD())
 register(Cipher())
 register(ActivationComm("replace"))

@@ -9,6 +9,9 @@ The session is the stateful piece of the stack: it owns
   * multi-sender composition (§J) — extra senders attach via
     ``attach_sender`` and deposit SharedKV views into a mailbox that
     ``combined()`` merges with ``combine_senders``;
+  * heterogeneous pairs — sender and receiver may disagree on depth:
+    ``calibrate_side``/``side_selection`` score each model over its own
+    L_attn and ``share_mapped`` aligns them with a ``LayerMap`` policy;
   * batched and streaming generation on the receiver.
 
 ``session.run(method, batch, ...)`` dispatches through the ``METHODS``
@@ -46,6 +49,15 @@ class SenderHandle:
              scores: Optional[jnp.ndarray] = None,
              calib_key: Optional[str] = None) -> SharedKV:
         sess = self.session
+        # mailbox composition indexes this sender's KV with receiver-keyed
+        # selections (and seeds SSM states positionally) — only sound when
+        # depths agree (mapped multi-sender composition is a ROADMAP
+        # follow-up)
+        from repro.core.protocol import _n_ssm
+        assert (self.agent.cfg.attn_layer_count
+                == sess.cfg.attn_layer_count
+                and _n_ssm(self.agent.cfg) == _n_ssm(sess.cfg)), \
+            "multi-sender mailbox needs sender depth == receiver depth"
         if select is None:
             # thread the task key so extra senders reuse the task's frozen
             # selection instead of recomputing from prior-only scores
@@ -64,8 +76,15 @@ class CommSession:
 
     def __init__(self, sender: Agent, receiver: Agent,
                  transport: Optional[Transport] = None):
-        assert sender.cfg.attn_layer_count == receiver.cfg.attn_layer_count, \
-            "sender/receiver must agree on attention layer count"
+        scfg, rcfg = sender.cfg, receiver.cfg
+        if scfg.supports_kv_sharing and rcfg.supports_kv_sharing:
+            # depths may differ (a LayerMap aligns them) but the per-layer
+            # KV geometry must match for the receiver to consume it raw
+            assert (scfg.num_kv_heads == rcfg.num_kv_heads and
+                    scfg.resolved_head_dim == rcfg.resolved_head_dim), \
+                "sender/receiver must agree on KV geometry " \
+                f"(Hkv, Dh): {(scfg.num_kv_heads, scfg.resolved_head_dim)}" \
+                f" vs {(rcfg.num_kv_heads, rcfg.resolved_head_dim)}"
         self.sender = sender
         self.receiver = receiver
         self.transport = transport if transport is not None \
@@ -74,14 +93,41 @@ class CommSession:
         self._score_cache: Dict[Optional[str], jnp.ndarray] = {}
         self._sel_cache: Dict[Tuple[Optional[str], KVCommConfig],
                               jnp.ndarray] = {}
+        # per-side state for heterogeneous pairs: scores/selections keyed
+        # by ("sender"|"receiver", task key), each over that side's L_attn
+        self._side_scores: Dict[Tuple[str, Optional[str]], jnp.ndarray] = {}
+        self._side_sel: Dict[Tuple[str, Optional[str], KVCommConfig],
+                             jnp.ndarray] = {}
         self.mailbox: List[Tuple[str, SharedKV]] = []
         self._n_handles = 0
+
+    @property
+    def is_hetero(self) -> bool:
+        """True when sender and receiver disagree on attention OR SSM
+        depth — the classic same-index protocol (``share``/"kvcomm") no
+        longer applies and a ``LayerMap`` must align the sides
+        (``share_mapped``/"hetero_kvcomm"; state sharing is positional,
+        so a mismatched SSM depth alone also routes there, where states
+        are dropped)."""
+        from repro.core.protocol import _n_ssm
+        scfg, rcfg = self.sender.cfg, self.receiver.cfg
+        return (scfg.attn_layer_count != rcfg.attn_layer_count
+                or _n_ssm(scfg) != _n_ssm(rcfg))
+
+    def _agent(self, side: str) -> Agent:
+        assert side in ("sender", "receiver"), side
+        return self.sender if side == "sender" else self.receiver
 
     # ---- calibration + frozen selections ---------------------------------
     def calibrate(self, context: np.ndarray, query: np.ndarray,
                   key: Optional[str] = None) -> jnp.ndarray:
         """Eq. (1) scores from one calibration sample; cached under ``key``
-        (a task identifier) so repeated batches skip the extra prefills."""
+        (a task identifier) so repeated batches skip the extra prefills.
+        Cross-model: the receiver consumes the SENDER's KV, so both sides
+        must agree on depth — heterogeneous pairs use ``calibrate_side``."""
+        assert not self.is_hetero, \
+            "cross-model calibration needs equal depths; " \
+            "use calibrate_side('sender', ...) on a heterogeneous pair"
         if key is not None and key in self._score_cache:
             return self._score_cache[key]
         kv, states, _ = self.sender.export_kv(context)
@@ -89,6 +135,39 @@ class CommSession:
         if key is not None:
             self._score_cache[key] = scores
         return scores
+
+    def calibrate_side(self, side: str, context: np.ndarray,
+                       query: np.ndarray,
+                       key: Optional[str] = None) -> jnp.ndarray:
+        """Per-side Eq. (1) scores: ``side``'s agent self-calibrates
+        (consumes its OWN exported KV), yielding scores over its own
+        L_attn regardless of what the other side looks like. Cached under
+        (side, key)."""
+        cache_key = (side, key)
+        if key is not None and cache_key in self._side_scores:
+            return self._side_scores[cache_key]
+        scores = self._agent(side).self_scores(context, query)
+        if key is not None:
+            self._side_scores[cache_key] = scores
+        return scores
+
+    def side_selection(self, side: str, kvcfg: KVCommConfig,
+                       scores: Optional[jnp.ndarray] = None,
+                       key: Optional[str] = None) -> jnp.ndarray:
+        """The frozen layer subset over ``side``'s own L_attn — the
+        per-side analogue of ``selection`` (same caching discipline:
+        explicit scores recompute and refresh; score-less calls serve the
+        frozen mask)."""
+        agent = self._agent(side)
+        cache_key = (side, key, kvcfg)
+        if scores is None and key is not None:
+            if cache_key in self._side_sel:
+                return self._side_sel[cache_key]
+            scores = self._side_scores.get((side, key))
+        select = core.make_selection(agent.cfg, kvcfg, scores)
+        if key is not None:
+            self._side_sel[cache_key] = select
+        return select
 
     def selection(self, kvcfg: KVCommConfig,
                   scores: Optional[jnp.ndarray] = None,
@@ -123,12 +202,57 @@ class CommSession:
               ) -> Tuple[SharedKV, jnp.ndarray]:
         """Primary-sender round: prefill the context, select layers, push
         through the transport. Returns (receiver-side SharedKV, select)."""
+        assert not self.is_hetero, \
+            "sender and receiver disagree on depth; use share_mapped " \
+            "(or the 'hetero_kvcomm' method) with a LayerMap policy"
         select = self.selection(kvcfg, scores=scores, key=key)
         kv, states, _ = self.sender.export_kv(context)
         state_select = self._state_selection(kvcfg, states)
         shared = self.transport.send(self.cfg, kvcfg, kv, select,
                                      states, state_select)
         return shared, select
+
+    def share_mapped(self, context: np.ndarray, kvcfg: KVCommConfig,
+                     policy: str = "depth_proportional",
+                     src_scores: Optional[jnp.ndarray] = None,
+                     dst_scores: Optional[jnp.ndarray] = None,
+                     key: Optional[str] = None
+                     ) -> Tuple[SharedKV, "core.LayerAssignment"]:
+        """Heterogeneous-sender round: selection runs on the SENDER side
+        over its own L_attn, the ``policy`` LayerMap places the selected
+        layers into receiver slots, and the transport moves exactly the
+        mapped payload. Works on homogeneous pairs too (where
+        policy='identity' reproduces ``share`` bit-for-bit).
+
+        Returns (receiver-side SharedKV, the LayerAssignment used)."""
+        src_select = self.side_selection("sender", kvcfg,
+                                         scores=src_scores, key=key)
+        if src_scores is None and key is not None:
+            src_scores = self._side_scores.get(("sender", key))
+        if dst_scores is None and key is not None:
+            dst_scores = self._side_scores.get(("receiver", key))
+        src_layers = core.selected_layer_ids(src_select)
+        assignment = core.get_layer_map(policy).assign(
+            src_layers,
+            num_src_layers=self.sender.cfg.attn_layer_count,
+            num_dst_layers=self.receiver.cfg.attn_layer_count,
+            src_scores=(None if src_scores is None
+                        else np.asarray(src_scores)),
+            dst_scores=(None if dst_scores is None
+                        else np.asarray(dst_scores)))
+        kv, states, _ = self.sender.export_kv(context)
+        if states is not None:
+            # SSM state sharing is positional (no mapping policy yet):
+            # only possible when both sides agree on SSM depth
+            from repro.core.protocol import _n_ssm
+            n_ssm = jax.tree.leaves(states)[0].shape[0]
+            if n_ssm != _n_ssm(self.receiver.cfg):
+                states = None
+        state_select = self._state_selection(kvcfg, states)
+        shared = self.transport.send(self.cfg, kvcfg, kv, None,
+                                     states, state_select,
+                                     assignment=assignment)
+        return shared, assignment
 
     # ---- multi-sender (§J) ------------------------------------------------
     def attach_sender(self, agent: Agent,
@@ -155,12 +279,14 @@ class CommSession:
             ac_layer: Optional[int] = None,
             nld_tokens: int = 16,
             max_new: int = 1,
-            calib_key: Optional[str] = None) -> MethodResult:
+            calib_key: Optional[str] = None,
+            layer_map: str = "depth_proportional") -> MethodResult:
         """Run one registered method over a batch. Thin registry lookup —
-        the signature mirrors the legacy ``CommEngine.run``."""
+        the signature mirrors the legacy ``CommEngine.run`` (plus
+        ``layer_map``, the policy 'hetero_kvcomm' aligns depths with)."""
         req = CommRequest(kvcfg=kvcfg, scores=scores, ac_layer=ac_layer,
                           nld_tokens=nld_tokens, max_new=max_new,
-                          calib_key=calib_key)
+                          calib_key=calib_key, layer_map=layer_map)
         t0 = time.perf_counter()
         result = get_method(method).run(self, batch, req)
         # wall clock around async JAX dispatch measures enqueue, not

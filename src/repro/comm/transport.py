@@ -34,6 +34,12 @@ Two implementations:
 Both subsume the legacy ``repro.core.Channel`` (kept as a deprecated alias
 surface for old callers); records are the same ``TransferRecord`` type so
 logs interoperate.
+
+Heterogeneous pairs: ``send(..., assignment=LayerAssignment)`` routes
+through ``_send_mapped`` — the wire carries exactly the assignment's P
+sender layers (a mapping policy may have dropped some of the sender's M
+selected layers; only receiver-consumable KV crosses) and the record's
+``layers``/bytes track P, i.e. M_receiver-side accounting.
 """
 from __future__ import annotations
 
@@ -48,8 +54,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import TransferRecord
-from repro.core.protocol import (build_packed, build_shared, gather_selected,
-                                 pack_shared, selected_layer_ids)
+from repro.core.layermap import LayerAssignment
+from repro.core.protocol import (build_mapped, build_packed, build_shared,
+                                 gather_mapped, gather_selected, pack_mapped,
+                                 pack_shared, scatter_mapped,
+                                 selected_layer_ids)
 from repro.core.types import KVCommConfig, SharedKV
 
 _WIRE_DTYPES = {
@@ -89,6 +98,18 @@ def payload_bytes(kv, select, states=None, state_select=None,
     return n
 
 
+def assignment_bytes(kv, assignment: LayerAssignment,
+                     itemsize: Optional[int] = None) -> int:
+    """Analytic wire bytes of a mapped (heterogeneous) KV transfer: exactly
+    the P assigned layer pairs cross — receiver-consumable accounting, even
+    when the sender originally selected more (M_sender > P)."""
+    if kv is None or assignment.num_pairs == 0:
+        return 0
+    _, B, Sc, Hkv, Dh = kv["k"].shape
+    isz = itemsize if itemsize is not None else kv["k"].dtype.itemsize
+    return 2 * assignment.num_pairs * B * Sc * Hkv * Dh * isz
+
+
 class Transport(abc.ABC):
     """A byte-accounted link M_s -> M_r. Subclasses define what physically
     crosses and how it is counted; the log format and per-transfer latency
@@ -107,11 +128,24 @@ class Transport(abc.ABC):
         return self.log[-1]
 
     def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
-             states=None, state_select=None) -> SharedKV:
+             states=None, state_select=None,
+             assignment: Optional[LayerAssignment] = None) -> SharedKV:
         """Move the selected KV (and states) across; return the receiver-side
-        view and record a latency-stamped TransferRecord."""
+        view and record a latency-stamped TransferRecord.
+
+        ``assignment`` switches on the heterogeneous path: the wire carries
+        the assignment's sender layers (``src``, possibly fewer than the
+        sender selected — a mapping policy may drop layers, and only what
+        the receiver will consume crosses) and the view is keyed by its
+        receiver slots (``dst``). The record's ``layers`` is the mapped
+        pair count, so byte accounting tracks M_receiver, not M_sender.
+        """
         t0 = time.perf_counter()
-        shared = self._send(cfg, kvcfg, kv, select, states, state_select)
+        if assignment is not None:
+            shared = self._send_mapped(cfg, kvcfg, kv, assignment,
+                                       states, state_select)
+        else:
+            shared = self._send(cfg, kvcfg, kv, select, states, state_select)
         # wall clock around async JAX dispatch measures enqueue, not
         # compute: sync the produced view before stopping the timer
         jax.block_until_ready(shared)
@@ -122,6 +156,18 @@ class Transport(abc.ABC):
     def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
               states=None, state_select=None) -> SharedKV:
         """Transport-specific transfer; must append a TransferRecord."""
+
+    def _send_mapped(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                     assignment: LayerAssignment, states=None,
+                     state_select=None) -> SharedKV:
+        """Heterogeneous transfer under a ``LayerAssignment``; must append
+        a TransferRecord whose ``layers`` is the mapped pair count.
+        Concrete default (not abstract) so pre-existing Transport
+        subclasses that only implement ``_send`` keep instantiating; they
+        simply cannot serve the hetero path until they override this."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support mapped "
+            "(heterogeneous) transfers; override _send_mapped")
 
     def send_text(self, token_count: int, bytes_per_token: int = 2) -> int:
         """Account an NLD/CIPHER-style natural-language transfer."""
@@ -156,6 +202,29 @@ class InMemoryTransport(Transport):
         shared = build(kvcfg, kv, select, states, state_select)
         n = payload_bytes(kv, select, states, state_select)
         self._record_kv(n, select, shared.prefix_len, wire_dtype="model")
+        return shared
+
+    def _send_mapped(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                     assignment: LayerAssignment, states=None,
+                     state_select=None) -> SharedKV:
+        if kv is None:
+            shared = build_shared(kvcfg, None,
+                                  jnp.asarray(assignment.dst_mask()),
+                                  states, state_select)
+            n = payload_bytes(None, None, states, state_select)
+        else:
+            if self.packed:
+                shared = pack_mapped(kvcfg, kv, assignment, states,
+                                     state_select)
+            else:
+                shared = scatter_mapped(kvcfg, gather_mapped(kv, assignment),
+                                        assignment, int(kv["k"].shape[2]),
+                                        states, state_select)
+            n = assignment_bytes(kv, assignment) \
+                + payload_bytes(None, None, states, state_select)
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=n, layers=assignment.num_pairs,
+            context_len=shared.prefix_len, wire_dtype="model"))
         return shared
 
 
@@ -206,6 +275,34 @@ class SerializedTransport(Transport):
                 .astype(dtype)
         return jnp.asarray(wire[0]).astype(dtype)
 
+    def _roundtrip_kv(self, payload, dtype):
+        """Wire-cast a gathered {"k","v"} payload and decode it back at the
+        compute dtype; returns (receiver payload, counted bytes). The ONE
+        codec loop both the homogeneous and mapped send paths go through —
+        a codec change cannot diverge their accounting."""
+        out, n = {}, 0
+        for part in ("k", "v"):
+            wire, nb = self._encode(payload[part])
+            n += nb
+            out[part] = self._decode(wire, dtype)
+        return out, n
+
+    def _roundtrip_states(self, states, state_select):
+        """Wire-cast the selected SSM state layers; returns the receiver
+        view (non-selected layers zeroed) and the counted bytes."""
+        if states is None or state_select is None:
+            return states, 0
+        sel = np.nonzero(np.asarray(state_select))[0]
+        counted = [0]
+
+        def roundtrip(x):
+            wire, n = self._encode(jnp.asarray(x)[sel])
+            counted[0] += n
+            dense = jnp.zeros_like(x)
+            return dense.at[sel].set(self._decode(wire, x.dtype))
+
+        return jax.tree.map(roundtrip, states), counted[0]
+
     # -- transport ---------------------------------------------------------
     def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
               states=None, state_select=None) -> SharedKV:
@@ -216,24 +313,10 @@ class SerializedTransport(Transport):
         if kv is not None:
             prefix_len = int(kv["k"].shape[2])
             payload = gather_selected(kv, jnp.asarray(select))
-            rx_payload = {}
-            for part in ("k", "v"):
-                wire, n = self._encode(payload[part])
-                n_bytes += n
-                rx_payload[part] = self._decode(wire, kv[part].dtype)
-        rx_states = states
-        if states is not None and state_select is not None:
-            sel = np.nonzero(np.asarray(state_select))[0]
-            counted = [0]
-
-            def roundtrip(x):
-                wire, n = self._encode(jnp.asarray(x)[sel])
-                counted[0] += n
-                dense = jnp.zeros_like(x)
-                return dense.at[sel].set(self._decode(wire, x.dtype))
-
-            rx_states = jax.tree.map(roundtrip, states)
-            n_bytes += counted[0]
+            rx_payload, n_bytes = self._roundtrip_kv(payload,
+                                                     kv["k"].dtype)
+        rx_states, state_bytes = self._roundtrip_states(states, state_select)
+        n_bytes += state_bytes
         if kv is None:
             shared = build_shared(kvcfg, None, select, rx_states,
                                   state_select)
@@ -251,4 +334,34 @@ class SerializedTransport(Transport):
                                   state_select)
         self._record_kv(n_bytes, select, shared.prefix_len,
                         wire_dtype=self.wire_dtype)
+        return shared
+
+    def _send_mapped(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                     assignment: LayerAssignment, states=None,
+                     state_select=None) -> SharedKV:
+        n_bytes = 0
+        rx_payload = None
+        prefix_len = 0
+        if kv is not None:
+            prefix_len = int(kv["k"].shape[2])
+            payload = gather_mapped(kv, assignment)
+            rx_payload, n_bytes = self._roundtrip_kv(payload,
+                                                     kv["k"].dtype)
+        rx_states, state_bytes = self._roundtrip_states(states, state_select)
+        n_bytes += state_bytes
+        if kv is None:
+            shared = build_shared(kvcfg, None,
+                                  jnp.asarray(assignment.dst_mask()),
+                                  rx_states, state_select)
+        elif self.packed:
+            shared = build_mapped(kvcfg, rx_payload, assignment, prefix_len,
+                                  states=rx_states,
+                                  state_select=state_select)
+        else:
+            shared = scatter_mapped(kvcfg, rx_payload, assignment,
+                                    prefix_len, states=rx_states,
+                                    state_select=state_select)
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=n_bytes, layers=assignment.num_pairs,
+            context_len=prefix_len, wire_dtype=self.wire_dtype))
         return shared

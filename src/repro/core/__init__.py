@@ -1,23 +1,30 @@
 """KVComm core: the paper's contribution as a composable JAX module."""
 from repro.core.channel import (Channel, TransferRecord, combine_senders,
                                 kv_wire_bytes)
-from repro.core.protocol import (build_packed, build_shared, calibrate,
-                                 decode_step, extract_kv, extract_states,
+from repro.core.layermap import (LAYER_MAPS, LayerAssignment, LayerMap,
+                                 get_layer_map, register_layer_map)
+from repro.core.protocol import (build_mapped, build_packed, build_shared,
+                                 calibrate, decode_step, extract_kv,
+                                 extract_states, gather_mapped,
                                  gather_selected, generate, make_selection,
-                                 pack_shared, receiver_decode,
-                                 receiver_prefill, selected_layer_ids,
-                                 sender_prefill, transmit)
-from repro.core.selection import (gaussian_prior, kendall_tau,
+                                 pack_mapped, pack_shared, receiver_decode,
+                                 receiver_prefill, scatter_mapped,
+                                 selected_layer_ids, sender_prefill,
+                                 transmit)
+from repro.core.selection import (gaussian_prior, interp_scores, kendall_tau,
                                   normalize_scores, select_layers,
                                   selection_scores, topk_mask)
 from repro.core.types import KVCommConfig, SharedKV
 
 __all__ = [
-    "Channel", "KVCommConfig", "SharedKV", "TransferRecord", "build_packed",
+    "Channel", "KVCommConfig", "LAYER_MAPS", "LayerAssignment", "LayerMap",
+    "SharedKV", "TransferRecord", "build_mapped", "build_packed",
     "build_shared", "calibrate", "combine_senders", "decode_step",
-    "extract_kv", "extract_states", "gather_selected", "gaussian_prior",
-    "generate", "kendall_tau", "kv_wire_bytes", "make_selection",
-    "normalize_scores", "pack_shared", "receiver_decode", "receiver_prefill",
-    "select_layers", "selected_layer_ids", "selection_scores",
-    "sender_prefill", "topk_mask", "transmit",
+    "extract_kv", "extract_states", "gather_mapped", "gather_selected",
+    "gaussian_prior", "generate", "get_layer_map", "interp_scores",
+    "kendall_tau", "kv_wire_bytes", "make_selection", "normalize_scores",
+    "pack_mapped", "pack_shared", "receiver_decode", "receiver_prefill",
+    "register_layer_map", "scatter_mapped", "select_layers",
+    "selected_layer_ids", "selection_scores", "sender_prefill", "topk_mask",
+    "transmit",
 ]

@@ -78,9 +78,14 @@ def combine_senders(shareds: List[SharedKV]) -> SharedKV:
         if len({s.layers for s in shareds}) == 1:
             # packed stays packed: identical layer maps concatenate along
             # the context axis without ever materializing the dense stack
+            # (receiver-keyed slots must agree; sender-side provenance may
+            # differ per sender — recorded only when unanimous)
             packed = {p: jnp.concatenate([s.packed_kv[p] for s in shareds],
                                          axis=2) for p in ("k", "v")}
+            src = (base.src_layers
+                   if len({s.src_layers for s in shareds}) == 1 else None)
             return SharedKV(packed_kv=packed, layers=base.layers,
+                            src_layers=src,
                             select=base.select, states=base.states,
                             state_select=base.state_select,
                             prefix_len=prefix_len, pos_mode=base.pos_mode)

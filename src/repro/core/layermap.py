@@ -1,0 +1,204 @@
+"""Layer-mapping policies for heterogeneous sender/receiver pairs.
+
+The paper's protocol assumes sender and receiver agree on the attention
+layer count L: the selected subset S indexes both sides at once.  When the
+two models disagree on depth (the ROADMAP's "heterogeneous model pairs"
+item, and how KVCOMM-online / activation-communication work align anchors
+across models), the missing piece is a *mapping*: which receiver layer slot
+hosts each selected sender layer's KV.
+
+A ``LayerMap`` policy turns the sender-side selection (indices into the
+sender's own L_attn) into a ``LayerAssignment`` — paired ``src`` (sender)
+and ``dst`` (receiver) attention-layer indices.  Everything downstream is
+keyed by ``dst``: the transport gathers ``kv[src]`` in ``dst`` order, and
+the packed ``SharedKV.layers`` map carries ``dst`` — exactly the static
+structure the selection-specialized receiver fast path already consumes,
+so no receiver-side code changes.
+
+Invariants every policy must uphold (asserted by ``LayerAssignment``):
+  * ``src`` and ``dst`` have equal length P (the mapped-pair count — the
+    wire moves exactly P layers, which may be < the sender's M when a
+    policy drops layers, e.g. identity-truncate at L_src > L_dst);
+  * ``dst`` is strictly ascending and within [0, L_dst) — each receiver
+    slot hosts at most one sender layer;
+  * ``src`` is ascending — depth order is preserved (KV from a shallow
+    sender layer never lands *below* KV from a deeper one).
+
+Policies are pluggable: ``register_layer_map`` adds a custom policy under
+its ``name`` (see README "Heterogeneous pairs").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.selection import gaussian_prior, interp_scores
+
+
+@dataclass(frozen=True)
+class LayerAssignment:
+    """A concrete sender-layer -> receiver-slot mapping (host-side static).
+
+    src / dst     : equal-length tuples of attention-layer indices
+                    (sender-side / receiver-side), paired positionally.
+    num_src_layers: the sender's L_attn.
+    num_dst_layers: the receiver's L_attn (the depth ``dst`` indexes).
+    """
+    src: Tuple[int, ...]
+    dst: Tuple[int, ...]
+    num_src_layers: int
+    num_dst_layers: int
+
+    def __post_init__(self):
+        assert len(self.src) == len(self.dst), "src/dst must pair up"
+        assert all(0 <= i < self.num_src_layers for i in self.src), \
+            f"src indices out of range: {self.src}"
+        assert all(0 <= j < self.num_dst_layers for j in self.dst), \
+            f"dst indices out of range: {self.dst}"
+        assert all(a < b for a, b in zip(self.dst, self.dst[1:])), \
+            f"dst must be strictly ascending: {self.dst}"
+        assert all(a <= b for a, b in zip(self.src, self.src[1:])), \
+            f"src must preserve depth order: {self.src}"
+
+    @property
+    def num_pairs(self) -> int:
+        return len(self.src)
+
+    def dst_mask(self) -> np.ndarray:
+        """(L_dst,) bool — the receiver-side selection mask (SharedKV.select
+        of the mapped view)."""
+        m = np.zeros((self.num_dst_layers,), bool)
+        if self.dst:
+            m[np.asarray(self.dst)] = True
+        return m
+
+    @property
+    def is_identity(self) -> bool:
+        """True when every pair maps a layer onto itself (the homogeneous
+        special case — bit-exact with the unmapped path by construction)."""
+        return self.src == self.dst
+
+
+class LayerMap:
+    """Base policy. Subclasses set ``name`` and implement ``assign``.
+
+    ``assign`` receives the sender's selected layer indices plus both
+    depths and (optionally) per-side scores over each model's own layers;
+    it returns a ``LayerAssignment``.  Scores are host-side vectors —
+    sender scores typically from sender self-calibration (Eq. 1 on the
+    sender's own KV), receiver scores from the receiver's depth prior or
+    its own calibration.
+    """
+    name: str = ""
+
+    def assign(self, src_layers: Sequence[int], num_src_layers: int,
+               num_dst_layers: int,
+               src_scores: Optional[np.ndarray] = None,
+               dst_scores: Optional[np.ndarray] = None) -> LayerAssignment:
+        raise NotImplementedError
+
+
+LAYER_MAPS: Dict[str, LayerMap] = {}
+
+
+def register_layer_map(policy: LayerMap) -> LayerMap:
+    """Add a policy instance to the registry (last registration wins)."""
+    assert policy.name, "layer map needs a name"
+    LAYER_MAPS[policy.name] = policy
+    return policy
+
+
+def get_layer_map(name: str) -> LayerMap:
+    try:
+        return LAYER_MAPS[name]
+    except KeyError:
+        raise ValueError(f"unknown layer map {name!r}; "
+                         f"registered: {sorted(LAYER_MAPS)}") from None
+
+
+class IdentityTruncate(LayerMap):
+    """src layer i -> dst slot i; layers beyond the receiver's depth are
+    dropped (truncated).  The no-op baseline: on a same-depth pair it is
+    the identity map, so the mapped path must be bit-exact with the
+    classic one (asserted by the conformance matrix)."""
+    name = "identity"
+
+    def assign(self, src_layers, num_src_layers, num_dst_layers,
+               src_scores=None, dst_scores=None) -> LayerAssignment:
+        kept = tuple(i for i in sorted(src_layers) if i < num_dst_layers)
+        return LayerAssignment(src=kept, dst=kept,
+                               num_src_layers=num_src_layers,
+                               num_dst_layers=num_dst_layers)
+
+
+class DepthProportional(LayerMap):
+    """src layer i -> the dst slot at the same *relative* depth:
+    round(i * (L_dst-1) / (L_src-1)).  Collisions (several sender layers
+    rounding onto one receiver slot, inevitable when L_src > L_dst) keep
+    the shallowest sender layer; later ones are dropped."""
+    name = "depth_proportional"
+
+    def assign(self, src_layers, num_src_layers, num_dst_layers,
+               src_scores=None, dst_scores=None) -> LayerAssignment:
+        if num_src_layers > 1:
+            scale = (num_dst_layers - 1) / (num_src_layers - 1)
+            pos = lambda i: int(round(i * scale))
+        else:
+            pos = lambda i: (num_dst_layers - 1) // 2
+        src, dst, taken = [], [], set()
+        for i in sorted(src_layers):
+            j = pos(i)
+            if j in taken:
+                continue
+            src.append(i)
+            dst.append(j)
+            taken.add(j)
+        return LayerAssignment(src=tuple(src), dst=tuple(dst),
+                               num_src_layers=num_src_layers,
+                               num_dst_layers=num_dst_layers)
+
+
+class ScoreGreedy(LayerMap):
+    """Score-driven slot choice with depth order preserved: keep the P
+    highest-scoring sender layers (P = min(M, L_dst)), host them in the P
+    highest-scoring receiver slots, pairing both sides in depth order.
+
+    Score defaults mirror per-side calibration availability: sender scores
+    fall back to the sender's Gaussian depth prior; missing receiver
+    scores are ALWAYS the sender-side scores depth-proportionally
+    resampled onto the receiver's depth (``interp_scores`` — the
+    cross-model anchor-alignment move), so with no scores at all the
+    receiver sees the sender's prior stretched over its own depth.
+    """
+    name = "score_greedy"
+
+    def assign(self, src_layers, num_src_layers, num_dst_layers,
+               src_scores=None, dst_scores=None) -> LayerAssignment:
+        src_layers = sorted(src_layers)
+        if src_scores is None:
+            src_scores = np.asarray(gaussian_prior(num_src_layers))
+        else:
+            src_scores = np.asarray(src_scores, np.float64)
+        if dst_scores is None:
+            dst_scores = np.asarray(interp_scores(src_scores,
+                                                  num_dst_layers))
+        else:
+            dst_scores = np.asarray(dst_scores, np.float64)
+        P = min(len(src_layers), num_dst_layers)
+        # keep the P best sender layers (stable: ties break shallow-first)
+        by_score = sorted(src_layers, key=lambda i: (-src_scores[i], i))
+        src = tuple(sorted(by_score[:P]))
+        # host them in the P best receiver slots, in depth order
+        slots = sorted(range(num_dst_layers),
+                       key=lambda j: (-dst_scores[j], j))
+        dst = tuple(sorted(slots[:P]))
+        return LayerAssignment(src=src, dst=dst,
+                               num_src_layers=num_src_layers,
+                               num_dst_layers=num_dst_layers)
+
+
+register_layer_map(IdentityTruncate())
+register_layer_map(DepthProportional())
+register_layer_map(ScoreGreedy())

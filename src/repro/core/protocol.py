@@ -183,6 +183,64 @@ def pack_shared(kvcfg: KVCommConfig, kv, select,
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous transmission (sender depth != receiver depth)
+# ---------------------------------------------------------------------------
+def gather_mapped(kv, assignment) -> Dict[str, jnp.ndarray]:
+    """The heterogeneous wire payload: the sender layers named by
+    ``assignment.src``, gathered in receiver-slot (``dst``) order —
+    (P, B, Sc, Hkv, Dh). Host-side static indices."""
+    idx = np.asarray(assignment.src, np.int32)
+    return {"k": kv["k"][idx], "v": kv["v"][idx]}
+
+
+def build_mapped(kvcfg: KVCommConfig, payload, assignment, prefix_len: int,
+                 states=None, state_select=None) -> SharedKV:
+    """Packed receiver-side view from an already-gathered mapped payload:
+    ``layers`` carries the RECEIVER slots (what the selection-specialized
+    cache partitions on), ``src_layers`` the sender provenance. Everything
+    the fast path consumes is receiver-keyed, so a mapped SharedKV rides
+    the same packed machinery as a homogeneous one."""
+    return SharedKV(packed_kv=payload, layers=tuple(assignment.dst),
+                    src_layers=tuple(assignment.src),
+                    select=jnp.asarray(assignment.dst_mask()),
+                    states=states, state_select=state_select,
+                    prefix_len=prefix_len, pos_mode=kvcfg.pos_mode)
+
+
+def pack_mapped(kvcfg: KVCommConfig, kv, assignment,
+                states=None, state_select=None) -> SharedKV:
+    """``pack_shared`` for a heterogeneous pair: gather the assignment's
+    sender layers and key the packed view by receiver slot."""
+    if kv is None:
+        return build_shared(kvcfg, kv,
+                            jnp.asarray(assignment.dst_mask()),
+                            states, state_select)
+    return build_mapped(kvcfg, gather_mapped(kv, assignment), assignment,
+                        int(kv["k"].shape[2]), states=states,
+                        state_select=state_select)
+
+
+def scatter_mapped(kvcfg: KVCommConfig, payload, assignment,
+                   prefix_len: int, states=None,
+                   state_select=None) -> SharedKV:
+    """Dense receiver-side view of a mapped payload: a zero-padded
+    (L_dst, ...) stack with each packed slice scattered into its receiver
+    slot (the uniform-scan fallback path; ``select`` masks the zeros)."""
+    idx = np.asarray(assignment.dst, np.int32)
+    kv = {}
+    for part in ("k", "v"):
+        p = payload[part]
+        dense = jnp.zeros((assignment.num_dst_layers,) + tuple(p.shape[1:]),
+                          p.dtype)
+        if assignment.num_pairs:
+            dense = dense.at[idx].set(p)
+        kv[part] = dense
+    return SharedKV(kv=kv, select=jnp.asarray(assignment.dst_mask()),
+                    states=states, state_select=state_select,
+                    prefix_len=prefix_len, pos_mode=kvcfg.pos_mode)
+
+
+# ---------------------------------------------------------------------------
 # receiver side
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,

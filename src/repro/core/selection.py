@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import KVCommConfig
 
@@ -22,6 +23,8 @@ def normalize_scores(raw: jnp.ndarray) -> jnp.ndarray:
     """Min-max normalize Eq. (1) masses to [0, 1] across layers.
 
     raw: (L,) or (L, B) (mass per calibration sample; averaged over B first).
+    Constant (and single-layer) inputs normalize to all-zeros, not NaN: the
+    denominator is floored, so downstream top-k degrades to index order.
     """
     if raw.ndim == 2:
         raw = raw.mean(axis=1)
@@ -32,11 +35,35 @@ def normalize_scores(raw: jnp.ndarray) -> jnp.ndarray:
 
 def gaussian_prior(num_layers: int, mu: Optional[float] = None,
                    sigma: float = 10.0) -> jnp.ndarray:
-    """P^l = exp(-(l - mu)^2 / (2 sigma^2)), l = 1..L (paper indexes from 1)."""
+    """P^l = exp(-(l - mu)^2 / (2 sigma^2)), l = 1..L (paper indexes from 1).
+
+    |sigma| is floored away from zero so a degenerate prior collapses to
+    a one-hot at mu instead of 0/0 NaNs (sigma enters squared, so the sign
+    never mattered and still doesn't).
+    """
     if mu is None:
         mu = num_layers / 2
     l = jnp.arange(1, num_layers + 1, dtype=jnp.float32)
+    sigma = max(abs(float(sigma)), 1e-6)
     return jnp.exp(-jnp.square(l - mu) / (2.0 * sigma ** 2))
+
+
+def interp_scores(scores, num_layers: int) -> jnp.ndarray:
+    """Depth-proportionally resample a per-layer score vector onto a model
+    with a different layer count (linear interpolation over normalized
+    depth) — the cross-model anchor-alignment step for heterogeneous
+    pairs: a sender-side score profile becomes a receiver-side one.
+    A single-layer source broadcasts its score."""
+    src = np.asarray(scores, np.float64).reshape(-1)
+    L = src.shape[0]
+    assert L >= 1 and num_layers >= 1
+    if L == num_layers:
+        return jnp.asarray(src, jnp.float32)
+    if L == 1:
+        return jnp.full((num_layers,), float(src[0]), jnp.float32)
+    x_old = np.linspace(0.0, 1.0, L)
+    x_new = np.linspace(0.0, 1.0, num_layers)
+    return jnp.asarray(np.interp(x_new, x_old, src), jnp.float32)
 
 
 def selection_scores(attn_scores: jnp.ndarray, cfg: KVCommConfig) -> jnp.ndarray:
@@ -47,9 +74,17 @@ def selection_scores(attn_scores: jnp.ndarray, cfg: KVCommConfig) -> jnp.ndarray
 
 
 def topk_mask(scores: jnp.ndarray, m: int) -> jnp.ndarray:
-    """Boolean mask of the top-m entries (non-contiguous by construction)."""
+    """Boolean mask of the top-m entries (non-contiguous by construction).
+
+    ``m`` is clamped to [0, L]: m <= 0 yields the empty mask (instead of a
+    top_k error) and m >= L the full one — the property tests pin both.
+    Idempotent under re-selection: feeding the mask back in as scores with
+    the same m reproduces it exactly.
+    """
     L = scores.shape[0]
-    m = min(m, L)
+    m = max(0, min(m, L))
+    if m == 0:
+        return jnp.zeros((L,), bool)
     _, idx = jax.lax.top_k(scores, m)
     return jnp.zeros((L,), bool).at[idx].set(True)
 
@@ -74,7 +109,7 @@ def select_layers(attn_scores: Optional[jnp.ndarray],
         scores = jax.random.uniform(key, (num_layers,))
         return topk_mask(scores, m)
     if cfg.selector == "contiguous":
-        start = min(cfg.layer_from, num_layers - m)
+        start = max(0, min(cfg.layer_from, num_layers - m))
         idx = jnp.arange(num_layers)
         return (idx >= start) & (idx < start + m)
     if cfg.selector == "prior_only":

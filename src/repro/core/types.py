@@ -26,13 +26,23 @@ class SharedKV:
              receiver partitions its layer scans on ``layers`` so prefix
              attention FLOPs and cache HBM scale with M, not L.
 
-    select  : (L_attn,) bool — the paper's layer subset S (kept in both
-              forms; in the packed form it is redundant with ``layers`` but
-              cheap, and lets ``to_dense`` recover the dense view).
+    Everything the receiver consumes is keyed by RECEIVER layer index:
+    ``select`` has the receiver's L_attn entries and ``layers`` holds
+    receiver slots.  On a homogeneous pair sender and receiver indices
+    coincide; on a heterogeneous pair (different depths) a ``LayerMap``
+    policy decided which receiver slot hosts each sender layer, and
+    ``src_layers`` records the sender-side provenance of each packed slot
+    (same length/order as ``layers``; None = identity, the homogeneous
+    case).
+
+    select  : (L_attn,) bool over RECEIVER layers — the paper's layer
+              subset S (kept in both forms; in the packed form it is
+              redundant with ``layers`` but cheap, and lets ``to_dense``
+              recover the dense view).
     states  : optional SSM state pytree stacked over SSM layers (the
               state-sharing analogue for attention-free layers).
     state_select : (L_ssm,) bool.
-    prefix_len / pos_mode / layers are static (shape- or
+    prefix_len / pos_mode / layers / src_layers are static (shape- or
     partition-determining): they live in the pytree aux data, so a jitted
     receiver specializes (compiles) per frozen selection — which is exactly
     what the per-task frozen-selection cache makes cheap.
@@ -45,19 +55,22 @@ class SharedKV:
     pos_mode: str = "shift"          # "shift" (paper) | "zero_unselected" (S)
     packed_kv: Optional[dict] = None
     layers: Optional[Tuple[int, ...]] = None
+    src_layers: Optional[Tuple[int, ...]] = None
 
     def tree_flatten(self):
         return ((self.kv, self.select, self.states, self.state_select,
                  self.packed_kv),
-                (self.prefix_len, self.pos_mode, self.layers))
+                (self.prefix_len, self.pos_mode, self.layers,
+                 self.src_layers))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         kv, select, states, state_select, packed_kv = children
-        prefix_len, pos_mode, layers = aux
+        prefix_len, pos_mode, layers, src_layers = aux
         return cls(kv=kv, select=select, states=states,
                    state_select=state_select, prefix_len=prefix_len,
-                   pos_mode=pos_mode, packed_kv=packed_kv, layers=layers)
+                   pos_mode=pos_mode, packed_kv=packed_kv, layers=layers,
+                   src_layers=src_layers)
 
     # ---- packed-form helpers ---------------------------------------------
     @property
@@ -69,7 +82,11 @@ class SharedKV:
         the receiver's cache, so per-step calls need only the static layout
         (prefix_len / pos_mode / layers) and the selection mask — shipping
         the full prefix into every jitted decode call would defeat the
-        donated in-place cache update."""
+        donated in-place cache update.  ``src_layers`` is provenance the
+        receiver never computes on, and it lives in the static aux data:
+        keeping it here would retrace the jitted decode step per distinct
+        provenance even when the receiver-side layout is identical — so
+        the meta view drops it."""
         return SharedKV(select=self.select, prefix_len=self.prefix_len,
                         pos_mode=self.pos_mode, layers=self.layers)
 
@@ -112,5 +129,7 @@ class KVCommConfig:
     seed: int = 0                 # for the random selector
 
     def num_selected(self, num_layers: int) -> int:
+        """M = ceil(ratio * L), clamped to [1, L] (ratio > 1 cannot select
+        more layers than exist; ratio <= 0 still shares one layer)."""
         import math
-        return max(1, math.ceil(self.ratio * num_layers))
+        return min(num_layers, max(1, math.ceil(self.ratio * num_layers)))

@@ -45,6 +45,14 @@ def pair_config() -> ModelConfig:
         remat=False, tie_embeddings=False)
 
 
+def deep_receiver_config() -> ModelConfig:
+    """The heterogeneous counterpart: a DEEPER receiver (12 layers vs the
+    pair's 8) with identical per-layer KV geometry (Hkv, Dh) and the same
+    tokenizer — the real depth-mismatched pair the LayerMap policies are
+    exercised on (8-layer sender -> 12-layer receiver)."""
+    return dataclasses.replace(pair_config(), num_layers=12)
+
+
 def task_suite(tok: SymbolTokenizer, seed: int = 0):
     """The training mixture: the Countries / HotpotQA / Tipsheets analogues."""
     return [
@@ -60,21 +68,21 @@ def task_suite(tok: SymbolTokenizer, seed: int = 0):
     ]
 
 
-def _quick_train(cfg, tok, steps: int = 1200):
+def _quick_train(cfg, tok, steps: int = 1200, ckpt_name: str = "base"):
     from repro.data.pipeline import mixed_lm_iter
     print(f"[pairs] no checkpoint found -> quick-training {steps} steps "
-          "(run examples/train_comm_pair.py for the full pair)",
-          file=sys.stderr)
+          f"({ckpt_name}; run examples/train_comm_pair.py for the full "
+          "pair)", file=sys.stderr)
     it = mixed_lm_iter(task_suite(tok, seed=0), 64, seed=0)
     opt = OptimizerConfig(lr=2e-3, total_steps=steps,
                           warmup_steps=steps // 20)
     state = train(cfg, opt, it, steps=steps, log_every=0)
-    # cache as the shared base checkpoint so the next entry point skips
-    # the quick-train (load_pair prefers sender/receiver fine-tunes)
+    # cache as a shared checkpoint so the next entry point skips the
+    # quick-train (load_pair prefers sender/receiver fine-tunes)
     try:
         os.makedirs(CKPT_DIR, exist_ok=True)
-        checkpoint.save(os.path.join(CKPT_DIR, "base"), state.params,
-                        {"role": "base", "quick_train_steps": steps})
+        checkpoint.save(os.path.join(CKPT_DIR, ckpt_name), state.params,
+                        {"role": ckpt_name, "quick_train_steps": steps})
     except OSError as e:
         print(f"[pairs] could not cache quick-train checkpoint: {e}",
               file=sys.stderr)
@@ -91,11 +99,7 @@ def load_pair() -> Tuple[ModelConfig, SymbolTokenizer, Any, Any]:
     if "pair" in _CACHE:
         return _CACHE["pair"]
     cfg, tok = pair_config(), pair_tokenizer()
-    from repro.models import transformer as tfm
-    template = jax.eval_shape(
-        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
-    template = jax.tree.map(
-        lambda s: jax.numpy.zeros(s.shape, s.dtype), template)
+    template = _param_template(cfg)
     s_path = os.path.join(CKPT_DIR, "sender.npz")
     r_path = os.path.join(CKPT_DIR, "receiver.npz")
     b_path = os.path.join(CKPT_DIR, "base.npz")
@@ -108,3 +112,32 @@ def load_pair() -> Tuple[ModelConfig, SymbolTokenizer, Any, Any]:
         sender = receiver = _quick_train(cfg, tok)
     _CACHE["pair"] = (cfg, tok, sender, receiver)
     return _CACHE["pair"]
+
+
+def _param_template(cfg: ModelConfig):
+    from repro.models import transformer as tfm
+    template = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda s: jax.numpy.zeros(s.shape, s.dtype), template)
+
+
+def load_hetero_pair() -> Tuple[ModelConfig, ModelConfig, SymbolTokenizer,
+                                Any, Any]:
+    """(sender_cfg, receiver_cfg, tok, sender_params, receiver_params): the
+    trained 8-layer sender paired with a DEEPER, separately trained
+    12-layer receiver (``deep_receiver_config``) — a real heterogeneous
+    pair sharing tokenizer and KV geometry but not depth.  The deep
+    receiver's checkpoint is cached at ``receiver_deep.npz``; when absent
+    it is quick-trained once, like the base pair."""
+    if "hetero" in _CACHE:
+        return _CACHE["hetero"]
+    s_cfg, tok, sender, _ = load_pair()
+    r_cfg = deep_receiver_config()
+    d_path = os.path.join(CKPT_DIR, "receiver_deep.npz")
+    if os.path.exists(d_path):
+        receiver = checkpoint.restore(d_path, _param_template(r_cfg))
+    else:
+        receiver = _quick_train(r_cfg, tok, ckpt_name="receiver_deep")
+    _CACHE["hetero"] = (s_cfg, r_cfg, tok, sender, receiver)
+    return _CACHE["hetero"]

@@ -87,11 +87,16 @@ def flops_ac(cfg: ModelConfig, C: int, Q: int, Tr: int) -> float:
     return _prefill(L, C, d) + flops_baseline(cfg, Q, Tr)
 
 
-def flops_nld(cfg: ModelConfig, C: int, Q: int, Tr: int, Ts: int) -> float:
+def flops_nld(cfg: ModelConfig, C: int, Q: int, Tr: int, Ts: int,
+              sender_cfg: ModelConfig = None) -> float:
     """§N: sender prefill+decode of its message; receiver answers over the
-    transmitted text (single information-transfer round)."""
+    transmitted text (single information-transfer round).  ``sender_cfg``
+    prices the sender side at its own depth/width on heterogeneous pairs
+    (default: same model both sides)."""
+    scfg = sender_cfg if sender_cfg is not None else cfg
+    Ls, ds = scfg.num_layers, scfg.d_model
     L, d = cfg.num_layers, cfg.d_model
-    sender = _prefill(L, C, d) + _decode(L, C, Ts, d)
+    sender = _prefill(Ls, C, ds) + _decode(Ls, C, Ts, ds)
     recv = _prefill(L, Ts + Q, d) + _decode(L, Ts + Q, Tr, d)
     return sender + recv
 

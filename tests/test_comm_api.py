@@ -20,6 +20,9 @@ LEGACY_METHODS = ["baseline", "skyline", "kvcomm", "random", "contiguous",
                   "prior_only", "full_kv", "nld", "cipher", "ac_replace",
                   "ac_mean", "ac_sum"]
 
+# methods that move no payload at all (the no-communication anchors)
+SILENT_METHODS = {"baseline", "skyline"}
+
 
 @pytest.fixture(scope="module")
 def pair(tok):
@@ -56,17 +59,62 @@ class TestRegistry:
         with pytest.raises(ValueError, match="unknown method"):
             _session(cfg, s, r, tok).run("quantum_telepathy", batch)
 
-    @pytest.mark.parametrize("method", LEGACY_METHODS)
-    def test_every_method_runs_with_result_fields(self, pair, batch, tok,
-                                                  method):
+class TestMethodContract:
+    """Registry conformance: EVERY registered method (including ones
+    registered after this test was written) must run end-to-end on the
+    tiny pair through ``CommSession.run`` and honour the ``MethodResult``
+    contract — latency stamped, accuracy a probability, and wire bytes
+    that match the analytic prediction for whatever its TransferRecord
+    claims was moved (zero for the no-communication anchors)."""
+
+    NLD_TOKENS = 4
+
+    def _expected_bytes(self, cfg, rec, batch):
+        B = batch["context"].shape[0]
+        if rec.kind == "kv":
+            # InMemoryTransport moves the model dtype (float32 here)
+            return core.kv_wire_bytes(cfg, B, rec.context_len, rec.layers,
+                                      itemsize=4)
+        if rec.kind == "text":
+            # context_len holds the token count; 2 B/token for NLD ids,
+            # d_model x 2 B for cipher soft tokens (pinned exactly below)
+            per_tok = rec.n_bytes // max(rec.context_len, 1)
+            assert per_tok in (2, cfg.d_model * 2)
+            return rec.context_len * per_tok
+        if rec.kind == "hidden":
+            return B * cfg.d_model * 2
+        raise AssertionError(f"unknown transfer kind {rec.kind!r}")
+
+    @pytest.mark.parametrize("method", sorted(METHODS))
+    def test_contract(self, pair, batch, tok, method):
         cfg, s, r = pair
         sess = _session(cfg, s, r, tok)
         res = sess.run(method, batch,
                        kvcfg=KVCommConfig(ratio=0.5, selector="prior_only"),
-                       nld_tokens=4)
-        assert res.preds.shape == (4,)
-        assert res.flops > 0
+                       nld_tokens=self.NLD_TOKENS)
+        B = batch["context"].shape[0]
+        assert res.preds.shape == (B,)
+        assert 0.0 <= res.accuracy <= 1.0
         assert res.latency_s > 0
+        assert res.flops > 0
+        if method in SILENT_METHODS:
+            assert res.wire_bytes == 0
+            assert res.transfer is None
+            assert len(sess.transport.log) == 0
+        else:
+            assert res.transfer is not None
+            assert res.wire_bytes == res.transfer.n_bytes > 0
+            assert res.wire_bytes == self._expected_bytes(
+                cfg, res.transfer, batch)
+
+    def test_cipher_accounts_embedding_bytes(self, pair, batch, tok):
+        """cipher ships d_model-wide soft tokens, not 2-byte ids — its
+        text record carries the fatter per-token cost."""
+        cfg, s, r = pair
+        sess = _session(cfg, s, r, tok)
+        res = sess.run("cipher", batch, nld_tokens=self.NLD_TOKENS)
+        B = batch["context"].shape[0]
+        assert res.wire_bytes == self.NLD_TOKENS * B * cfg.d_model * 2
 
 
 class TestSerializedTransport:

@@ -1,0 +1,451 @@
+"""Heterogeneous model pairs: per-side selection + LayerMap policies.
+
+The conformance matrix behind the tentpole: every mapping policy x
+{packed, dense} x {InMemory, Serialized} transport, on a same-depth pair
+(where the identity map must be bit-exact with the classic kvcomm path)
+and on depth-mismatched pairs in both directions (6->10 shallower sender,
+10->6 deeper sender), asserting finite logits, receiver-side cache shapes,
+and transport-measured bytes equal to the analytic ``kv_wire_bytes``
+prediction at the mapped pair count P (NOT the sender's M — policies may
+drop layers, and only receiver-consumable KV crosses the wire).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import (Agent, CommSession, InMemoryTransport,
+                        SerializedTransport)
+from repro.core.layermap import (LAYER_MAPS, DepthProportional,
+                                 IdentityTruncate, LayerAssignment, LayerMap,
+                                 ScoreGreedy, get_layer_map,
+                                 register_layer_map)
+from repro.core.types import KVCommConfig
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.models import transformer as tfm
+
+POLICIES = ["identity", "depth_proportional", "score_greedy"]
+
+TRANSPORTS = {
+    "mem_packed": lambda: InMemoryTransport(),
+    "mem_dense": lambda: InMemoryTransport(packed=False),
+    "ser_packed": lambda: SerializedTransport("float16"),
+    "ser_dense": lambda: SerializedTransport("float16", packed=False),
+}
+
+# wire itemsize per transport: InMemory moves the model dtype (float32
+# here), Serialized casts to fp16
+ITEMSIZE = {"mem_packed": 4, "mem_dense": 4, "ser_packed": 2,
+            "ser_dense": 2}
+
+
+def _cfg(tok, L):
+    from repro.configs.registry import get_config
+    return dataclasses.replace(
+        get_config("llama3.2-3b-pair"),
+        num_layers=L, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
+        head_dim=16, vocab_size=tok.vocab_size, dtype="float32",
+        remat=False, tie_embeddings=False)
+
+
+@pytest.fixture(scope="module")
+def models(tok):
+    """Params for 6- and 10-layer tiny models (shared across the matrix)."""
+    cfgs = {L: _cfg(tok, L) for L in (6, 10)}
+    params = {L: tfm.init_params(cfgs[L], jax.random.PRNGKey(L))
+              for L in cfgs}
+    return cfgs, params
+
+
+@pytest.fixture(scope="module")
+def batch(tok):
+    return SyntheticTask(tok, TaskConfig("retrieval", num_facts=4,
+                                         seed=11)).batch(2)
+
+
+def _session(models, tok, L_s, L_r, transport=None):
+    cfgs, params = models
+    return CommSession(Agent("s", cfgs[L_s], params[L_s], tok),
+                       Agent("r", cfgs[L_r], params[L_r], tok), transport)
+
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests (no model involved)
+# ---------------------------------------------------------------------------
+class TestLayerMapPolicies:
+    def test_registry_has_baselines(self):
+        assert set(POLICIES) <= set(LAYER_MAPS)
+        assert isinstance(get_layer_map("identity"), IdentityTruncate)
+        with pytest.raises(ValueError, match="unknown layer map"):
+            get_layer_map("wormhole")
+
+    def test_identity_truncates_deep_sender(self):
+        a = IdentityTruncate().assign([0, 3, 5, 8], 10, 6)
+        assert a.src == a.dst == (0, 3, 5)    # 8 >= L_dst: dropped
+        assert a.num_pairs == 3
+
+    def test_identity_same_depth_is_identity(self):
+        a = IdentityTruncate().assign([1, 4], 6, 6)
+        assert a.is_identity and a.src == (1, 4)
+
+    def test_depth_proportional_endpoints_and_monotonicity(self):
+        a = DepthProportional().assign(list(range(6)), 6, 10)
+        assert a.dst[0] == 0 and a.dst[-1] == 9   # endpoints pinned
+        assert all(x < y for x, y in zip(a.dst, a.dst[1:]))
+        assert a.src == tuple(range(6))           # nothing dropped, 6 <= 10
+
+    def test_depth_proportional_same_depth_is_identity(self):
+        a = DepthProportional().assign([0, 2, 5], 6, 6)
+        assert a.is_identity
+
+    def test_depth_proportional_collisions_keep_shallowest(self):
+        # 10 -> 4: scale 1/3; layers 0,1,2 all round to slot 0 or 1
+        a = DepthProportional().assign(list(range(10)), 10, 4)
+        assert len(a.dst) == len(set(a.dst)) == a.num_pairs <= 4
+        assert a.dst[0] == 0 and a.src[0] == 0
+
+    def test_score_greedy_prefers_high_scoring_slots(self):
+        dst_scores = np.zeros(10)
+        dst_scores[[2, 5, 7]] = 1.0
+        a = ScoreGreedy().assign([0, 1, 2], 6, 10,
+                                 dst_scores=dst_scores)
+        assert a.dst == (2, 5, 7)
+        assert a.src == (0, 1, 2)    # depth order preserved on both sides
+
+    def test_score_greedy_drops_lowest_scoring_sender_layers(self):
+        src_scores = np.array([0.9, 0.1, 0.8, 0.2, 0.7, 0.3])
+        a = ScoreGreedy().assign(list(range(6)), 6, 3,
+                                 src_scores=src_scores)
+        assert a.src == (0, 2, 4)    # the three best, back in depth order
+        assert a.num_pairs == 3
+
+    def test_assignment_invariants_enforced(self):
+        with pytest.raises(AssertionError):
+            LayerAssignment(src=(0, 1), dst=(3, 2), num_src_layers=6,
+                            num_dst_layers=6)   # dst not ascending
+        with pytest.raises(AssertionError):
+            LayerAssignment(src=(0,), dst=(9,), num_src_layers=6,
+                            num_dst_layers=6)   # dst out of range
+        with pytest.raises(AssertionError):
+            LayerAssignment(src=(0, 1), dst=(2,), num_src_layers=6,
+                            num_dst_layers=6)   # unpaired
+
+    def test_custom_policy_registration(self, models, tok, batch):
+        """README's extension point: a registered policy is reachable by
+        name through session.run('hetero_kvcomm', layer_map=...)."""
+        class FirstOnly(LayerMap):
+            name = "first_only"
+
+            def assign(self, src_layers, num_src_layers, num_dst_layers,
+                       src_scores=None, dst_scores=None):
+                i = min(src_layers)
+                return LayerAssignment(
+                    src=(i,), dst=(0,), num_src_layers=num_src_layers,
+                    num_dst_layers=num_dst_layers)
+
+        register_layer_map(FirstOnly())
+        try:
+            sess = _session(models, tok, 6, 10)
+            res = sess.run("hetero_kvcomm", batch, kvcfg=KVCFG,
+                           layer_map="first_only")
+            assert res.extras["M"] == 1
+            assert res.extras["dst_layers"] == (0,)
+        finally:
+            del LAYER_MAPS["first_only"]
+
+
+# ---------------------------------------------------------------------------
+# the conformance matrix
+# ---------------------------------------------------------------------------
+class TestSameDepthBitExact:
+    """(a) same-L + identity map == today's kvcomm path, bit for bit."""
+
+    @pytest.mark.parametrize("transport", sorted(TRANSPORTS))
+    def test_shared_views_identical(self, models, tok, batch, transport):
+        sess_a = _session(models, tok, 6, 6, TRANSPORTS[transport]())
+        sess_b = _session(models, tok, 6, 6, TRANSPORTS[transport]())
+        shared_a, select = sess_a.share(batch["context"], KVCFG)
+        shared_b, asg = sess_b.share_mapped(batch["context"], KVCFG,
+                                            policy="identity")
+        assert asg.is_identity
+        assert sess_a.transport.last.n_bytes == sess_b.transport.last.n_bytes
+        assert sess_a.transport.last.layers == sess_b.transport.last.layers
+        np.testing.assert_array_equal(np.asarray(shared_a.select),
+                                      np.asarray(shared_b.select))
+        if shared_a.is_packed:
+            assert shared_a.layers == shared_b.layers
+            for p in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(shared_a.packed_kv[p]),
+                    np.asarray(shared_b.packed_kv[p]))
+        else:
+            # dense views: the classic InMemory hand-over is zero-copy
+            # (unselected layers keep the sender buffers, masked out by
+            # ``select``); the mapped one scatters zeros there. What the
+            # receiver consumes — the selected layers — must be identical.
+            idx = np.nonzero(np.asarray(select))[0]
+            for p in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(shared_a.kv[p])[idx],
+                    np.asarray(shared_b.kv[p])[idx])
+
+    def test_run_preds_and_bytes_identical(self, models, tok, batch):
+        a = _session(models, tok, 6, 6).run("kvcomm", batch, kvcfg=KVCFG)
+        b = _session(models, tok, 6, 6).run("hetero_kvcomm", batch,
+                                            kvcfg=KVCFG,
+                                            layer_map="identity")
+        np.testing.assert_array_equal(a.preds, b.preds)
+        assert a.wire_bytes == b.wire_bytes
+        assert a.extras["M"] == b.extras["M"]
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_every_policy_is_identity_at_same_depth_prior(self, policy):
+        """With per-side priors equal (same depth), no policy may relocate
+        a layer: all three baselines degenerate to the identity map."""
+        src = core.selected_layer_ids(
+            core.select_layers(None, 6, KVCFG))
+        a = get_layer_map(policy).assign(src, 6, 6)
+        assert a.is_identity and a.src == src
+
+
+class TestCrossDepthMatrix:
+    """(b) different-L: finite logits, correct receiver cache shapes, and
+    measured bytes == analytic kv_wire_bytes at the mapped pair count."""
+
+    @pytest.mark.parametrize("transport", sorted(TRANSPORTS))
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_shallow_sender_deep_receiver(self, models, tok, batch,
+                                          policy, transport):
+        self._matrix_case(models, tok, batch, 6, 10, policy, transport)
+
+    @pytest.mark.parametrize("transport", sorted(TRANSPORTS))
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_deep_sender_shallow_receiver(self, models, tok, batch,
+                                          policy, transport):
+        """The truncating direction: the sender selects M = 5 of 10 layers
+        but at most 6 receiver slots exist — policies drop layers and the
+        wire must carry only the surviving P pairs."""
+        self._matrix_case(models, tok, batch, 10, 6, policy, transport)
+
+    def _matrix_case(self, models, tok, batch, L_s, L_r, policy,
+                     transport):
+        cfgs, _ = models
+        sess = _session(models, tok, L_s, L_r, TRANSPORTS[transport]())
+        assert sess.is_hetero
+        shared, asg = sess.share_mapped(batch["context"], KVCFG,
+                                        policy=policy)
+        rcfg = cfgs[L_r]
+        P = asg.num_pairs
+        assert 1 <= P <= min(rcfg.attn_layer_count,
+                             cfgs[L_s].attn_layer_count)
+
+        # --- transport-measured bytes == analytic prediction at P -------
+        rec = sess.transport.last
+        Sc = batch["context"].shape[1] + 1          # export_kv adds BOS
+        assert rec.layers == P
+        assert rec.context_len == Sc
+        assert rec.n_bytes == core.kv_wire_bytes(
+            rcfg, batch["context"].shape[0], Sc, P, ITEMSIZE[transport])
+
+        # --- receiver-side view is keyed by receiver slots ---------------
+        np.testing.assert_array_equal(np.asarray(shared.select),
+                                      asg.dst_mask())
+        if shared.is_packed:
+            assert shared.layers == asg.dst
+            assert shared.src_layers == asg.src
+        else:
+            assert shared.kv["k"].shape[0] == rcfg.attn_layer_count
+
+        # --- finite logits + correct cache geometry ----------------------
+        Sq, max_new = batch["query"].shape[1], 2
+        out = sess.receiver.prefill(batch["query"], shared,
+                                    max_new=max_new)
+        assert np.isfinite(np.asarray(out.logits)).all()
+        self._check_cache_shapes(rcfg, out.cache, shared, asg,
+                                 B=batch["query"].shape[0],
+                                 S_new=Sq + max_new)
+
+    @staticmethod
+    def _check_cache_shapes(rcfg, cache, shared, asg, B, S_new):
+        Hkv, Dh = rcfg.num_kv_heads, rcfg.resolved_head_dim
+        Sc = shared.prefix_len
+        attn_i = 0
+        for spec, run in zip(rcfg.layer_plan(), cache["runs"]):
+            n = spec.count
+            in_run = [j for j in asg.dst if attn_i <= j < attn_i + n]
+            if shared.is_packed:
+                # selected stack carries the prefix, unselected is
+                # prefix-free — buffers scale with P, not L
+                assert run["sel"]["k"].shape == (
+                    len(in_run), B, Sc + S_new, Hkv, Dh)
+                assert run["unsel"]["k"].shape == (
+                    n - len(in_run), B, S_new, Hkv, Dh)
+                assert bool(run["sel"]["ctx_valid"].all())
+                assert not bool(run["unsel"]["ctx_valid"].any())
+            else:
+                assert run["k"].shape == (n, B, Sc + S_new, Hkv, Dh)
+                np.testing.assert_array_equal(
+                    np.asarray(run["ctx_valid"]),
+                    np.asarray(shared.select)[attn_i:attn_i + n])
+            attn_i += n
+
+    def test_byte_accounting_when_sender_M_exceeds_pairs(self, models,
+                                                         tok, batch):
+        """10 -> 6 identity: the sender selects 5 layers, only those below
+        depth 6 survive — measured bytes must track P, not M_sender."""
+        cfgs, _ = models
+        sess = _session(models, tok, 10, 6)
+        src_select = sess.side_selection("sender", KVCFG)
+        M_sender = int(np.asarray(src_select).sum())
+        shared, asg = sess.share_mapped(batch["context"], KVCFG,
+                                        policy="identity")
+        assert asg.num_pairs < M_sender    # identity truncated something
+        rec = sess.transport.last
+        assert rec.layers == asg.num_pairs
+        assert rec.n_bytes == core.kv_wire_bytes(
+            cfgs[6], batch["context"].shape[0],
+            batch["context"].shape[1] + 1, asg.num_pairs, 4)
+
+
+class TestHeteroGeneration:
+    def test_stream_matches_generate_through_mapped_prefix(self, models,
+                                                           tok, batch):
+        """The packed fast path (jitted donated decode) must digest a
+        mapped SharedKV exactly like compiled generation does."""
+        sess = _session(models, tok, 6, 10)
+        shared, _ = sess.share_mapped(batch["context"], KVCFG,
+                                      policy="depth_proportional")
+        toks = sess.generate(batch["query"], shared, max_new=4)
+        streamed = np.stack(list(sess.stream(batch["query"], shared,
+                                             max_new=4)), axis=1)
+        np.testing.assert_array_equal(toks, streamed)
+
+    def test_packed_dense_logit_parity_hetero(self, models, tok, batch):
+        """Mapped packed view == mapped dense view on the receiver."""
+        sess_p = _session(models, tok, 6, 10, InMemoryTransport())
+        sess_d = _session(models, tok, 6, 10,
+                          InMemoryTransport(packed=False))
+        sh_p, _ = sess_p.share_mapped(batch["context"], KVCFG,
+                                      policy="score_greedy")
+        sh_d, _ = sess_d.share_mapped(batch["context"], KVCFG,
+                                      policy="score_greedy")
+        a = sess_p.receiver.prefill(batch["query"], sh_p, max_new=0)
+        b = sess_d.receiver.prefill(batch["query"], sh_d, max_new=0)
+        np.testing.assert_allclose(np.asarray(a.logits),
+                                   np.asarray(b.logits), atol=2e-5)
+
+
+class TestHeteroSession:
+    def test_is_hetero_flag(self, models, tok):
+        assert _session(models, tok, 6, 10).is_hetero
+        assert not _session(models, tok, 6, 6).is_hetero
+
+    def test_is_hetero_sees_ssm_depth_mismatch(self, tok):
+        """Equal attention depth with mismatched SSM depth must still
+        count as heterogeneous (state sharing is positional): the classic
+        path would ship a wrong-depth states stack; share_mapped drops
+        states instead."""
+        from repro.configs.registry import get_config
+        base = dataclasses.replace(get_config("zamba2-2.7b").reduced(),
+                                   dtype="float32",
+                                   vocab_size=tok.vocab_size)
+        # same group count (= attn count) but more mamba layers per group
+        scfg = dataclasses.replace(base, num_layers=2, hybrid_attn_every=2)
+        rcfg = dataclasses.replace(base, num_layers=3, hybrid_attn_every=3)
+        assert scfg.attn_layer_count == rcfg.attn_layer_count == 1
+        sp = tfm.init_params(scfg, jax.random.PRNGKey(0))
+        rp = tfm.init_params(rcfg, jax.random.PRNGKey(1))
+        sess = CommSession(Agent("s", scfg, sp, tok),
+                           Agent("r", rcfg, rp, tok))
+        assert sess.is_hetero
+        rng = np.random.default_rng(0)
+        ctx = rng.integers(4, scfg.vocab_size, (2, 6)).astype(np.int32)
+        qry = rng.integers(4, scfg.vocab_size, (2, 4)).astype(np.int32)
+        with pytest.raises(AssertionError, match="share_mapped"):
+            sess.share(ctx, KVCFG)
+        shared, _ = sess.share_mapped(ctx, KVCFG, policy="identity")
+        assert shared.states is None      # positional states dropped
+        out = sess.receiver.prefill(qry, shared, max_new=0)
+        assert np.isfinite(np.asarray(out.logits)).all()
+
+    def test_nld_flops_priced_per_side(self, models, tok, batch):
+        """nld/cipher run fine across depths (text crosses, not KV), but
+        the sender half of the FLOP bill must use the sender's depth."""
+        from repro.serving import costs
+        cfgs, _ = models
+        res = _session(models, tok, 6, 10).run("nld", batch, nld_tokens=4)
+        C, Q = batch["context"].shape[1], batch["query"].shape[1]
+        assert res.flops == costs.flops_nld(cfgs[10], C, Q, 1, 4,
+                                            sender_cfg=cfgs[6])
+        assert res.flops < costs.flops_nld(cfgs[10], C, Q, 1, 4)
+
+    def test_classic_share_refuses_hetero(self, models, tok, batch):
+        sess = _session(models, tok, 6, 10)
+        with pytest.raises(AssertionError, match="share_mapped"):
+            sess.share(batch["context"], KVCFG)
+        with pytest.raises(AssertionError, match="calibrate_side"):
+            sess.calibrate(batch["context"][:1], batch["query"][:1])
+
+    @pytest.mark.parametrize("method", ["ac_replace", "ac_mean", "ac_sum"])
+    def test_ac_baselines_refuse_hetero(self, models, tok, batch, method):
+        """Hidden-state injection is same-index by construction: it must
+        refuse a depth-mismatched session instead of crashing (6->10) or
+        silently misaligning (10->6)."""
+        for L_s, L_r in ((6, 10), (10, 6)):
+            sess = _session(models, tok, L_s, L_r)
+            with pytest.raises(AssertionError, match="equal depths"):
+                sess.run(method, batch)
+
+    def test_multi_sender_mailbox_refuses_depth_mismatch(self, models,
+                                                         tok, batch):
+        """Mailbox composition indexes the attached sender's KV with
+        receiver-keyed selections — a depth-mismatched sender must be
+        rejected, not silently gather-clamped (mapped multi-sender is a
+        ROADMAP follow-up)."""
+        sess = _session(models, tok, 6, 10)
+        h = sess.attach_sender(sess.sender, name="extra")
+        with pytest.raises(AssertionError, match="depth"):
+            h.send(batch["context"], KVCFG)
+
+    def test_geometry_mismatch_rejected(self, models, tok):
+        cfgs, params = models
+        bad = dataclasses.replace(cfgs[10], num_kv_heads=1)
+        bad_params = tfm.init_params(bad, jax.random.PRNGKey(9))
+        with pytest.raises(AssertionError, match="KV geometry"):
+            CommSession(Agent("s", cfgs[6], params[6], tok),
+                        Agent("r", bad, bad_params, tok))
+
+    def test_per_side_calibration_shapes_and_cache(self, models, tok,
+                                                   batch):
+        sess = _session(models, tok, 6, 10)
+        ctx, qry = batch["context"][:1], batch["query"][:1]
+        s = sess.calibrate_side("sender", ctx, qry, key="t")
+        r = sess.calibrate_side("receiver", ctx, qry, key="t")
+        assert s.shape == (6,) and r.shape == (10,)
+        assert sess.calibrate_side("sender", ctx, qry, key="t") is s
+        sel_s = sess.side_selection("sender", KVCFG, key="t")
+        sel_r = sess.side_selection("receiver", KVCFG, key="t")
+        assert sel_s.shape == (6,) and sel_r.shape == (10,)
+        assert sess.side_selection("sender", KVCFG, key="t") is sel_s
+
+    def test_share_mapped_uses_cached_side_scores(self, models, tok,
+                                                  batch):
+        """Scores calibrated under a task key feed the mapping without
+        being passed explicitly (the frozen-selection discipline)."""
+        sess = _session(models, tok, 6, 10)
+        ctx, qry = batch["context"][:1], batch["query"][:1]
+        sess.calibrate_side("sender", ctx, qry, key="t")
+        sess.calibrate_side("receiver", ctx, qry, key="t")
+        kvcfg = KVCommConfig(ratio=0.5, alpha=1.0, selector="kvcomm")
+        shared, asg = sess.share_mapped(batch["context"], kvcfg,
+                                        policy="score_greedy", key="t")
+        expect_src = core.selected_layer_ids(
+            sess.side_selection("sender", kvcfg, key="t"))
+        assert set(asg.src) <= set(expect_src)
+        assert shared.is_packed and shared.layers == asg.dst

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.selection import (gaussian_prior, kendall_tau,
+from repro.core.selection import (gaussian_prior, interp_scores, kendall_tau,
                                   normalize_scores, select_layers,
                                   selection_scores, topk_mask)
 from repro.core.types import KVCommConfig
@@ -105,6 +105,115 @@ class TestSelection:
         pr = gaussian_prior(16)
         assert np.allclose(np.asarray(out), 0.75 * np.asarray(pr),
                            atol=1e-6)
+
+
+class TestSelectionProperties:
+    """Hypothesis invariants for the primitives the heterogeneous per-side
+    path leans on (each side runs them over its OWN L_attn) — plus the
+    edge cases they surfaced, pinned deterministically below."""
+
+    @given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                    max_size=64),
+           st.integers(-3, 80))
+    @settings(max_examples=60, deadline=None)
+    def test_topk_mask_cardinality(self, vals, m):
+        """|mask| == clamp(m, 0, L) for ANY m, including m <= 0 and
+        m >= L."""
+        scores = jnp.array(vals, jnp.float32)
+        L = scores.shape[0]
+        mask = np.asarray(topk_mask(scores, m))
+        assert mask.sum() == max(0, min(m, L))
+
+    @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                    max_size=32).filter(lambda v: len(set(v)) == len(v)),
+           st.integers(1, 32))
+    @settings(max_examples=60, deadline=None)
+    def test_topk_mask_idempotent(self, vals, m):
+        """Re-selecting from the mask itself (cast to scores) reproduces
+        it: the mask is a fixed point of top-k at the same m."""
+        scores = jnp.array(vals, jnp.float32)
+        mask = topk_mask(scores, m)
+        again = topk_mask(mask.astype(jnp.float32), int(mask.sum()))
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(again))
+
+    @given(st.floats(-1e6, 1e6, allow_nan=False), st.integers(1, 64))
+    @settings(max_examples=40, deadline=None)
+    def test_normalize_constant_input_is_zeros(self, c, L):
+        """Constant (and single-layer) inputs: no NaN, all zeros — top-k
+        then degrades to index order instead of poisoning selection."""
+        s = np.asarray(normalize_scores(jnp.full((L,), c, jnp.float32)))
+        assert np.isfinite(s).all()
+        np.testing.assert_array_equal(s, np.zeros(L))
+
+    @given(st.integers(1, 80), st.floats(0.0, 3.0, allow_nan=False),
+           st.integers(0, 1000))
+    @settings(max_examples=60, deadline=None)
+    def test_select_layers_bounds_any_ratio(self, L, ratio, seed):
+        """1 <= |S| <= L for every ratio, including ratio=0 (m would be 0:
+        clamped to one layer) and ratio > 1 (m would exceed L: clamped)."""
+        cfg = KVCommConfig(ratio=ratio, selector="random", seed=seed)
+        mask = np.asarray(select_layers(None, L, cfg))
+        m = cfg.num_selected(L)
+        assert mask.sum() == m
+        assert 1 <= m <= L
+
+    @given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=1,
+                    max_size=48),
+           st.integers(1, 48))
+    @settings(max_examples=60, deadline=None)
+    def test_interp_scores_shape_and_range(self, vals, L_new):
+        """Resampled per-side scores stay inside the source's hull and
+        land on the requested depth (the hetero anchor-alignment step)."""
+        out = np.asarray(interp_scores(np.array(vals), L_new))
+        assert out.shape == (L_new,)
+        assert out.min() >= min(vals) - 1e-5
+        assert out.max() <= max(vals) + 1e-5
+
+    # -- the deterministic pins for what the properties surfaced ----------
+    def test_topk_mask_m_zero_and_negative(self):
+        scores = jnp.array([3.0, 1.0, 2.0])
+        assert not np.asarray(topk_mask(scores, 0)).any()
+        assert not np.asarray(topk_mask(scores, -5)).any()
+
+    def test_topk_mask_m_above_L(self):
+        assert np.asarray(topk_mask(jnp.array([1.0, 2.0]), 99)).all()
+
+    def test_normalize_single_layer(self):
+        np.testing.assert_array_equal(
+            np.asarray(normalize_scores(jnp.array([7.5]))), [0.0])
+
+    def test_num_selected_clamped_to_layer_count(self):
+        assert KVCommConfig(ratio=2.0).num_selected(8) == 8
+        assert KVCommConfig(ratio=0.0).num_selected(8) == 1
+
+    def test_select_layers_ratio_above_one_is_all(self):
+        mask = select_layers(None, 6, KVCommConfig(ratio=1.5,
+                                                   selector="prior_only"))
+        assert bool(jnp.all(mask))
+
+    def test_contiguous_negative_layer_from_clamps_to_zero(self):
+        cfg = KVCommConfig(ratio=0.5, selector="contiguous", layer_from=-4)
+        idx = np.nonzero(np.asarray(select_layers(None, 8, cfg)))[0]
+        assert list(idx) == [0, 1, 2, 3]
+
+    def test_gaussian_prior_sigma_zero_no_nan(self):
+        p = np.asarray(gaussian_prior(8, mu=4, sigma=0.0))
+        assert np.isfinite(p).all()
+        assert int(np.argmax(p)) == 3    # one-hot at mu (l = 4)
+
+    def test_gaussian_prior_negative_sigma_matches_positive(self):
+        """sigma enters squared: the floor must not change that."""
+        np.testing.assert_array_equal(
+            np.asarray(gaussian_prior(8, mu=4, sigma=-10.0)),
+            np.asarray(gaussian_prior(8, mu=4, sigma=10.0)))
+
+    def test_interp_scores_identity_and_broadcast(self):
+        s = np.array([1.0, 2.0, 3.0])
+        np.testing.assert_allclose(np.asarray(interp_scores(s, 3)), s)
+        np.testing.assert_allclose(np.asarray(interp_scores([5.0], 4)),
+                                   np.full(4, 5.0))
+        np.testing.assert_allclose(np.asarray(interp_scores(s, 5)),
+                                   [1.0, 1.5, 2.0, 2.5, 3.0])
 
 
 class TestKendallTau:

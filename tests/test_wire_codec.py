@@ -1,0 +1,147 @@
+"""Wire-codec characterization for ``SerializedTransport``.
+
+Per-dtype round-trip error bounds (fp32 exact; fp16/bf16 bounded by their
+epsilon; int8 by the symmetric per-layer quantization step) and logit-level
+deltas on the trained pair — the data the ROADMAP "default the serving path
+to int8" item asks for, recorded to ``experiments/wire_codec.json`` by the
+slow trained-pair test.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import Agent, CommSession, SerializedTransport
+from repro.core.types import KVCommConfig
+
+# max |roundtrip - original| as a fraction of the payload's absmax.
+# fp16: 2^-11 mantissa rounding; bf16: 2^-8; int8 symmetric: half a
+# quantization step = absmax/254 per layer. Bounds carry ~2x headroom.
+ERR_BOUND = {
+    "float32": 0.0,
+    "float16": 1e-3,
+    "bfloat16": 8e-3,
+    "int8": 8e-3,
+}
+
+
+def _payload(tiny_cfg, tiny_params):
+    ctx = jax.random.randint(jax.random.PRNGKey(5), (2, 10), 4,
+                             tiny_cfg.vocab_size)
+    kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+    return kv
+
+
+class TestRoundTripBounds:
+    @pytest.mark.parametrize("wire_dtype", sorted(ERR_BOUND))
+    def test_kv_roundtrip_error_bounded(self, tiny_cfg, tiny_params,
+                                        wire_dtype):
+        kv = _payload(tiny_cfg, tiny_params)
+        select = jnp.array([True, True, False, True])
+        t = SerializedTransport(wire_dtype)
+        shared = t.send(tiny_cfg, KVCommConfig(), kv, select)
+        idx = np.nonzero(np.asarray(select))[0]
+        for part in ("k", "v"):
+            orig = np.asarray(kv[part])[idx]
+            rt = np.asarray(shared.packed_kv[part])
+            err = np.max(np.abs(rt - orig))
+            bound = ERR_BOUND[wire_dtype] * np.max(np.abs(orig))
+            if wire_dtype == "float32":
+                assert err == 0.0, "lossless wire must be bit-exact"
+            else:
+                assert err <= bound, (wire_dtype, err, bound)
+
+    def test_bytes_ordering_across_dtypes(self, tiny_cfg, tiny_params):
+        """int8 < fp16 == bf16 < fp32 for the same payload; int8 overhead
+        is exactly the shipped fp32 per-layer scales."""
+        kv = _payload(tiny_cfg, tiny_params)
+        select = jnp.array([True, False, True, False])
+        n = {}
+        for wd in ERR_BOUND:
+            t = SerializedTransport(wd)
+            t.send(tiny_cfg, KVCommConfig(), kv, select)
+            n[wd] = t.total_bytes
+        assert n["int8"] < n["float16"] == n["bfloat16"] < n["float32"]
+        assert n["float32"] == 2 * n["float16"]
+        # k and v each ship one fp32 scale per selected layer
+        assert n["int8"] == n["float16"] // 2 + 2 * 2 * 4
+
+    @pytest.mark.parametrize("wire_dtype", ["float16", "bfloat16", "int8"])
+    def test_int8_scales_are_per_layer(self, tiny_cfg, tiny_params,
+                                       wire_dtype):
+        """A layer with tiny values must not inherit a loud layer's scale:
+        per-layer relative error stays bounded even when layer magnitudes
+        differ by orders of magnitude."""
+        kv = _payload(tiny_cfg, tiny_params)
+        # amplify one selected layer by 100x
+        scaled = {p: np.asarray(kv[p]).copy() for p in ("k", "v")}
+        for p in scaled:
+            scaled[p][0] *= 100.0
+            kv_s = {q: jnp.asarray(scaled[q]) for q in scaled}
+        select = jnp.array([True, True, False, False])
+        t = SerializedTransport(wire_dtype)
+        shared = t.send(tiny_cfg, KVCommConfig(), kv_s, select)
+        for p in ("k", "v"):
+            quiet_orig = np.asarray(kv_s[p])[1]
+            quiet_rt = np.asarray(shared.packed_kv[p])[1]
+            err = np.max(np.abs(quiet_rt - quiet_orig))
+            assert err <= ERR_BOUND[wire_dtype] * np.max(np.abs(quiet_orig))
+
+
+@pytest.mark.slow
+class TestTrainedPairLogitDeltas:
+    """Codec quality where it matters: receiver logits on the trained pair
+    (restored from the cached checkpoint; quick-trains on a cold machine,
+    hence slow). Deltas are recorded to experiments/wire_codec.json so the
+    int8-by-default decision has numbers attached."""
+
+    def test_logit_deltas_and_record(self):
+        from repro.data.synthetic import SyntheticTask, TaskConfig
+        from repro.launch.pairs import CKPT_DIR, load_pair
+
+        cfg, tok, s_params, r_params = load_pair()
+        task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=6,
+                                             seed=7))
+        batch = task.batch(16)
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+
+        logits, preds, nbytes = {}, {}, {}
+        for wd in ("float32", "float16", "bfloat16", "int8"):
+            sess = CommSession(Agent("s", cfg, s_params, tok),
+                               Agent("r", cfg, r_params, tok),
+                               SerializedTransport(wd))
+            shared, _ = sess.share(batch["context"], kvcfg)
+            out = sess.receiver.prefill(batch["query"], shared, max_new=0)
+            logits[wd] = np.asarray(out.logits[:, -1, :])
+            preds[wd] = np.argmax(logits[wd], axis=-1)
+            nbytes[wd] = sess.transport.total_bytes
+
+        record = {"task": "retrieval6", "batch": 16,
+                  "ratio": kvcfg.ratio, "wire": {}}
+        scale = float(np.max(np.abs(logits["float32"])))
+        for wd in ("float16", "bfloat16", "int8"):
+            delta = float(np.max(np.abs(logits[wd] - logits["float32"])))
+            agree = float(np.mean(preds[wd] == preds["float32"]))
+            record["wire"][wd] = {
+                "bytes": nbytes[wd],
+                "bytes_vs_fp32": nbytes[wd] / nbytes["float32"],
+                "max_logit_delta": delta,
+                "max_logit_delta_rel": delta / scale,
+                "pred_agreement": agree,
+            }
+            # the assertions behind "int8 is safe to default to": logit
+            # perturbation stays a small fraction of the logit range and
+            # argmax decisions survive it
+            assert delta <= 0.05 * scale, (wd, delta, scale)
+            assert agree >= 0.9, (wd, agree)
+
+        os.makedirs(os.path.dirname(CKPT_DIR), exist_ok=True)
+        out_path = os.path.join(os.path.dirname(CKPT_DIR),
+                                "wire_codec.json")
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        assert os.path.exists(out_path)
