@@ -10,7 +10,10 @@ prefix, then decodes ``STEPS`` tokens twice —
            cache donated, so steady-state decode updates buffers in place.
 
 Writes ``BENCH_decode.json`` at the repo root: prefill ms, steady-state
-tokens/s for both paths, speedup, per ratio in {0.3, 0.5, 1.0}.
+tokens/s for both paths, speedup, per (ratio in {0.3, 0.5, 1.0}, batch in
+{1, BATCH}) — the batch axis matches the slot-table capacities
+``BENCH_serve.json`` (the continuous-batching scheduler) reports on, so
+the two benches share axes.
 """
 from __future__ import annotations
 
@@ -37,8 +40,8 @@ def _sync(x):
     return x
 
 
-def bench_ratio(session, cfg, tok, ratio: float) -> dict:
-    b = common.eval_batch(tok, "countries", BATCH)
+def bench_ratio(session, cfg, tok, ratio: float, batch: int = BATCH) -> dict:
+    b = common.eval_batch(tok, "countries", batch)
     kvcfg = KVCommConfig(ratio=ratio, selector="prior_only")
     shared, select = session.share(b["context"], kvcfg)
     rx = session.receiver
@@ -77,10 +80,11 @@ def bench_ratio(session, cfg, tok, ratio: float) -> dict:
     _sync(t)
     jit_s = time.perf_counter() - t0
 
-    eager_tps = STEPS * BATCH / eager_s
-    jit_tps = STEPS * BATCH / jit_s
+    eager_tps = STEPS * batch / eager_s
+    jit_tps = STEPS * batch / jit_s
     return {
         "M": int(np.asarray(select).sum()),
+        "batch": batch,
         "prefill_ms": round(prefill_ms, 3),
         "eager_tokens_per_s": round(eager_tps, 1),
         "jitted_donated_tokens_per_s": round(jit_tps, 1),
@@ -95,13 +99,20 @@ def run(emit=common.emit) -> dict:
                    "L": cfg.attn_layer_count, "d_model": cfg.d_model},
         "ratios": {},
     }
+    # batch > 1 shares the axis with BENCH_serve.json's slot table: the
+    # jitted step at batch B is the scheduler's per-iteration unit cost
     for ratio in (0.3, 0.5, 1.0):
-        r = bench_ratio(session, cfg, tok, ratio)
-        out["ratios"][str(ratio)] = r
-        emit(f"decode/ratio_{ratio}", 0.0,
-             f"eager={r['eager_tokens_per_s']}tok/s;"
-             f"jit={r['jitted_donated_tokens_per_s']}tok/s;"
-             f"x{r['speedup']}")
+        per_batch = {}
+        for batch in sorted({1, BATCH}):
+            r = bench_ratio(session, cfg, tok, ratio, batch=batch)
+            per_batch[str(batch)] = r
+            emit(f"decode/ratio_{ratio}/b{batch}", 0.0,
+                 f"eager={r['eager_tokens_per_s']}tok/s;"
+                 f"jit={r['jitted_donated_tokens_per_s']}tok/s;"
+                 f"x{r['speedup']}")
+        # keep the per-ratio top level pointing at the deployment batch
+        out["ratios"][str(ratio)] = {**per_batch[str(BATCH)],
+                                     "batches": per_batch}
     out["min_speedup"] = min(r["speedup"] for r in out["ratios"].values())
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)

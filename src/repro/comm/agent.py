@@ -84,12 +84,15 @@ class Agent:
 
     # ---- receiver role ----------------------------------------------------
     def prefill(self, tokens, shared: Optional[SharedKV] = None,
-                max_new: int = 1, extra=None):
+                max_new: int = 1, extra=None, prefix_lens=None):
         """Prefill over ``tokens`` with an optional sender prefix; the cache
-        is sized for ``max_new`` further decode steps."""
+        is sized for ``max_new`` further decode steps. ``prefix_lens``
+        marks per-row real prefix lengths under a bucket-padded prefix
+        (``core.pad_prefix``)."""
         return core.receiver_prefill(self.params, self.cfg,
                                      jnp.asarray(tokens), shared,
-                                     max_new=max_new, extra=extra)
+                                     max_new=max_new, extra=extra,
+                                     prefix_lens=prefix_lens)
 
     def decode(self, token, cache, shared: Optional[SharedKV] = None):
         """One greedy decode step, eager dispatch; ``token`` is (B, 1)."""
@@ -101,6 +104,16 @@ class Agent:
         donated — the steady-state serving path. Returns
         (next_token (B, 1), last_logits, new_cache); ``cache`` is consumed."""
         return core.decode_step(self.params, self.cfg, token, cache, shared)
+
+    def ragged_step(self, tokens, cache, shared: Optional[SharedKV],
+                    prefix_lens, active):
+        """One continuous-batching iteration over a slot-table cache: one
+        donated compiled call advances every live slot by a token (rows sit
+        at different generation offsets; per-row lengths mask the ragged
+        tails). Returns (next_tokens, logits, new cache); ``cache`` is
+        consumed."""
+        return core.ragged_decode_step(self.params, self.cfg, tokens, cache,
+                                       shared, prefix_lens, active)
 
     def generate(self, tokens, shared: Optional[SharedKV] = None,
                  max_new: int = 32, extra=None):

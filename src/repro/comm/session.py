@@ -198,10 +198,14 @@ class CommSession:
     # ---- one communication round -----------------------------------------
     def share(self, context: np.ndarray, kvcfg: KVCommConfig,
               scores: Optional[jnp.ndarray] = None,
-              key: Optional[str] = None
+              key: Optional[str] = None,
+              sync: Optional[bool] = None
               ) -> Tuple[SharedKV, jnp.ndarray]:
         """Primary-sender round: prefill the context, select layers, push
-        through the transport. Returns (receiver-side SharedKV, select)."""
+        through the transport. Returns (receiver-side SharedKV, select).
+        ``sync=False`` keeps the whole round async-dispatched (no host
+        block; the transfer latency stamp is deferred — the serving
+        scheduler's hot path)."""
         assert not self.is_hetero, \
             "sender and receiver disagree on depth; use share_mapped " \
             "(or the 'hetero_kvcomm' method) with a LayerMap policy"
@@ -209,14 +213,15 @@ class CommSession:
         kv, states, _ = self.sender.export_kv(context)
         state_select = self._state_selection(kvcfg, states)
         shared = self.transport.send(self.cfg, kvcfg, kv, select,
-                                     states, state_select)
+                                     states, state_select, sync=sync)
         return shared, select
 
     def share_mapped(self, context: np.ndarray, kvcfg: KVCommConfig,
                      policy: str = "depth_proportional",
                      src_scores: Optional[jnp.ndarray] = None,
                      dst_scores: Optional[jnp.ndarray] = None,
-                     key: Optional[str] = None
+                     key: Optional[str] = None,
+                     sync: Optional[bool] = None
                      ) -> Tuple[SharedKV, "core.LayerAssignment"]:
         """Heterogeneous-sender round: selection runs on the SENDER side
         over its own L_attn, the ``policy`` LayerMap places the selected
@@ -251,7 +256,7 @@ class CommSession:
         state_select = self._state_selection(kvcfg, states)
         shared = self.transport.send(self.cfg, kvcfg, kv, None,
                                      states, state_select,
-                                     assignment=assignment)
+                                     assignment=assignment, sync=sync)
         return shared, assignment
 
     # ---- multi-sender (§J) ------------------------------------------------

@@ -113,11 +113,26 @@ def assignment_bytes(kv, assignment: LayerAssignment,
 class Transport(abc.ABC):
     """A byte-accounted link M_s -> M_r. Subclasses define what physically
     crosses and how it is counted; the log format and per-transfer latency
-    stamping are shared."""
+    stamping are shared.
 
-    def __init__(self, packed: bool = True) -> None:
+    Latency stamping and the serving hot path: a synced stamp
+    (``sync=True``) calls ``block_until_ready`` on the produced view —
+    exact per-transfer device time, but it serializes the host against the
+    device and thereby kills the overlap an async scheduler builds
+    (sender-side export/gather/wire-cast enqueue while the receiver is
+    mid-decode). ``sync=False`` returns the un-synced view immediately and
+    parks the record on a deferred-stamp log; ``flush_latency()`` (or the
+    next synced send) settles it. Deferred stamps measure enqueue->drain
+    wall clock — an overlap-inclusive upper bound, fine for accounting;
+    benchmarks that need the true isolated transfer cost keep
+    ``sync=True`` (the constructor default)."""
+
+    def __init__(self, packed: bool = True, sync: bool = True) -> None:
         self.log: List[TransferRecord] = []
         self.packed = packed
+        self.sync = sync
+        # deferred-stamp log: (record, t0, un-synced receiver view)
+        self._pending: List[tuple] = []
 
     @property
     def total_bytes(self) -> int:
@@ -127,9 +142,40 @@ class Transport(abc.ABC):
     def last(self) -> TransferRecord:
         return self.log[-1]
 
+    def flush_latency(self) -> int:
+        """Settle every deferred stamp: block on the parked views and write
+        each record's ``latency_s`` (enqueue->drain wall clock). Returns
+        the number of records stamped."""
+        n = len(self._pending)
+        for rec, t0, shared in self._pending:
+            jax.block_until_ready(shared)
+            rec.latency_s = time.perf_counter() - t0
+        self._pending.clear()
+        return n
+
+    def poll_latency(self) -> int:
+        """Non-blocking ``flush_latency``: stamp (and release) only the
+        deferred records whose transfers have already drained. The serving
+        scheduler calls this once per iteration so the pending log — which
+        pins each transfer's receiver-side view on device — stays bounded
+        by the transfers genuinely in flight, not by the stream length.
+        Returns the number of records stamped."""
+        still = []
+        n = 0
+        for rec, t0, shared in self._pending:
+            if all(x.is_ready() for x in jax.tree.leaves(shared)
+                   if hasattr(x, "is_ready")):
+                rec.latency_s = time.perf_counter() - t0
+                n += 1
+            else:
+                still.append((rec, t0, shared))
+        self._pending = still
+        return n
+
     def send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
              states=None, state_select=None,
-             assignment: Optional[LayerAssignment] = None) -> SharedKV:
+             assignment: Optional[LayerAssignment] = None,
+             sync: Optional[bool] = None) -> SharedKV:
         """Move the selected KV (and states) across; return the receiver-side
         view and record a latency-stamped TransferRecord.
 
@@ -139,17 +185,32 @@ class Transport(abc.ABC):
         the receiver will consume crosses) and the view is keyed by its
         receiver slots (``dst``). The record's ``layers`` is the mapped
         pair count, so byte accounting tracks M_receiver, not M_sender.
+
+        ``sync`` overrides the transport-level default: True blocks for an
+        exact device-synced stamp (the hot-path serializer this flag
+        exists to avoid); False/None-with-async-default defers the stamp
+        to ``flush_latency``.
         """
+        do_sync = self.sync if sync is None else sync
+        if do_sync:
+            # settle older deferred stamps first — BEFORE this transfer's
+            # timer starts, so their drain time cannot inflate it
+            self.flush_latency()
         t0 = time.perf_counter()
         if assignment is not None:
             shared = self._send_mapped(cfg, kvcfg, kv, assignment,
                                        states, state_select)
         else:
             shared = self._send(cfg, kvcfg, kv, select, states, state_select)
-        # wall clock around async JAX dispatch measures enqueue, not
-        # compute: sync the produced view before stopping the timer
-        jax.block_until_ready(shared)
-        self.log[-1].latency_s = time.perf_counter() - t0
+        if do_sync:
+            # wall clock around async JAX dispatch measures enqueue, not
+            # compute: sync the produced view before stopping the timer
+            jax.block_until_ready(shared)
+            self.log[-1].latency_s = time.perf_counter() - t0
+        else:
+            # keep the serving pipeline rolling: stamp off the critical
+            # path when the caller (or a benchmark) next flushes
+            self._pending.append((self.log[-1], t0, shared))
         return shared
 
     @abc.abstractmethod
@@ -245,8 +306,8 @@ class SerializedTransport(Transport):
     """
 
     def __init__(self, wire_dtype: str = "float16",
-                 packed: bool = True) -> None:
-        super().__init__(packed=packed)
+                 packed: bool = True, sync: bool = True) -> None:
+        super().__init__(packed=packed, sync=sync)
         if wire_dtype not in _WIRE_DTYPES:
             raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                              f"one of {sorted(_WIRE_DTYPES)}")

@@ -7,7 +7,8 @@ from repro.core.protocol import (build_mapped, build_packed, build_shared,
                                  calibrate, decode_step, extract_kv,
                                  extract_states, gather_mapped,
                                  gather_selected, generate, make_selection,
-                                 pack_mapped, pack_shared, receiver_decode,
+                                 pack_mapped, pack_shared, pad_prefix,
+                                 ragged_decode_step, receiver_decode,
                                  receiver_prefill, scatter_mapped,
                                  selected_layer_ids, sender_prefill,
                                  transmit)
@@ -23,7 +24,8 @@ __all__ = [
     "extract_kv", "extract_states", "gather_mapped", "gather_selected",
     "gaussian_prior", "generate", "get_layer_map", "interp_scores",
     "kendall_tau", "kv_wire_bytes", "make_selection", "normalize_scores",
-    "pack_mapped", "pack_shared", "receiver_decode", "receiver_prefill",
+    "pack_mapped", "pack_shared", "pad_prefix", "ragged_decode_step",
+    "receiver_decode", "receiver_prefill",
     "register_layer_map", "scatter_mapped", "select_layers",
     "selected_layer_ids", "selection_scores", "sender_prefill", "topk_mask",
     "transmit",

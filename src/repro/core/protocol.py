@@ -16,6 +16,7 @@ batching and scheduling.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -27,6 +28,12 @@ from repro.configs.base import ModelConfig
 from repro.core.selection import normalize_scores, select_layers
 from repro.core.types import KVCommConfig, SharedKV
 from repro.models import transformer as tfm
+
+# Trace-count hook: each jitted entry point bumps its counter ONCE per
+# compile (the Python body only runs while tracing), so tests can pin the
+# no-retrace guarantee — e.g. one ragged decode-step compile per (selection
+# bitmask, slot-table geometry), never per request.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 # ---------------------------------------------------------------------------
@@ -246,20 +253,27 @@ def scatter_mapped(kvcfg: KVCommConfig, payload, assignment,
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "max_new", "collect_mass"))
 def _receiver_prefill_jit(params, cfg, query_tokens, shared, max_new,
-                          extra, collect_mass=False):
+                          extra, collect_mass=False, prefix_lens=None):
+    TRACE_COUNTS["receiver_prefill"] += 1
     B, Sq = query_tokens.shape
     cache = tfm.init_cache(cfg, B, Sq + max_new, shared=shared)
     return tfm.apply_model(params, cfg, query_tokens, mode="cached",
                            cache=cache, shared=shared, extra=extra,
-                           collect_mass=collect_mass)
+                           collect_mass=collect_mass,
+                           prefix_lens=prefix_lens)
 
 
 def receiver_prefill(params, cfg: ModelConfig, query_tokens,
                      shared: Optional[SharedKV], max_new: int = 64,
-                     extra=None):
-    """Prefill Q with the sender prefix integrated; cache sized for decode."""
+                     extra=None, prefix_lens=None):
+    """Prefill Q with the sender prefix integrated; cache sized for decode.
+
+    ``prefix_lens`` (per-row (B,) int32) marks each row's REAL prefix
+    length when ``shared`` was bucket-padded (``pad_prefix``): the pad tail
+    is masked out of attention and self positions continue from the real
+    length, so a padded prefill answers exactly like an unpadded one."""
     return _receiver_prefill_jit(params, cfg, query_tokens, shared,
-                                 max_new, extra)
+                                 max_new, extra, prefix_lens=prefix_lens)
 
 
 def receiver_decode(params, cfg: ModelConfig, token, cache,
@@ -276,6 +290,7 @@ def receiver_decode(params, cfg: ModelConfig, token, cache,
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
 def _decode_step_jit(params, cfg, token, cache, shared):
+    TRACE_COUNTS["decode_step"] += 1
     out = tfm.apply_model(params, cfg, token, mode="cached", cache=cache,
                           shared=shared, logits_mode="last")
     next_tok = jnp.argmax(out.logits[:, -1, :], axis=-1)
@@ -300,6 +315,70 @@ def decode_step(params, cfg: ModelConfig, token, cache,
                                                jnp.asarray(token), cache,
                                                meta)
     return next_tok[:, None], logits, cache
+
+
+def pad_prefix(shared: SharedKV, prefix_len: int) -> SharedKV:
+    """Zero-pad the shared prefix along Sc up to the bucket ``prefix_len``.
+
+    The pad region ``[shared.prefix_len, prefix_len)`` is masked out of
+    receiver attention by per-row ``prefix_lens`` (see ``receiver_prefill``
+    / ``ragged_decode_step``), so the fill value is never read — padding
+    exists purely so every request in a continuous-batching slot table
+    shares one compiled cache geometry. Works on packed and dense views."""
+    if shared.prefix_len == prefix_len:
+        return shared
+    assert shared.prefix_len < prefix_len, \
+        f"cannot shrink a prefix ({shared.prefix_len} -> {prefix_len})"
+    pad = prefix_len - shared.prefix_len
+
+    def pad_kv(kvd):
+        if kvd is None:
+            return None
+        return {p: jnp.pad(kvd[p],
+                           ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                for p in ("k", "v")}
+
+    return SharedKV(kv=pad_kv(shared.kv), select=shared.select,
+                    states=shared.states, state_select=shared.state_select,
+                    prefix_len=prefix_len, pos_mode=shared.pos_mode,
+                    packed_kv=pad_kv(shared.packed_kv),
+                    layers=shared.layers, src_layers=shared.src_layers)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+def _ragged_decode_step_jit(params, cfg, tokens, cache, shared,
+                            prefix_lens, active):
+    TRACE_COUNTS["ragged_decode_step"] += 1
+    out = tfm.apply_model(params, cfg, tokens, mode="cached", cache=cache,
+                          shared=shared, logits_mode="last",
+                          prefix_lens=prefix_lens)
+    cache = out.cache
+    # finished/empty rows do not advance: their length (and therefore their
+    # write cursor) is frozen, so a dead slot rewrites its own masked
+    # position forever instead of walking off the buffer, and live rows —
+    # batch-independent throughout the model — never see them
+    cache["len"] = jnp.where(active, cache["len"], cache["len"] - 1)
+    logits = out.logits[:, -1, :]
+    return jnp.argmax(logits, axis=-1), logits, cache
+
+
+def ragged_decode_step(params, cfg: ModelConfig, tokens, cache,
+                       shared: Optional[SharedKV], prefix_lens, active):
+    """One continuous-batching iteration over a slot-table cache.
+
+    ``cache`` is a B==capacity serving cache whose per-row ``len`` tracks
+    each slot's own write cursor (requests sit at different generation
+    offsets); ``prefix_lens`` (capacity,) carries per-row REAL prefix
+    lengths inside the bucket and ``active`` (capacity,) masks live slots.
+    ONE donated compiled call advances every live row by one token —
+    specialization is per (frozen selection, table geometry), never per
+    request. Returns (next_tokens (capacity,), logits, new cache);
+    ``cache`` is consumed.
+    """
+    meta = shared.meta() if shared is not None else None
+    return _ragged_decode_step_jit(params, cfg, jnp.asarray(tokens), cache,
+                                   meta, jnp.asarray(prefix_lens),
+                                   jnp.asarray(active))
 
 
 def generate(params, cfg: ModelConfig, query_tokens, shared=None,

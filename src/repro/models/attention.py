@@ -82,12 +82,19 @@ def self_attention(
     causal: bool = True,
     use_rope: bool = True,
     window: Optional[int] = None,           # static per layer-run
-    pos_shift,                              # scalar (traced): position offset
+    pos_shift,                              # scalar or (B,) (traced): offset
     prefix_len: int = 0,                    # static: sender prefix length
+                                            # (the BUFFER size; per-row real
+                                            # lengths ride in prefix_lens)
     ctx_valid: Optional[jnp.ndarray] = None,  # scalar bool: layer selected?
     cache_k: Optional[jnp.ndarray] = None,  # (B, Smax, Hkv, Dh)
     cache_v: Optional[jnp.ndarray] = None,
-    cache_len=None,                         # scalar: valid entries (>=prefix)
+    cache_len=None,                         # scalar or (B,): valid entries
+                                            # (>= prefix; per-row = ragged
+                                            # continuous-batching rows)
+    prefix_lens: Optional[jnp.ndarray] = None,  # (B,) real prefix lengths
+                                            # (<= prefix_len); bucket pad
+                                            # [real, prefix_len) is masked
     collect_mass: bool = False,
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], Optional[jnp.ndarray]]:
     """Returns (out, (new_cache_k, new_cache_v) or (k, v), mass)."""
@@ -108,16 +115,27 @@ def self_attention(
         return out.reshape(B, S, -1) @ p["wo"], (k, v), mass
 
     # ---- cached: prefill (S>1) or decode (S==1) ----
+    # Ragged rows (continuous batching): cache_len / pos_shift may carry a
+    # batch axis and prefix_lens gives each row's REAL prefix length inside
+    # the shared bucket. Scalar everything restores the classic uniform
+    # path unchanged.
+    ragged = (jnp.ndim(cache_len) > 0 or jnp.ndim(pos_shift) > 0
+              or prefix_lens is not None)
     self_idx = cache_len - prefix_len                    # index of x[0]
-    q_pos = pos_shift + self_idx + jnp.arange(S)
+    if ragged:
+        base = jnp.broadcast_to(jnp.asarray(pos_shift + self_idx), (B,))
+        q_pos = base[:, None] + jnp.arange(S)[None]      # (B, S)
+    else:
+        q_pos = pos_shift + self_idx + jnp.arange(S)
     if use_rope:
-        pb = jnp.broadcast_to(q_pos[None], (B, S))
+        pb = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos[None],
+                                                            (B, S))
         q = rope(q, pb, cfg.rope_theta)
         k = rope(k, pb, cfg.rope_theta)
 
     Smax = cache_k.shape[1]
     ring = (cfg.ring_cache and window is not None and Smax == window
-            and prefix_len == 0)
+            and prefix_len == 0 and not ragged)
     if ring:
         # vLLM-style ring buffer: slot for absolute index i is i % W.
         W = Smax
@@ -153,19 +171,41 @@ def self_attention(
             kv_valid=valid, causal=causal, window=window, mass_mask=None)
         return out.reshape(B, S, -1) @ p["wo"], (ck, cv), mass
 
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
-    idx = jnp.arange(Smax)
-    if prefix_len:
-        kv_pos = jnp.where(idx < prefix_len, idx,
-                           pos_shift + (idx - prefix_len))
+    if ragged:
+        # per-row write offsets: each slot appends at its own length
+        start = jnp.minimum(jnp.broadcast_to(cache_len, (B,)), Smax - S)
+        upd = jax.vmap(
+            lambda c, x, s: jax.lax.dynamic_update_slice_in_dim(
+                c, x, s, axis=0))
+        ck = upd(cache_k, k.astype(cache_k.dtype), start)
+        cv = upd(cache_v, v.astype(cache_v.dtype), start)
     else:
-        kv_pos = pos_shift + idx   # packed unselected / plain serving cache
-    valid = idx < cache_len + S
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    idx = jnp.arange(Smax)
+    shift2 = (jnp.broadcast_to(pos_shift, (B,))[:, None]
+              if ragged else None)                       # (B, 1)
+    if prefix_len:
+        kv_pos = (jnp.where(idx[None] < prefix_len, idx[None],
+                            shift2 + (idx[None] - prefix_len))
+                  if ragged else
+                  jnp.where(idx < prefix_len, idx,
+                            pos_shift + (idx - prefix_len)))
+    else:
+        kv_pos = (shift2 + idx[None]) if ragged else pos_shift + idx
+    if ragged:
+        valid = idx[None] < (jnp.broadcast_to(cache_len, (B,)) + S)[:, None]
+        if prefix_len and prefix_lens is not None:
+            # bucket pad [real, prefix_len) never holds sender KV
+            valid = valid & ~((idx[None] >= prefix_lens[:, None])
+                              & (idx[None] < prefix_len))
+    else:
+        valid = idx < cache_len + S
     if prefix_len and ctx_valid is not None:
-        valid = valid & jnp.where(idx < prefix_len, ctx_valid, True)
+        cvm = jnp.where(idx < prefix_len, ctx_valid, True)
+        valid = valid & (cvm[None] if ragged else cvm)
     mass_mask = ((idx < prefix_len) if (collect_mass and prefix_len)
                  else None)
     # decode (S == 1): every valid slot precedes the query by construction

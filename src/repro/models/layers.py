@@ -78,7 +78,7 @@ def attention_core(
     v: jnp.ndarray,               # (B, Skv, Hkv, D)
     *,
     q_pos: jnp.ndarray,           # (Sq,) or (B, Sq) absolute positions
-    kv_pos: jnp.ndarray,          # (Skv,) absolute positions
+    kv_pos: jnp.ndarray,          # (Skv,) or (B, Skv) absolute positions
     kv_valid: Optional[jnp.ndarray] = None,   # (Skv,) or (B, Skv) bool
     causal: bool = True,
     window: Optional[jnp.ndarray] = None,     # None | int | traced scalar
@@ -99,9 +99,14 @@ def attention_core(
 
     if q_pos.ndim == 1:
         q_pos = q_pos[None, :]                       # (1|B, Sq)
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None, :]                     # (1|B, Skv) — per-row
+                                                     # positions for ragged
+                                                     # (continuous-batch) rows
     qp = q_pos[:, None, None, :, None].astype(jnp.int32)      # (B,1,1,Sq,1)
-    kp = kv_pos[None, None, None, None, :].astype(jnp.int32)  # (1,1,1,1,Skv)
-    allow = jnp.ones((q_pos.shape[0], 1, 1, Sq, Skv), dtype=bool)
+    kp = kv_pos[:, None, None, None, :].astype(jnp.int32)     # (B,1,1,1,Skv)
+    allow = jnp.ones((max(q_pos.shape[0], kv_pos.shape[0]), 1, 1, Sq, Skv),
+                     dtype=bool)
     if causal:
         allow = allow & (kp <= qp)
     if window is not None:

@@ -294,6 +294,41 @@ def _init_cache_packed(cfg: ModelConfig, batch: int, max_len: int,
     return {"len": jnp.asarray(prefix_len, jnp.int32), "runs": runs}
 
 
+def cache_insert_row(table: Dict[str, Any], row: Dict[str, Any], slot,
+                     *, src_prefix: int, dst_prefix: int,
+                     row_max_len: int) -> Dict[str, Any]:
+    """Copy the single row of a B==1 serving cache into row ``slot`` of a
+    B==capacity slot-table cache (continuous batching admission).
+
+    Buffers are matched leaf-by-leaf: same sequence capacity copies the row
+    straight across; a smaller prefix-free buffer (its capacity equals the
+    request's ``row_max_len`` = query bucket + decode budget) lands at
+    offset 0; a prefix-carrying buffer whose capacity differs (the request
+    was prefilled at a smaller prefix bucket ``src_prefix`` than the
+    table's ``dst_prefix``) is copied as two segments — prefix
+    ``[0, src_prefix)`` stays put, the self region moves from ``src_prefix``
+    to ``dst_prefix``. Sound because KV entries are position-rotated by
+    ABSOLUTE position, never by buffer offset. ``ctx_valid`` (per-layer
+    selection flags, identical across rows of one frozen selection) and
+    ``len`` (scheduler-owned, per-row) are left untouched. Jit-friendly;
+    ``slot`` may be traced."""
+    def put(path, t, r):
+        name = getattr(path[-1], "key", None)
+        if name in ("ctx_valid", "len"):
+            return t
+        if t.ndim < 3 or t.shape[2] == r.shape[2]:
+            return t.at[:, slot].set(r[:, 0])
+        if r.shape[2] == row_max_len:        # prefix-free, smaller bucket
+            return t.at[:, slot, :r.shape[2]].set(r[:, 0])
+        self_len = r.shape[2] - src_prefix
+        t = t.at[:, slot, :src_prefix].set(r[:, 0, :src_prefix])
+        return t.at[:, slot, dst_prefix:dst_prefix + self_len].set(
+            r[:, 0, src_prefix:])
+    new_runs = jax.tree_util.tree_map_with_path(put, table["runs"],
+                                                row["runs"])
+    return {"len": table["len"], "runs": new_runs}
+
+
 def _seed_states(st, shared, ssm_i, n):
     sel = shared.state_select[ssm_i:ssm_i + n]
     def blend(z, s):
@@ -337,6 +372,7 @@ def _attn_layer_body(cfg, spec, mode, prefix_len, collect_mass, enc_out,
             cache_k=(cache or {}).get("k"),
             cache_v=(cache or {}).get("v"),
             cache_len=per.get("cache_len"),
+            prefix_lens=per.get("prefix_lens"),
             collect_mass=collect_mass,
         )
         x = x + out
@@ -399,7 +435,7 @@ def _ssm_layer_body(cfg, spec, mode):
 
 def _apply_packed_attn_run(run_p, cfg, spec, x, run_cache, *, shared,
                            attn_i, cache_len, prefix_len, collect_mass,
-                           capture_hidden, enc_out):
+                           capture_hidden, enc_out, prefix_lens=None):
     """Execute one attention run under the selection-specialized fast path.
 
     The run's stacked params are partitioned (static, host-gathered and
@@ -430,12 +466,25 @@ def _apply_packed_attn_run(run_p, cfg, spec, x, run_cache, *, shared,
                           else run_cache[name][kk][s0:s0 + ln])
                      for kk in cache_keys}
         pfx = prefix_len if is_sel else 0
-        shift = 0 if (zero_unsel and not is_sel) else prefix_len
         clen = cache_len if is_sel else cache_len - prefix_len
+        if prefix_lens is not None:
+            # ragged rows: the positional shift is each row's REAL prefix
+            # length (the bucket pad must not displace self positions)
+            rows = (jnp.zeros_like(prefix_lens)
+                    if (zero_unsel and not is_sel) else prefix_lens)
+            shift_arr = jnp.broadcast_to(rows[None],
+                                         (ln,) + prefix_lens.shape)
+        else:
+            shift = 0 if (zero_unsel and not is_sel) else prefix_len
+            shift_arr = jnp.full((ln,), shift, jnp.int32)
         per = {"params": sub_p,
-               "pos_shift": jnp.full((ln,), shift, jnp.int32),
+               "pos_shift": shift_arr,
                "cache": sub_cache,
-               "cache_len": jnp.broadcast_to(clen, (ln,))}
+               "cache_len": jnp.broadcast_to(clen,
+                                             (ln,) + jnp.shape(clen))}
+        if prefix_lens is not None and is_sel:
+            per["prefix_lens"] = jnp.broadcast_to(
+                prefix_lens[None], (ln,) + prefix_lens.shape)
         body = _attn_layer_body(cfg, spec, "cached", pfx, collect_mass,
                                 enc_out, capture_hidden=capture_hidden)
         x, ys = _run_scan(body, x, per, remat=False, unroll=cfg.scan_unroll)
@@ -518,6 +567,9 @@ def apply_model(
                                          # hidden at every attn layer input
     inject: Optional[Dict[str, Any]] = None,
     # inject = {"vec": (L_attn,B,D), "mask": (L_attn,), "mode": str}
+    prefix_lens: Optional[jnp.ndarray] = None,
+    # (B,) real per-row prefix lengths when the shared prefix is bucket-
+    # padded (ragged continuous batching); None = every row fills the bucket
 ) -> ModelOut:
     B, S = tokens.shape
     if shared is not None and shared.is_packed and mode != "cached":
@@ -526,6 +578,14 @@ def apply_model(
         shared = shared.to_dense(cfg.attn_layer_count)
     prefix_len = 0 if shared is None else shared.prefix_len
     pos_mode = "shift" if shared is None else shared.pos_mode
+    if prefix_len == 0 or mode != "cached":
+        prefix_lens = None
+    cache_is_ragged = cache is not None and jnp.ndim(cache["len"]) > 0
+    if prefix_lens is not None or cache_is_ragged:
+        # ragged rows carry per-row positions; the audio stack's additive
+        # sinusoid embed path is scalar-shift only
+        assert cfg.arch_type != "audio", \
+            "ragged (continuous-batching) rows need a rope arch"
 
     enc_out = None
     if cfg.encoder_layers and extra and "frames" in extra:
@@ -562,7 +622,8 @@ def apply_model(
                     run_p, cfg, spec, x, run_cache, shared=shared,
                     attn_i=attn_i, cache_len=cache_len,
                     prefix_len=prefix_len, collect_mass=collect_mass,
-                    capture_hidden=capture_hidden, enc_out=eo)
+                    capture_hidden=capture_hidden, enc_out=eo,
+                    prefix_lens=prefix_lens)
                 aux_total = aux_total + aux
                 masses.extend(m_list)
                 hiddens.extend(h_list)
@@ -570,17 +631,30 @@ def apply_model(
                 attn_i += n
                 continue
             # per-layer positional shift (paper default: == prefix_len
-            # everywhere; KVComm-S: 0 at non-selected layers)
+            # everywhere; KVComm-S: 0 at non-selected layers); per-row
+            # real lengths replace the bucket size on ragged rows
             if prefix_len and pos_mode == "zero_unselected":
                 sel = jax.lax.dynamic_slice_in_dim(
                     shared.select, attn_i, n, 0)
-                shift = jnp.where(sel, prefix_len, 0).astype(jnp.int32)
+                if prefix_lens is not None:
+                    shift = jnp.where(sel[:, None], prefix_lens[None],
+                                      0).astype(jnp.int32)
+                else:
+                    shift = jnp.where(sel, prefix_len, 0).astype(jnp.int32)
+            elif prefix_lens is not None:
+                shift = jnp.broadcast_to(
+                    prefix_lens[None], (n,) + prefix_lens.shape
+                ).astype(jnp.int32)
             else:
                 shift = jnp.full((n,), prefix_len, jnp.int32)
             per = {"params": run_p, "pos_shift": shift}
             if mode == "cached":
                 per["cache"] = run_cache
-                per["cache_len"] = jnp.broadcast_to(cache_len, (n,))
+                per["cache_len"] = jnp.broadcast_to(
+                    cache_len, (n,) + jnp.shape(cache_len))
+                if prefix_lens is not None:
+                    per["prefix_lens"] = jnp.broadcast_to(
+                        prefix_lens[None], (n,) + prefix_lens.shape)
             if inject is not None:
                 per["inject_vec"] = jax.lax.dynamic_slice_in_dim(
                     inject["vec"], attn_i, n, 0)

@@ -1,0 +1,279 @@
+"""The overlapped continuous-batching scheduler: bit-exact vs the serial
+reference, dead slots inert, and the no-retrace guarantee pinned by trace
+counters."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import (Agent, CommSession, InMemoryTransport,
+                        SerializedTransport)
+from repro.core.protocol import TRACE_COUNTS
+from repro.core.types import KVCommConfig
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.models import transformer as tfm
+from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                     make_requests, serve_serial)
+
+
+def _session(tiny_cfg, tok, transport):
+    cfg = dataclasses.replace(tiny_cfg, vocab_size=tok.vocab_size)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    return CommSession(Agent("s", cfg, params, tok),
+                       Agent("r", cfg, params, tok), transport), cfg, params
+
+
+def _stream(tok, n=6, max_new=(4, 2, 1)):
+    """Mixed-length request stream: ragged contexts AND ragged budgets."""
+    batches = [SyntheticTask(tok, TaskConfig("retrieval", num_facts=nf,
+                                             seed=11 + nf)).batch(n // 2)
+               for nf in (4, 8)]
+    reqs = make_requests(batches, pad=tok.PAD)[:n]
+    for i, r in enumerate(reqs):
+        r.max_new = max_new[i % len(max_new)]
+    return reqs
+
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+
+class TestSchedulerParity:
+    """Acceptance: overlapped + continuously-batched outputs match the
+    serial per-request reference token for token, across the transport /
+    packing matrix."""
+
+    @pytest.mark.parametrize("transport", [
+        lambda: InMemoryTransport(),
+        lambda: InMemoryTransport(packed=False),
+        lambda: SerializedTransport("float32"),
+        lambda: SerializedTransport("float32", packed=False),
+    ], ids=["mem_packed", "mem_dense", "ser_packed", "ser_dense"])
+    def test_tokens_match_serial(self, tiny_cfg, tok, transport):
+        sess, _, _ = _session(tiny_cfg, tok, transport())
+        reqs = _stream(tok)
+        ser, _ = serve_serial(sess, reqs, KVCFG)
+        sched = Scheduler(sess, KVCFG,
+                          config=SchedulerConfig(capacity=3,
+                                                 prefix_bucket=8,
+                                                 query_bucket=4))
+        got, stats = sched.run(reqs)
+        assert [c.rid for c in got] == [c.rid for c in ser]
+        for a, b in zip(ser, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        # slots were actually reused mid-flight (continuous batching, not
+        # batch-drain): more requests than capacity, one table
+        assert len(reqs) > 3 and stats["occupancy"] > 0
+
+    def test_zero_unselected_pos_mode(self, tiny_cfg, tok):
+        """KVComm-S positions survive bucketing: the per-row shift is the
+        REAL prefix on selected layers and 0 on unselected ones."""
+        sess, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only",
+                             pos_mode="zero_unselected")
+        reqs = _stream(tok, n=4, max_new=(3, 2))
+        ser, _ = serve_serial(sess, reqs, kvcfg)
+        got, _ = Scheduler(sess, kvcfg,
+                           config=SchedulerConfig(capacity=2,
+                                                  prefix_bucket=8,
+                                                  query_bucket=4)).run(reqs)
+        for a, b in zip(ser, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_padded_prefill_matches_natural(self, tiny_cfg, tiny_params):
+        """The bucketing primitive in isolation: pad_prefix + prefix_lens
+        masking answers exactly like the unpadded prefill."""
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        qry = jax.random.randint(jax.random.PRNGKey(2), (1, 5), 4,
+                                 cfg.vocab_size)
+        for build in (core.pack_shared, core.build_shared):
+            shared = build(KVCFG, kv, select)
+            ref = core.receiver_prefill(params, cfg, qry, shared, max_new=2)
+            qpad = jnp.concatenate([qry, jnp.zeros((1, 3), jnp.int32)], 1)
+            out = core.receiver_prefill(
+                params, cfg, qpad, core.pad_prefix(shared, 16), max_new=2,
+                prefix_lens=jnp.full((1,), 9, jnp.int32))
+            np.testing.assert_allclose(np.asarray(out.logits[:, 4, :]),
+                                       np.asarray(ref.logits[:, 4, :]),
+                                       atol=2e-5)
+
+
+class TestDeadSlotsInert:
+    """Property: finished/empty slots never perturb live rows in the
+    ragged step — whatever garbage their buffers, lengths, or tokens
+    hold."""
+
+    def _live_table(self, tiny_cfg, tok, cap=4):
+        sess, cfg, params = _session(tiny_cfg, tok, InMemoryTransport())
+        sched = Scheduler(sess, KVCFG,
+                          config=SchedulerConfig(capacity=cap,
+                                                 prefix_bucket=8,
+                                                 query_bucket=4))
+        reqs = _stream(tok, n=2, max_new=(6, 6))
+        # admit two live rows by hand (run() would drain them)
+        dst_prefix = ((max(len(r.context) for r in reqs) + 1 + 7) // 8) * 8
+        query_max, budget = 4, 5
+        z = sched._zero_shared(dst_prefix, cap)
+        sched.meta = z.meta()
+        table = tfm.init_cache(cfg, cap, query_max + budget, shared=z)
+        table["len"] = jnp.full((cap,), dst_prefix, jnp.int32)
+        state = {"table": table,
+                 "prefix_lens": jnp.full((cap,), dst_prefix, jnp.int32),
+                 "cur_tok": jnp.zeros((cap, 1), jnp.int32),
+                 "active": jnp.zeros((cap,), bool),
+                 "dst_prefix": dst_prefix, "query_max": query_max,
+                 "budget": budget}
+        for slot, r in enumerate(reqs):
+            sched._admit(r, state, slot)
+        return sess, sched, state, dst_prefix
+
+    @pytest.mark.parametrize("seed", [0, 7, 1234, 65535])
+    def test_garbage_dead_rows_do_not_change_live_rows(self, tiny_cfg, tok,
+                                                       seed):
+        sess, sched, state, dst_prefix = self._live_table(tiny_cfg, tok)
+        rng = np.random.default_rng(seed)
+        copy = lambda t: jax.tree.map(jnp.array, t)
+
+        def garbage(t):
+            """Randomize rows 2,3 of every batched buffer."""
+            def g(x):
+                if x.ndim < 2 or x.shape[1] != 4:
+                    return x
+                noise = jnp.asarray(
+                    rng.standard_normal((x.shape[0], 2) + x.shape[2:])
+                    .astype(np.asarray(x).dtype)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else
+                    rng.integers(0, 2, (x.shape[0], 2) + x.shape[2:]))
+                return x.at[:, 2:4].set(noise.astype(x.dtype))
+            runs = jax.tree.map(g, t["runs"])
+            ln = t["len"].at[2:].set(jnp.asarray(
+                rng.integers(dst_prefix, dst_prefix + 8, (2,)), jnp.int32))
+            return {"len": ln, "runs": runs}
+
+        base = state["table"]
+        tok_a, _, cache_a = sess.receiver.ragged_step(
+            state["cur_tok"], copy(base), sched.meta,
+            state["prefix_lens"], state["active"])
+        dirty = garbage(copy(base))
+        cur2 = state["cur_tok"].at[2:, 0].set(
+            jnp.asarray(rng.integers(0, 20, (2,)), jnp.int32))
+        pl2 = state["prefix_lens"].at[2:].set(jnp.asarray(
+            rng.integers(1, dst_prefix, (2,)), jnp.int32))
+        tok_b, _, cache_b = sess.receiver.ragged_step(
+            cur2, dirty, sched.meta, pl2, state["active"])
+
+        np.testing.assert_array_equal(np.asarray(tok_a[:2]),
+                                      np.asarray(tok_b[:2]))
+
+        def live_rows(t):
+            return [np.asarray(x[:, :2]) for x in jax.tree.leaves(t["runs"])
+                    if x.ndim >= 2 and x.shape[1] == 4]
+        for a, b in zip(live_rows(cache_a), live_rows(cache_b)):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(np.asarray(cache_a["len"][:2]),
+                                      np.asarray(cache_b["len"][:2]))
+
+
+class TestNoRetrace:
+    def test_one_step_compile_per_selection_and_geometry(self, tiny_cfg,
+                                                         tok):
+        """The bucketing contract: ONE ragged-step compile per (frozen
+        selection, table geometry) and one prefill/insert pair per bucket
+        combination — never a compile per request."""
+        sess, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        cfg_s = SchedulerConfig(capacity=5, prefix_bucket=8, query_bucket=4)
+        reqs = _stream(tok, n=6, max_new=(5, 3, 1))
+        base = dict(TRACE_COUNTS)
+        Scheduler(sess, KVCFG, config=cfg_s).run(reqs)
+        after_first = dict(TRACE_COUNTS)
+        d_step = after_first.get("ragged_decode_step", 0) \
+            - base.get("ragged_decode_step", 0)
+        assert d_step == 1, f"expected one step compile, saw {d_step}"
+        # a second, LARGER stream over the same buckets (and the same
+        # decode budget, hence the same table geometry) compiles nothing
+        more = _stream(tok, n=6, max_new=(4, 2, 5))
+        for i, r in enumerate(more):
+            r.rid += 100
+        Scheduler(sess, KVCFG, config=cfg_s).run(reqs + more)
+        for key in ("ragged_decode_step", "receiver_prefill",
+                    "scheduler_insert"):
+            assert TRACE_COUNTS.get(key, 0) == after_first.get(key, 0), \
+                (key, dict(TRACE_COUNTS), after_first)
+
+
+class TestTransportSync:
+    def test_sync_default_still_stamps(self, tiny_cfg, tiny_params):
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        for tr in (InMemoryTransport(), SerializedTransport("float16")):
+            tr.send(cfg, KVCommConfig(), kv, select)
+            assert tr.last.latency_s > 0.0
+
+    def test_async_send_defers_stamp_to_flush(self, tiny_cfg, tiny_params):
+        """The hot-path fix: sync=False returns without blocking, the
+        record stays unstamped until flush_latency settles it."""
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        for tr in (InMemoryTransport(sync=False),
+                   SerializedTransport("float16", sync=False)):
+            tr.send(cfg, KVCommConfig(), kv, select)
+            assert tr.last.latency_s == 0.0      # deferred, not measured
+            assert tr.flush_latency() == 1
+            assert tr.last.latency_s > 0.0
+            assert tr.flush_latency() == 0       # idempotent
+
+    def test_synced_send_settles_pending_stamps(self, tiny_cfg,
+                                                tiny_params):
+        """A later synced send flushes the deferred log first (before its
+        own timer starts), so records never stay unstamped behind it."""
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        tr = InMemoryTransport()
+        tr.send(cfg, KVCommConfig(), kv, select, sync=False)
+        tr.send(cfg, KVCommConfig(), kv, select, sync=True)
+        assert all(r.latency_s > 0.0 for r in tr.log)
+        assert not tr._pending
+
+    def test_per_call_override_beats_ctor_default(self, tiny_cfg,
+                                                  tiny_params):
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        tr = InMemoryTransport()                 # sync default
+        tr.send(cfg, KVCommConfig(), kv, select, sync=False)
+        assert tr.last.latency_s == 0.0
+        tr.flush_latency()
+        assert tr.last.latency_s > 0.0
+
+    def test_poll_releases_drained_views(self, tiny_cfg, tiny_params):
+        """The scheduler's per-iteration poll: once a deferred transfer
+        has drained, its record is stamped and its view released — the
+        pending log tracks in-flight transfers, not the stream length."""
+        cfg, params = tiny_cfg, tiny_params
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 cfg.vocab_size)
+        kv, _ = core.sender_prefill(params, cfg, ctx)
+        select = jnp.array([True, False, True, False])
+        tr = InMemoryTransport(sync=False)
+        shared = tr.send(cfg, KVCommConfig(), kv, select)
+        jax.block_until_ready(shared)            # transfer definitely done
+        assert tr.poll_latency() == 1
+        assert not tr._pending and tr.last.latency_s > 0.0
+        assert tr.poll_latency() == 0
