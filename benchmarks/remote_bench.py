@@ -1,0 +1,102 @@
+"""Remote-transport overhead: what the framed codec and a real byte channel
+cost on top of the in-memory hand-over.
+
+For each transport row the SAME retrieval6 context batch is shared through
+the trained pair's session at each selection ratio, with synced latency
+stamps, and the per-transfer ``TransferRecord``s are averaged:
+
+  inmemory       — device hand-over (the zero-cost floor)
+  serialized     — gather + wire cast, payload materialized in-process
+  remote_loop    — full framed codec through a LoopbackChannel
+  remote_file    — full framed codec staged through the filesystem
+
+Remote rows additionally report the ``serialize_s`` / ``channel_s`` /
+``deserialize_s`` breakdown and the framing overhead (frame bytes vs
+payload bytes — header + CRC amortized over the KV payload).
+
+Writes ``BENCH_remote.json`` at the repo root (CI uploads it as an
+artifact); env knobs: REPRO_REMOTE_ITERS (default 8), REPRO_REMOTE_N
+(batch, default 8).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks import common
+from repro.comm import (FileChannel, InMemoryTransport, RemoteTransport,
+                        SerializedTransport)
+from repro.core.types import KVCommConfig
+
+ITERS = int(os.environ.get("REPRO_REMOTE_ITERS", "8"))
+BATCH = int(os.environ.get("REPRO_REMOTE_N", "8"))
+WIRE = os.environ.get("REPRO_REMOTE_WIRE", "float16")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_remote.json")
+
+
+def transports():
+    yield "inmemory", lambda: InMemoryTransport()
+    yield "serialized", lambda: SerializedTransport(WIRE)
+    yield "remote_loop", lambda: RemoteTransport(WIRE)
+    yield "remote_file", lambda: RemoteTransport(
+        WIRE, channel=FileChannel(tempfile.mkdtemp(prefix="kvcomm_bench_")))
+
+
+def bench_transport(name: str, make, batch, ratio: float) -> dict:
+    session, _, _ = common.make_session(make())
+    kvcfg = KVCommConfig(ratio=ratio, selector="prior_only")
+    session.share(batch["context"], kvcfg)          # warm (compiles)
+    session.transport.log.clear()
+    for _ in range(ITERS):
+        session.share(batch["context"], kvcfg)      # synced stamps
+    log = session.transport.log
+    mean = lambda k: float(np.mean([getattr(r, k) for r in log]))
+    row = {
+        "transport": name,
+        "ratio": ratio,
+        "transfers": len(log),
+        "payload_bytes": log[-1].n_bytes,
+        "latency_ms": mean("latency_s") * 1e3,
+    }
+    if log[-1].frame_bytes:
+        row.update({
+            "frame_bytes": log[-1].frame_bytes,
+            "frame_overhead": log[-1].frame_bytes / log[-1].n_bytes - 1.0,
+            "serialize_ms": mean("serialize_s") * 1e3,
+            "channel_ms": mean("channel_s") * 1e3,
+            "deserialize_ms": mean("deserialize_s") * 1e3,
+        })
+    return row
+
+
+def main() -> None:
+    _, _, tok = common.make_session()
+    batch = common.eval_batch(tok, "countries", BATCH)
+    rows = []
+    for ratio in (0.3, 0.5):
+        base = None
+        for name, make in transports():
+            row = bench_transport(name, make, batch, ratio)
+            if name == "inmemory":
+                base = row["latency_ms"]
+            row["vs_inmemory"] = row["latency_ms"] / max(base, 1e-9)
+            rows.append(row)
+            extra = ("" if "serialize_ms" not in row else
+                     f"  [ser {row['serialize_ms']:.2f} + chan "
+                     f"{row['channel_ms']:.2f} + deser "
+                     f"{row['deserialize_ms']:.2f} ms; frame +"
+                     f"{row['frame_overhead'] * 100:.2f}%]")
+            print(f"ratio {ratio}: {name:<12} {row['latency_ms']:7.2f} ms "
+                  f"({row['payload_bytes']} B, "
+                  f"{row['vs_inmemory']:.2f}x in-memory){extra}")
+    out = {"wire_dtype": WIRE, "iters": ITERS, "batch": BATCH, "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Two-process KVComm: sender and receiver in SEPARATE processes, selected
+KV crossing a real TCP socket through the framed remote codec.
+
+The parent process plays the sender (and runs the in-process
+``InMemoryTransport`` reference); a spawned child process runs
+``repro.launch.remote_serve server`` with the receiver model.  The same
+calibrated, frozen layer selection drives both paths, so with a lossless
+fp32 wire the remote predictions must be IDENTICAL to the in-process ones —
+``--self-test`` asserts exactly that, plus the payload-bytes-vs-analytics
+equality, and exits non-zero on any mismatch (the CI socket smoke test).
+
+    PYTHONPATH=src python examples/remote_pair.py --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.comm import Agent, CommSession, InMemoryTransport
+from repro.core import kv_wire_bytes
+from repro.core.types import KVCommConfig
+from repro.data.synthetic import SyntheticTask, TaskConfig
+from repro.launch.pairs import load_pair
+from repro.launch.remote_serve import KVClient
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ITEMSIZE = {"float32": 4, "float16": 2, "bfloat16": 2}
+
+
+def spawn_server() -> "tuple[subprocess.Popen, int]":
+    """Start the receiver process; returns (proc, bound port)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.remote_serve", "server",
+         "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    while True:
+        line = proc.stdout.readline()
+        if not line:
+            raise RuntimeError("server exited before announcing its port")
+        print(f"[server] {line.rstrip()}")
+        if line.startswith("PORT "):
+            return proc, int(line.split()[1])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--ratio", type=float, default=0.5)
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=sorted(ITEMSIZE),
+                    help="fp32 is lossless: remote == in-process exactly")
+    ap.add_argument("--self-test", action="store_true",
+                    help="assert remote == in-process and bytes == "
+                         "analytics; non-zero exit on mismatch")
+    args = ap.parse_args()
+
+    # the parent loads (and, cold, quick-trains + caches) the pair FIRST,
+    # so the child restores the cached checkpoint instead of retraining
+    cfg, tok, sender_params, receiver_params = load_pair()
+    task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=6, seed=42))
+    batch = task.batch(args.requests)
+    kvcfg = KVCommConfig(ratio=args.ratio, alpha=0.7)
+
+    # in-process reference: calibrate once, freeze the selection, share
+    # through InMemoryTransport and generate
+    session = CommSession(Agent("sender", cfg, sender_params, tok),
+                          Agent("receiver", cfg, receiver_params, tok),
+                          InMemoryTransport())
+    calib = task.batch(1)
+    session.calibrate(calib["context"], calib["query"], key="retrieval6")
+    select = session.selection(kvcfg, key="retrieval6")
+    shared, _ = session.share(batch["context"], kvcfg, key="retrieval6")
+    ref_toks = session.generate(batch["query"], shared,
+                                max_new=args.max_new)
+    print(f"in-process preds : {ref_toks[:, 0]}")
+
+    # remote run: same frozen selection, KV over a real socket
+    proc, port = spawn_server()
+    try:
+        client = KVClient.connect("127.0.0.1", port)
+        try:
+            sent = client.share(session.sender, batch["context"], kvcfg,
+                                select, wire_dtype=args.wire_dtype)
+            remote_toks = client.generate(batch["query"],
+                                          max_new=args.max_new)
+        finally:
+            client.close()
+    finally:
+        try:
+            proc.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+    print(f"remote preds     : {remote_toks[:, 0]}")
+
+    M = int(np.asarray(select).sum())
+    expect = kv_wire_bytes(cfg, args.requests, shared.prefix_len, M,
+                           itemsize=ITEMSIZE[args.wire_dtype])
+    print(f"payload bytes    : {sent} (analytic {expect}, "
+          f"{M}/{cfg.attn_layer_count} layers, {args.wire_dtype} wire)")
+
+    match = bool(np.array_equal(ref_toks, remote_toks))
+    bytes_ok = sent == expect
+    print(f"predictions match: {match}; bytes match analytics: {bytes_ok}")
+    if args.self_test:
+        if args.wire_dtype == "float32" and not match:
+            print("SELF-TEST FAILED: lossless remote run diverged",
+                  file=sys.stderr)
+            return 1
+        if not bytes_ok:
+            print("SELF-TEST FAILED: measured bytes != analytic bytes",
+                  file=sys.stderr)
+            return 1
+        print("SELF-TEST PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

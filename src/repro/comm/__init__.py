@@ -41,6 +41,13 @@ over this stack; new code should use ``CommSession`` directly::
 from repro.comm.agent import Agent
 from repro.comm.methods import (METHODS, CommMethod, CommRequest,
                                 MethodResult, get_method, register)
+from repro.comm.remote import (ChannelClosedError, FileChannel,
+                               FrameCorruptError, FrameTruncatedError,
+                               HeaderCorruptError, LoopbackChannel,
+                               PayloadMismatchError, RemoteChannel,
+                               RemoteProtocolError, RemoteTransport,
+                               SocketChannel, VersionSkewError, recv_shared,
+                               send_shared)
 from repro.comm.session import CommSession, SenderHandle
 from repro.comm.transport import (InMemoryTransport, SerializedTransport,
                                   TransferRecord, Transport)
@@ -48,8 +55,13 @@ from repro.core.layermap import (LAYER_MAPS, LayerAssignment, LayerMap,
                                  get_layer_map, register_layer_map)
 
 __all__ = [
-    "Agent", "CommMethod", "CommRequest", "CommSession", "InMemoryTransport",
-    "LAYER_MAPS", "LayerAssignment", "LayerMap", "METHODS", "MethodResult",
-    "SenderHandle", "SerializedTransport", "TransferRecord", "Transport",
-    "get_layer_map", "get_method", "register", "register_layer_map",
+    "Agent", "ChannelClosedError", "CommMethod", "CommRequest",
+    "CommSession", "FileChannel", "FrameCorruptError", "FrameTruncatedError",
+    "HeaderCorruptError", "InMemoryTransport", "LAYER_MAPS",
+    "LayerAssignment", "LayerMap", "LoopbackChannel", "METHODS",
+    "MethodResult", "PayloadMismatchError", "RemoteChannel",
+    "RemoteProtocolError", "RemoteTransport", "SenderHandle",
+    "SerializedTransport", "SocketChannel", "TransferRecord", "Transport",
+    "VersionSkewError", "get_layer_map", "get_method", "recv_shared",
+    "register", "register_layer_map", "send_shared",
 ]

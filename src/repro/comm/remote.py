@@ -1,0 +1,646 @@
+"""RemoteTransport: cross-process KV shipping over a framed wire codec.
+
+Every transport before this one lives in a single process — even
+``SerializedTransport`` only materializes the wire payload to count it.
+This module makes the byte accounting mean something physical: the gathered
+selected-layer payload (the same gather/cast half ``SerializedTransport``
+uses — ``repro.comm.transport.encode_wire``/``decode_wire``, so the codec
+and its accounting can never diverge) is packed into a length-prefixed,
+versioned, checksummed frame and shipped through a pluggable byte channel:
+
+  LoopbackChannel — an in-process byte buffer: the frame is really encoded,
+                    really framed, really decoded, without a second process
+                    (what the conformance tests and the serving scheduler's
+                    remote row run on).
+  SocketChannel   — a connected TCP stream (the two-process path:
+                    ``repro.launch.remote_serve`` / ``examples/remote_pair``).
+  FileChannel     — shared-filesystem staging: frames land as numbered chunk
+                    files (atomic rename), the reader tails them in order
+                    (LMCache-style disaggregated KV residency without a
+                    network hop).
+
+Frame layout (all integers big-endian)::
+
+  offset  size  field
+  0       4     magic  b"KVCM"
+  4       2     protocol version (currently 1)
+  6       4     header length H
+  10      8     payload length P
+  18      4     CRC-32 over header + payload
+  22      H     header: UTF-8 JSON {kind, meta, arrays:[{name,dtype,shape}]}
+  22+H    P     payload: the arrays' raw bytes, concatenated in header order
+
+Decoding is defensive end to end: every malformed input raises a typed
+``RemoteProtocolError`` subclass (truncated stream, bad magic, version skew,
+checksum mismatch, dtype/shape inconsistencies) — a corrupted frame can
+never silently become garbage KV.  The fault-injection suite
+(``tests/test_remote.py``) property-tests this over random frame mutations.
+
+The receiver-side view is a packed RECEIVER-keyed ``SharedKV`` (incl. a
+heterogeneous ``LayerAssignment``'s dst slots and ``src_layers``
+provenance), so the selection-specialized fast path and the serving
+scheduler consume a remote transfer unchanged.
+"""
+from __future__ import annotations
+
+import abc
+import json
+import os
+import socket
+import struct
+import time
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.channel import TransferRecord
+from repro.core.layermap import LayerAssignment
+from repro.core.protocol import selected_layer_ids
+from repro.core.types import KVCommConfig, SharedKV
+from repro.comm.transport import (Transport, _WIRE_DTYPES, decode_wire,
+                                  encode_wire, selected_count)
+
+PROTOCOL_VERSION = 1
+MAGIC = b"KVCM"
+_PREFIX = struct.Struct(">4sHIQI")        # magic, version, hdr len, body len, crc
+MAX_HEADER_BYTES = 1 << 26                # 64 MiB of JSON is never legitimate
+MAX_BODY_BYTES = 1 << 32                  # a corrupted length prefix must be
+                                          # rejected up front, not discovered
+                                          # after buffering the claim
+
+
+# ---------------------------------------------------------------------------
+# typed protocol errors
+# ---------------------------------------------------------------------------
+class RemoteProtocolError(RuntimeError):
+    """Base for every failure of the remote framing/decoding protocol."""
+
+
+class ChannelClosedError(RemoteProtocolError):
+    """The channel ended cleanly at a frame boundary (peer hung up)."""
+
+
+class FrameTruncatedError(RemoteProtocolError):
+    """The channel ended mid-frame — a disconnect or a cut-short stream."""
+
+
+class HeaderCorruptError(RemoteProtocolError):
+    """Bad magic, implausible lengths, or an unparsable header document."""
+
+
+class VersionSkewError(RemoteProtocolError):
+    """The peer speaks a different protocol version."""
+
+
+class FrameCorruptError(RemoteProtocolError):
+    """Checksum mismatch: the frame's bytes were altered in flight."""
+
+
+class PayloadMismatchError(RemoteProtocolError):
+    """The header's dtype/shape claims are inconsistent with the payload
+    (or with each other) — the frame cannot describe a coherent transfer."""
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+class RemoteChannel(abc.ABC):
+    """A byte-stream channel.  ``read`` returns up to ``n`` bytes and b""
+    once the stream is exhausted/closed (the framing layer turns a b"" at a
+    frame boundary into ``ChannelClosedError`` and mid-frame into
+    ``FrameTruncatedError``)."""
+
+    @abc.abstractmethod
+    def write(self, data: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def read(self, n: int) -> bytes: ...
+
+    def close(self) -> None:
+        pass
+
+
+class LoopbackChannel(RemoteChannel):
+    """In-process byte buffer: writes append, reads consume from the front.
+    The frame still crosses the full encode -> bytes -> decode path — only
+    the process boundary is elided."""
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+        self._closed = False
+
+    def write(self, data: bytes) -> None:
+        if self._closed:
+            raise ChannelClosedError("write on a closed LoopbackChannel")
+        self._buf.extend(data)
+
+    def read(self, n: int) -> bytes:
+        chunk = bytes(self._buf[:n])
+        del self._buf[:len(chunk)]
+        return chunk
+
+    def close(self) -> None:
+        self._closed = True
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class SocketChannel(RemoteChannel):
+    """A connected TCP stream.  Build one from an accepted/connected socket,
+    or dial with ``SocketChannel.connect`` (retries until the server's
+    listener is up — the two-process launch race)."""
+
+    def __init__(self, sock: socket.socket) -> None:
+        self.sock = sock
+
+    @classmethod
+    def connect(cls, host: str, port: int, timeout_s: float = 30.0,
+                retry_s: float = 0.1) -> "SocketChannel":
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                return cls(socket.create_connection((host, port), timeout=60))
+            except OSError as e:
+                if time.monotonic() >= deadline:
+                    raise ChannelClosedError(
+                        f"could not connect to {host}:{port}: {e}") from e
+                time.sleep(retry_s)
+
+    def write(self, data: bytes) -> None:
+        try:
+            self.sock.sendall(data)
+        except OSError as e:
+            raise ChannelClosedError(f"socket send failed: {e}") from e
+
+    def read(self, n: int) -> bytes:
+        try:
+            return self.sock.recv(min(n, 1 << 20))
+        except OSError as e:
+            raise ChannelClosedError(f"socket recv failed: {e}") from e
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+class FileChannel(RemoteChannel):
+    """Shared-filesystem staging: every ``write`` lands one numbered chunk
+    file (written to a temp name, then atomically renamed so a reader never
+    sees a half-written chunk); ``read`` tails the chunk sequence in order,
+    polling up to ``timeout_s`` for the next chunk to appear.  Two processes
+    sharing a directory get a one-way channel; consumed chunks are unlinked
+    by default so staging space stays bounded."""
+
+    def __init__(self, directory: str, name: str = "kv",
+                 poll_s: float = 0.01, timeout_s: float = 10.0,
+                 consume: bool = True) -> None:
+        self.directory = directory
+        self.name = name
+        self.poll_s = poll_s
+        self.timeout_s = timeout_s
+        self.consume = consume
+        os.makedirs(directory, exist_ok=True)
+        self._wseq = 0
+        self._rseq = 0
+        self._rbuf = b""
+        self._roff = 0
+
+    def _path(self, seq: int) -> str:
+        return os.path.join(self.directory, f"{self.name}.{seq:08d}.chunk")
+
+    def write(self, data: bytes) -> None:
+        tmp = self._path(self._wseq) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, self._path(self._wseq))
+        self._wseq += 1
+
+    def read(self, n: int) -> bytes:
+        if self._roff >= len(self._rbuf):
+            path = self._path(self._rseq)
+            deadline = time.monotonic() + self.timeout_s
+            while not os.path.exists(path):
+                if time.monotonic() >= deadline:
+                    return b""
+                time.sleep(self.poll_s)
+            with open(path, "rb") as f:
+                self._rbuf = f.read()
+            self._roff = 0
+            self._rseq += 1
+            if self.consume:
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+        chunk = self._rbuf[self._roff:self._roff + n]
+        self._roff += len(chunk)
+        return chunk
+
+
+# ---------------------------------------------------------------------------
+# the framed codec
+# ---------------------------------------------------------------------------
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a wire dtype name, including the ml_dtypes extras numpy's
+    constructor does not know (bfloat16)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        try:
+            import ml_dtypes
+            return np.dtype(getattr(ml_dtypes, name))
+        except (ImportError, AttributeError, TypeError):
+            raise PayloadMismatchError(
+                f"unknown array dtype {name!r} in frame header") from None
+
+
+def encode_frame(kind: str, meta: Dict[str, Any],
+                 arrays: Dict[str, np.ndarray]) -> bytes:
+    """Pack one message (a JSON-able ``meta`` dict plus named arrays) into
+    the length-prefixed, CRC-protected wire frame."""
+    specs, chunks = [], []
+    for name, arr in arrays.items():
+        a = np.ascontiguousarray(arr)
+        specs.append({"name": name, "dtype": a.dtype.name,
+                      "shape": list(a.shape)})
+        chunks.append(a.tobytes())
+    body = b"".join(chunks)
+    header = json.dumps({"kind": kind, "meta": meta,
+                         "arrays": specs}).encode("utf-8")
+    crc = zlib.crc32(body, zlib.crc32(header))
+    return _PREFIX.pack(MAGIC, PROTOCOL_VERSION, len(header), len(body),
+                        crc) + header + body
+
+
+def _read_exactly(channel: RemoteChannel, n: int, what: str,
+                  got: bytes = b"") -> bytes:
+    buf = bytearray(got)
+    while len(buf) < n:
+        chunk = channel.read(n - len(buf))
+        if not chunk:
+            raise FrameTruncatedError(
+                f"channel ended after {len(buf)}/{n} bytes of {what}")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def read_frame(channel: RemoteChannel
+               ) -> Tuple[str, Dict[str, Any], Dict[str, np.ndarray]]:
+    """Read and validate ONE frame off the channel.
+
+    Returns ``(kind, meta, arrays)``.  Raises ``ChannelClosedError`` if the
+    stream ends cleanly before the first byte, and a specific
+    ``RemoteProtocolError`` subclass for every way a frame can be wrong —
+    never a partially-decoded or corrupt result.
+    """
+    first = channel.read(_PREFIX.size)
+    if not first:
+        raise ChannelClosedError("channel closed at frame boundary")
+    prefix = _read_exactly(channel, _PREFIX.size, "frame prefix", got=first)
+    magic, version, hlen, blen, crc = _PREFIX.unpack(prefix)
+    if magic != MAGIC:
+        raise HeaderCorruptError(f"bad frame magic {magic!r}")
+    if version != PROTOCOL_VERSION:
+        raise VersionSkewError(
+            f"peer speaks protocol v{version}, this side v{PROTOCOL_VERSION}")
+    if hlen > MAX_HEADER_BYTES or blen > MAX_BODY_BYTES:
+        raise HeaderCorruptError(
+            f"implausible frame lengths (header {hlen}, payload {blen})")
+    header = _read_exactly(channel, hlen, "header")
+    body = _read_exactly(channel, blen, "payload")
+    if zlib.crc32(body, zlib.crc32(header)) != crc:
+        raise FrameCorruptError("frame checksum mismatch")
+    try:
+        doc = json.loads(header.decode("utf-8"))
+        kind, meta, specs = doc["kind"], doc["meta"], doc["arrays"]
+        assert isinstance(kind, str) and isinstance(specs, list)
+    except (UnicodeDecodeError, ValueError, KeyError, TypeError,
+            AssertionError) as e:
+        raise HeaderCorruptError(f"unparsable frame header: {e}") from None
+    arrays: Dict[str, np.ndarray] = {}
+    off = 0
+    try:
+        for spec in specs:
+            dt = _np_dtype(spec["dtype"])
+            shape = tuple(int(d) for d in spec["shape"])
+            if any(d < 0 for d in shape):
+                raise PayloadMismatchError(f"negative dim in shape {shape}")
+            count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            nbytes = count * dt.itemsize
+            if off + nbytes > len(body):
+                raise PayloadMismatchError(
+                    f"array {spec['name']!r} claims {nbytes} bytes at "
+                    f"offset {off} but the payload holds {len(body)}")
+            arrays[spec["name"]] = np.frombuffer(
+                body, dt, count, off).reshape(shape)
+            off += nbytes
+    except (KeyError, TypeError, ValueError, OverflowError) as e:
+        raise PayloadMismatchError(
+            f"malformed array spec in frame header: {e}") from None
+    if off != len(body):
+        raise PayloadMismatchError(
+            f"payload holds {len(body)} bytes but the header accounts "
+            f"for {off}")
+    return kind, meta, arrays
+
+
+def decode_frame(buf: bytes
+                 ) -> Tuple[str, Dict[str, Any], Dict[str, np.ndarray]]:
+    """Decode one frame from a contiguous byte string (a convenience over
+    ``read_frame`` for staged/stored frames); trailing garbage is an
+    error."""
+    ch = LoopbackChannel()
+    ch.write(buf)
+    out = read_frame(ch)
+    if len(ch):
+        raise PayloadMismatchError(
+            f"{len(ch)} trailing bytes after the frame")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# state pytrees on the wire (nested dict/list/tuple of arrays)
+# ---------------------------------------------------------------------------
+def _tree_parts(tree):
+    """(JSON skeleton with {"__leaf__": i} markers, [leaves])."""
+    leaves = []
+
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: walk(v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            node = [walk(v) for v in t]
+            return node if isinstance(t, list) else {"__tuple__": node}
+        leaves.append(t)
+        return {"__leaf__": len(leaves) - 1}
+
+    return walk(tree), leaves
+
+
+def _tree_build(skel, leaves):
+    if isinstance(skel, dict):
+        if set(skel) == {"__leaf__"}:
+            return leaves[skel["__leaf__"]]
+        if set(skel) == {"__tuple__"}:
+            return tuple(_tree_build(v, leaves) for v in skel["__tuple__"])
+        return {k: _tree_build(v, leaves) for k, v in skel.items()}
+    if isinstance(skel, list):
+        return [_tree_build(v, leaves) for v in skel]
+    raise PayloadMismatchError(f"malformed state skeleton node {skel!r}")
+
+
+# ---------------------------------------------------------------------------
+# SharedKV transfers: the sender and receiver halves
+# ---------------------------------------------------------------------------
+def _put_wire(arrays: Dict[str, np.ndarray], name: str, x,
+              wire_dtype: str) -> int:
+    wire, n = encode_wire(x, wire_dtype)
+    arrays[name] = wire[0]
+    if len(wire) > 1:
+        arrays[name + "@scale"] = wire[1]
+    return n
+
+
+def _take_wire(arrays: Dict[str, np.ndarray], name: str, wire_dtype: str,
+               dtype) -> jnp.ndarray:
+    try:
+        wire = (arrays[name],)
+        if wire_dtype == "int8":
+            wire = (arrays[name], arrays[name + "@scale"])
+    except KeyError as e:
+        raise PayloadMismatchError(f"frame lacks array {e.args[0]!r}") \
+            from None
+    return decode_wire(wire, wire_dtype, dtype)
+
+
+def encode_kv_transfer(kvcfg: KVCommConfig, kv, select=None, states=None,
+                       state_select=None,
+                       assignment: Optional[LayerAssignment] = None,
+                       wire_dtype: str = "float16",
+                       packed: bool = True) -> Tuple[bytes, int, int, int]:
+    """The sender half: gather the selected (or assignment-mapped) layers,
+    wire-cast them, and frame the result.
+
+    Returns ``(frame bytes, payload wire bytes, layer count, prefix_len)``
+    — payload bytes are exactly what ``SerializedTransport`` would count
+    for the same transfer (the shared codec guarantees it)."""
+    if wire_dtype not in _WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                         f"one of {sorted(_WIRE_DTYPES)}")
+    arrays: Dict[str, np.ndarray] = {}
+    n_bytes = 0
+    prefix_len = 0
+    kv_meta = None
+    if assignment is not None:
+        layer_count = assignment.num_pairs
+        sel_mask = [bool(b) for b in assignment.dst_mask()]
+        layers = list(assignment.dst)
+        src_layers = list(assignment.src)
+        src_idx = np.asarray(assignment.src, np.int32)
+    else:
+        layer_count = selected_count(select)
+        sel_mask = (None if select is None
+                    else [bool(b) for b in np.asarray(select)])
+        layers = (None if select is None
+                  else list(selected_layer_ids(select)))
+        src_layers = None
+        src_idx = (None if layers is None
+                   else np.asarray(layers, np.int32))
+    if kv is not None:
+        if src_idx is None:
+            raise ValueError("a remote KV transfer needs a selection mask "
+                             "or a LayerAssignment")
+        prefix_len = int(kv["k"].shape[2])
+        compute_dtype = np.dtype(kv["k"].dtype).name
+        for part in ("k", "v"):
+            n_bytes += _put_wire(arrays, part, kv[part][src_idx], wire_dtype)
+        kv_meta = {"prefix_len": prefix_len, "pos_mode": kvcfg.pos_mode,
+                   "packed": packed, "layers": layers,
+                   "src_layers": src_layers, "select": sel_mask,
+                   "compute_dtype": compute_dtype}
+    state_meta = None
+    if states is not None and state_select is not None:
+        skel, leaves = _tree_parts(states)
+        sel = np.nonzero(np.asarray(state_select))[0]
+        shapes, dtypes = [], []
+        for i, leaf in enumerate(leaves):
+            leaf = jnp.asarray(leaf)
+            shapes.append(list(leaf.shape))
+            dtypes.append(np.dtype(leaf.dtype).name)
+            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], wire_dtype)
+        state_meta = {"skeleton": skel, "shapes": shapes, "dtypes": dtypes,
+                      "select": [bool(b) for b in np.asarray(state_select)]}
+    meta = {"wire_dtype": wire_dtype, "kv": kv_meta, "states": state_meta,
+            "pos_mode": kvcfg.pos_mode,
+            "sel_mask": sel_mask if kv is None else None}
+    return (encode_frame("shared_kv", meta, arrays), n_bytes, layer_count,
+            prefix_len)
+
+
+def decode_kv_transfer(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
+                       ) -> Tuple[SharedKV, int]:
+    """The receiver half: validate a decoded ``shared_kv`` frame and
+    rebuild the packed RECEIVER-keyed ``SharedKV`` view (densified when the
+    sender asked for the legacy dense form).  Returns (view, wire bytes)."""
+    try:
+        wire_dtype = meta["wire_dtype"]
+        kv_meta, state_meta = meta["kv"], meta["states"]
+    except (KeyError, TypeError) as e:
+        raise PayloadMismatchError(f"shared_kv frame meta lacks {e}") \
+            from None
+    if wire_dtype not in _WIRE_DTYPES:
+        raise PayloadMismatchError(f"unknown wire dtype {wire_dtype!r}")
+    n_bytes = int(sum(a.nbytes for a in arrays.values()))
+    payload = None
+    if kv_meta is not None:
+        dtype = _np_dtype(kv_meta.get("compute_dtype", "float32"))
+        payload = {part: _take_wire(arrays, part, wire_dtype, dtype)
+                   for part in ("k", "v")}
+        if payload["k"].shape != payload["v"].shape:
+            raise PayloadMismatchError(
+                f"k/v shapes disagree: {payload['k'].shape} "
+                f"vs {payload['v'].shape}")
+        if payload["k"].ndim != 5:
+            raise PayloadMismatchError(
+                f"KV payload must be (M, B, Sc, Hkv, Dh); "
+                f"got rank {payload['k'].ndim}")
+        layers = kv_meta.get("layers")
+        if layers is not None and len(layers) != payload["k"].shape[0]:
+            raise PayloadMismatchError(
+                f"layer map names {len(layers)} layers but the payload "
+                f"stacks {payload['k'].shape[0]}")
+        if int(payload["k"].shape[2]) != int(kv_meta["prefix_len"]):
+            raise PayloadMismatchError(
+                f"header prefix_len {kv_meta['prefix_len']} != payload "
+                f"Sc {payload['k'].shape[2]}")
+    states = state_select = None
+    if state_meta is not None:
+        try:
+            sel = np.asarray(state_meta["select"], bool)
+            shapes = state_meta["shapes"]
+            dtypes = state_meta["dtypes"]
+            skel = state_meta["skeleton"]
+        except (KeyError, TypeError) as e:
+            raise PayloadMismatchError(f"state meta lacks {e}") from None
+        idx = np.nonzero(sel)[0]
+        leaves = []
+        for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
+            part = _take_wire(arrays, f"s{i}", wire_dtype, _np_dtype(dname))
+            want = (len(idx),) + tuple(shape[1:])
+            if tuple(part.shape) != want:
+                raise PayloadMismatchError(
+                    f"state leaf {i} shape {tuple(part.shape)} != "
+                    f"expected {want}")
+            dense = jnp.zeros(tuple(shape), _np_dtype(dname))
+            leaves.append(dense.at[idx].set(part) if len(idx) else dense)
+        states = _tree_build(skel, leaves)
+        state_select = jnp.asarray(sel)
+    if kv_meta is None:
+        sel_mask = meta.get("sel_mask")
+        shared = SharedKV(
+            kv=None,
+            select=None if sel_mask is None else jnp.asarray(sel_mask, bool),
+            states=states, state_select=state_select,
+            prefix_len=0, pos_mode=meta.get("pos_mode", "shift"))
+        return shared, n_bytes
+    try:
+        shared = SharedKV.from_wire(kv_meta, payload, states=states,
+                                    state_select=state_select)
+    except (KeyError, TypeError, ValueError) as e:
+        raise PayloadMismatchError(f"cannot rebuild SharedKV: {e}") \
+            from None
+    return shared, n_bytes
+
+
+def send_shared(channel: RemoteChannel, kvcfg: KVCommConfig, kv, select=None,
+                *, states=None, state_select=None,
+                assignment: Optional[LayerAssignment] = None,
+                wire_dtype: str = "float16", packed: bool = True) -> int:
+    """Sender-process entry: frame one KV transfer onto the channel.
+    Returns the payload wire bytes (what the analytics predict)."""
+    frame, n_bytes, _, _ = encode_kv_transfer(
+        kvcfg, kv, select, states, state_select, assignment,
+        wire_dtype, packed)
+    channel.write(frame)
+    return n_bytes
+
+
+def recv_shared(channel: RemoteChannel) -> Tuple[SharedKV, int]:
+    """Receiver-process entry: read one ``shared_kv`` frame and rebuild the
+    receiver-side view.  Returns (SharedKV, payload wire bytes)."""
+    kind, meta, arrays = read_frame(channel)
+    if kind != "shared_kv":
+        raise PayloadMismatchError(
+            f"expected a shared_kv frame, got {kind!r}")
+    return decode_kv_transfer(meta, arrays)
+
+
+# ---------------------------------------------------------------------------
+# the Transport
+# ---------------------------------------------------------------------------
+class RemoteTransport(Transport):
+    """Ships the gathered selected-layer payload through the framed codec
+    and a byte channel, and hands back the DECODED receiver-side view.
+
+    With the default ``LoopbackChannel`` the whole round trip (gather ->
+    wire cast -> frame -> channel -> parse -> device put) runs in-process —
+    byte-identical frames to the cross-process path, so the conformance
+    suite and the serving scheduler exercise the real codec.  A duplex
+    channel whose ``read`` returns the peer's response frames (e.g. an echo
+    service over ``SocketChannel``) works the same way; the pure two-process
+    split uses the ``send_shared`` / ``recv_shared`` halves directly
+    (``repro.launch.remote_serve``).
+
+    The ``TransferRecord`` carries the remote breakdown: ``serialize_s``
+    (gather + wire cast + framing), ``channel_s`` (channel write + read
+    back), ``deserialize_s`` (parse + rebuild), plus ``frame_bytes`` (full
+    frame incl. header/CRC) next to the analytics-matching ``n_bytes``.
+    """
+
+    def __init__(self, wire_dtype: str = "float16",
+                 channel: Optional[RemoteChannel] = None,
+                 packed: bool = True, sync: bool = True) -> None:
+        super().__init__(packed=packed, sync=sync)
+        if wire_dtype not in _WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                             f"one of {sorted(_WIRE_DTYPES)}")
+        self.wire_dtype = wire_dtype
+        self.channel = channel if channel is not None else LoopbackChannel()
+
+    def _ship(self, kvcfg: KVCommConfig, kv, select, states, state_select,
+              assignment: Optional[LayerAssignment]) -> SharedKV:
+        t0 = time.perf_counter()
+        frame, n_bytes, layer_count, prefix_len = encode_kv_transfer(
+            kvcfg, kv, select, states, state_select, assignment,
+            self.wire_dtype, self.packed)
+        t1 = time.perf_counter()
+        self.channel.write(frame)
+        kind, meta, arrays = read_frame(self.channel)
+        t2 = time.perf_counter()
+        if kind != "shared_kv":
+            raise PayloadMismatchError(
+                f"expected a shared_kv frame, got {kind!r}")
+        shared, n_decoded = decode_kv_transfer(meta, arrays)
+        t3 = time.perf_counter()
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=n_decoded, layers=layer_count,
+            context_len=prefix_len, wire_dtype=self.wire_dtype,
+            serialize_s=t1 - t0, channel_s=t2 - t1, deserialize_s=t3 - t2,
+            frame_bytes=len(frame)))
+        return shared
+
+    def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
+              states=None, state_select=None) -> SharedKV:
+        return self._ship(kvcfg, kv, select, states, state_select, None)
+
+    def _send_mapped(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                     assignment: LayerAssignment, states=None,
+                     state_select=None) -> SharedKV:
+        return self._ship(kvcfg, kv, None, states, state_select, assignment)

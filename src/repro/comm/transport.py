@@ -17,7 +17,7 @@ selection-specialized cache (`repro.models.transformer._init_cache_packed`)
 — no dense zero-padded scatter on either side. ``packed=False`` restores
 the legacy dense (L, ...) view for the uniform-scan path.
 
-Two implementations:
+Three implementations:
 
   InMemoryTransport   — hand-over of device buffers (the two agents
                         co-located in one process); packed mode gathers the
@@ -30,6 +30,11 @@ Two implementations:
                         the buffers themselves.  Measured bytes agree with
                         ``repro.core.channel.kv_wire_bytes`` analytics by
                         construction (asserted in tests).
+  RemoteTransport     — ``repro.comm.remote``: frames the same wire payload
+                        (the codec below is shared — ``encode_wire`` /
+                        ``decode_wire``) and ships it through a byte channel
+                        (loopback / TCP socket / shared-filesystem staging)
+                        across process boundaries.
 
 Both subsume the legacy ``repro.core.Channel`` (kept as a deprecated alias
 surface for old callers); records are the same ``TransferRecord`` type so
@@ -67,6 +72,71 @@ _WIRE_DTYPES = {
     "float32": jnp.float32,
     "int8": jnp.int8,
 }
+
+
+# ---------------------------------------------------------------------------
+# the wire codec — module-level so every transport that materializes a
+# payload (SerializedTransport in-process, RemoteTransport cross-process)
+# shares ONE cast/quantize implementation and their byte accounting can
+# never diverge
+# ---------------------------------------------------------------------------
+def encode_wire(x: jnp.ndarray, wire_dtype: str):
+    """Cast one stacked array (leading layer axis) to its wire form.
+    Returns ``((arrays...), n_bytes)`` — one array for float wires, a
+    (quantized, per-layer fp32 scales) pair for int8 (symmetric per-layer
+    quantization; the scales are part of the payload and counted)."""
+    if wire_dtype == "int8":
+        # symmetric per-layer scales (leading axis), shipped alongside
+        # the payload; works for KV stacks and SSM state leaves alike
+        absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
+                         keepdims=True)
+        scale = jnp.maximum(absmax, 1e-8) / 127.0
+        q = np.asarray(jnp.clip(jnp.round(x / scale), -127, 127)
+                       .astype(jnp.int8))
+        s = np.asarray(scale, dtype=np.float32)
+        return (q, s), q.nbytes + s.nbytes
+    wire = np.asarray(x.astype(_WIRE_DTYPES[wire_dtype]))
+    return (wire,), wire.nbytes
+
+
+def decode_wire(wire, wire_dtype: str, dtype) -> jnp.ndarray:
+    """Inverse of ``encode_wire``: reconstruct the compute-dtype array from
+    the wire arrays (dequantizing through fp32 for int8)."""
+    if wire_dtype == "int8":
+        q, s = wire
+        return (jnp.asarray(q).astype(jnp.float32) * jnp.asarray(s)) \
+            .astype(dtype)
+    return jnp.asarray(wire[0]).astype(dtype)
+
+
+def roundtrip_kv(payload, wire_dtype: str, dtype):
+    """Wire-cast a gathered {"k","v"} payload and decode it back at the
+    compute dtype; returns (receiver payload, counted bytes). The ONE
+    codec loop both the homogeneous and mapped send paths go through —
+    a codec change cannot diverge their accounting."""
+    out, n = {}, 0
+    for part in ("k", "v"):
+        wire, nb = encode_wire(payload[part], wire_dtype)
+        n += nb
+        out[part] = decode_wire(wire, wire_dtype, dtype)
+    return out, n
+
+
+def roundtrip_states(states, state_select, wire_dtype: str):
+    """Wire-cast the selected SSM state layers; returns the receiver
+    view (non-selected layers zeroed) and the counted bytes."""
+    if states is None or state_select is None:
+        return states, 0
+    sel = np.nonzero(np.asarray(state_select))[0]
+    counted = [0]
+
+    def roundtrip(x):
+        wire, n = encode_wire(jnp.asarray(x)[sel], wire_dtype)
+        counted[0] += n
+        dense = jnp.zeros_like(x)
+        return dense.at[sel].set(decode_wire(wire, wire_dtype, x.dtype))
+
+    return jax.tree.map(roundtrip, states), counted[0]
 
 
 def selected_count(select) -> int:
@@ -313,56 +383,12 @@ class SerializedTransport(Transport):
                              f"one of {sorted(_WIRE_DTYPES)}")
         self.wire_dtype = wire_dtype
 
-    # -- wire codec --------------------------------------------------------
-    def _encode(self, x: jnp.ndarray):
-        """(M, B, Sc, Hkv, Dh) -> (wire arrays..., n_bytes)."""
-        if self.wire_dtype == "int8":
-            # symmetric per-layer scales (leading axis), shipped alongside
-            # the payload; works for KV stacks and SSM state leaves alike
-            absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
-                             keepdims=True)
-            scale = jnp.maximum(absmax, 1e-8) / 127.0
-            q = np.asarray(jnp.clip(jnp.round(x / scale), -127, 127)
-                           .astype(jnp.int8))
-            s = np.asarray(scale, dtype=np.float32)
-            return (q, s), q.nbytes + s.nbytes
-        wire = np.asarray(x.astype(_WIRE_DTYPES[self.wire_dtype]))
-        return (wire,), wire.nbytes
-
-    def _decode(self, wire, dtype) -> jnp.ndarray:
-        if self.wire_dtype == "int8":
-            q, s = wire
-            return (jnp.asarray(q).astype(jnp.float32) * jnp.asarray(s)) \
-                .astype(dtype)
-        return jnp.asarray(wire[0]).astype(dtype)
-
+    # -- wire codec (module-level functions, shared with RemoteTransport) --
     def _roundtrip_kv(self, payload, dtype):
-        """Wire-cast a gathered {"k","v"} payload and decode it back at the
-        compute dtype; returns (receiver payload, counted bytes). The ONE
-        codec loop both the homogeneous and mapped send paths go through —
-        a codec change cannot diverge their accounting."""
-        out, n = {}, 0
-        for part in ("k", "v"):
-            wire, nb = self._encode(payload[part])
-            n += nb
-            out[part] = self._decode(wire, dtype)
-        return out, n
+        return roundtrip_kv(payload, self.wire_dtype, dtype)
 
     def _roundtrip_states(self, states, state_select):
-        """Wire-cast the selected SSM state layers; returns the receiver
-        view (non-selected layers zeroed) and the counted bytes."""
-        if states is None or state_select is None:
-            return states, 0
-        sel = np.nonzero(np.asarray(state_select))[0]
-        counted = [0]
-
-        def roundtrip(x):
-            wire, n = self._encode(jnp.asarray(x)[sel])
-            counted[0] += n
-            dense = jnp.zeros_like(x)
-            return dense.at[sel].set(self._decode(wire, x.dtype))
-
-        return jax.tree.map(roundtrip, states), counted[0]
+        return roundtrip_states(states, state_select, self.wire_dtype)
 
     # -- transport ---------------------------------------------------------
     def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,

@@ -28,6 +28,17 @@ class TransferRecord:
     latency_s: float = 0.0      # device-synced wall clock of the transfer
                                 # (stamped by Transport.send; 0.0 = unstamped
                                 # legacy path) — the async scheduler's input
+    # cross-process breakdown (RemoteTransport stamps these; in-process
+    # transports leave them 0.0): encode/wire-cast time, channel write+read
+    # time, and frame-parse + device-put time.  latency_s covers the whole
+    # send, so serialize_s + channel_s + deserialize_s <= latency_s.
+    serialize_s: float = 0.0
+    channel_s: float = 0.0
+    deserialize_s: float = 0.0
+    frame_bytes: int = 0        # full on-the-wire frame size incl. header
+                                # and checksum (0 for in-process transports;
+                                # n_bytes stays the payload-only count that
+                                # matches the kv_wire_bytes analytics)
 
 
 @dataclass

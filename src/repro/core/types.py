@@ -90,6 +90,48 @@ class SharedKV:
         return SharedKV(select=self.select, prefix_len=self.prefix_len,
                         pos_mode=self.pos_mode, layers=self.layers)
 
+    # ---- wire (de)serialization helpers ----------------------------------
+    def wire_meta(self) -> dict:
+        """JSON-safe static description of this view — everything a remote
+        receiver needs to rebuild it besides the array payload itself
+        (``repro.comm.remote`` ships this as the frame header's kv block).
+        The selection mask is materialized to a host bool list; layer maps
+        stay tuples-of-int (already static)."""
+        return {
+            "prefix_len": int(self.prefix_len),
+            "pos_mode": self.pos_mode,
+            "packed": self.is_packed,
+            "layers": None if self.layers is None else list(self.layers),
+            "src_layers": (None if self.src_layers is None
+                           else list(self.src_layers)),
+            "select": (None if self.select is None
+                       else [bool(b) for b in
+                             jnp.asarray(self.select).tolist()]),
+        }
+
+    @classmethod
+    def from_wire(cls, meta: dict, payload: Optional[dict] = None,
+                  states=None, state_select=None,
+                  num_layers: Optional[int] = None) -> "SharedKV":
+        """Rebuild a receiver-side view from ``wire_meta()`` output plus the
+        decoded (M, B, Sc, Hkv, Dh) payload.  The wire always carries the
+        packed payload (only selected layers cross); ``meta['packed']``
+        False asks for the legacy dense view, so the payload is scattered
+        back into a zero-padded (L, ...) stack here on the receive side."""
+        select = (None if meta["select"] is None
+                  else jnp.asarray(meta["select"], bool))
+        layers = (None if meta["layers"] is None
+                  else tuple(int(i) for i in meta["layers"]))
+        src_layers = (None if meta["src_layers"] is None
+                      else tuple(int(i) for i in meta["src_layers"]))
+        shared = cls(packed_kv=payload, layers=layers, src_layers=src_layers,
+                     select=select, states=states, state_select=state_select,
+                     prefix_len=int(meta["prefix_len"]),
+                     pos_mode=meta["pos_mode"])
+        if payload is not None and not meta.get("packed", True):
+            return shared.to_dense(num_layers)
+        return shared
+
     def to_dense(self, num_layers: Optional[int] = None) -> "SharedKV":
         """Scatter the packed payload back into a zero-padded dense stack
         (the legacy uniform-scan view). ``num_layers`` defaults to the

@@ -1,0 +1,226 @@
+"""Two-process KV serving: a sender-side client shipping selected KV to a
+receiver-side server over the framed remote codec.
+
+This is the disaggregated deployment the ROADMAP's "remote transport" item
+asks for (LMCache-style KV residency: the context-holding sender and the
+query-answering receiver live in different processes, possibly different
+hosts), built on ``repro.comm.remote``:
+
+  kv_server — owns the RECEIVER model.  Accepts one client connection and
+              serves a tiny frame protocol: ``shared_kv`` frames install the
+              current sender prefix (decoded through ``recv_shared`` into
+              the packed receiver-keyed view the fast path consumes),
+              ``query`` frames run prefill + greedy decode against it and
+              answer with a ``tokens`` frame, ``shutdown`` ends the session.
+  kv_client — owns the SENDER model.  Exports KV for a context batch,
+              pushes the selected layers through ``send_shared`` (exactly
+              the SerializedTransport payload, framed), then streams query
+              batches and collects the generated tokens.
+
+CLI::
+
+  # terminal 1 — the receiver process (prints "PORT <p>" once listening)
+  PYTHONPATH=src python -m repro.launch.remote_serve server --port 0
+
+  # terminal 2 — the sender process
+  PYTHONPATH=src python -m repro.launch.remote_serve client --port <p>
+
+``examples/remote_pair.py`` orchestrates both halves and checks the remote
+predictions bit-for-bit against an in-process ``InMemoryTransport`` run.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.comm.agent import Agent
+from repro.comm.remote import (ChannelClosedError, RemoteChannel,
+                               RemoteProtocolError, SocketChannel,
+                               encode_frame, read_frame, send_shared)
+from repro.core.types import KVCommConfig, SharedKV
+
+
+# ---------------------------------------------------------------------------
+# server half (receiver side)
+# ---------------------------------------------------------------------------
+def serve_channel(agent: Agent, channel: RemoteChannel) -> int:
+    """The receiver-side protocol loop, channel-agnostic (tests drive it
+    over a loopback).  A clean peer close ends the loop; a *mid-frame*
+    disconnect or corrupt frame propagates as the typed
+    ``RemoteProtocolError`` — the server never answers from a half-decoded
+    prefix.  Returns the number of query frames answered."""
+    from repro.comm.remote import decode_kv_transfer
+    shared: Optional[SharedKV] = None
+    answered = 0
+    while True:
+        try:
+            kind, meta, arrays = read_frame(channel)
+        except ChannelClosedError:
+            break                  # peer hung up between frames: clean end
+        if kind == "shutdown":
+            break
+        if kind == "shared_kv":
+            shared, _ = decode_kv_transfer(meta, arrays)
+        elif kind == "query":
+            if shared is None:
+                # answering from no prefix would be confidently wrong, not
+                # an error the client could see — refuse loudly instead
+                raise RemoteProtocolError(
+                    "query frame before any shared_kv frame")
+            tokens = np.asarray(arrays["tokens"], np.int32)
+            max_new = int(meta.get("max_new", 1))
+            toks, _ = agent.generate(tokens, shared, max_new=max_new)
+            channel.write(encode_frame(
+                "tokens", {}, {"tokens": np.asarray(toks, np.int32)}))
+            answered += 1
+        else:
+            raise RemoteProtocolError(f"unexpected frame kind {kind!r}")
+    return answered
+
+
+class KVServer:
+    """Serves ONE receiver agent over the frame protocol.  The listener is
+    bound at construction (so ``port`` is known before the client dials);
+    ``serve_once`` accepts a single connection and serves it to shutdown."""
+
+    def __init__(self, agent: Agent, host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        self.agent = agent
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(1)
+        self.host, self.port = self._listener.getsockname()[:2]
+
+    def serve_once(self, timeout_s: float = 120.0) -> int:
+        """Accept one client and serve until it shuts down / disconnects.
+        Returns the number of query frames answered."""
+        self._listener.settimeout(timeout_s)
+        sock, _ = self._listener.accept()
+        try:
+            return serve_channel(self.agent, SocketChannel(sock))
+        finally:
+            sock.close()
+            self._listener.close()
+
+
+# ---------------------------------------------------------------------------
+# client half (sender side)
+# ---------------------------------------------------------------------------
+class KVClient:
+    """The sender-side handle on a remote receiver."""
+
+    def __init__(self, channel: RemoteChannel) -> None:
+        self.channel = channel
+        self.sent_bytes = 0
+
+    @classmethod
+    def connect(cls, host: str, port: int,
+                timeout_s: float = 30.0) -> "KVClient":
+        return cls(SocketChannel.connect(host, port, timeout_s=timeout_s))
+
+    def share(self, sender: Agent, context: np.ndarray,
+              kvcfg: KVCommConfig, select, *, wire_dtype: str = "float16",
+              packed: bool = True) -> int:
+        """Export the sender's KV over ``context`` and ship the selected
+        layers; the server installs the decoded view as the current prefix.
+        Returns (and accumulates) the payload wire bytes."""
+        kv, states, _ = sender.export_kv(context)
+        state_select = None
+        if states is not None:
+            import jax
+            n_ssm = jax.tree.leaves(states)[0].shape[0]
+            state_select = np.ones((n_ssm,), bool)
+        n = send_shared(self.channel, kvcfg, kv, select, states=states,
+                        state_select=state_select, wire_dtype=wire_dtype,
+                        packed=packed)
+        self.sent_bytes += n
+        return n
+
+    def generate(self, query: np.ndarray, max_new: int = 1) -> np.ndarray:
+        """Ask the remote receiver to answer ``query`` (B, Sq) against the
+        last shared prefix; returns the (B, max_new) generated tokens."""
+        self.channel.write(encode_frame(
+            "query", {"max_new": int(max_new)},
+            {"tokens": np.asarray(query, np.int32)}))
+        kind, _, arrays = read_frame(self.channel)
+        if kind != "tokens":
+            raise RemoteProtocolError(f"expected a tokens frame, "
+                                      f"got {kind!r}")
+        return np.asarray(arrays["tokens"], np.int32)
+
+    def close(self) -> None:
+        try:
+            self.channel.write(encode_frame("shutdown", {}, {}))
+        except RemoteProtocolError:
+            pass
+        self.channel.close()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _load_agents() -> Tuple[Agent, Agent, object]:
+    from repro.launch.pairs import load_pair
+    cfg, tok, sender, receiver = load_pair()
+    return (Agent("sender", cfg, sender, tok),
+            Agent("receiver", cfg, receiver, tok), tok)
+
+
+def run_server(args) -> None:
+    _, receiver, _ = _load_agents()
+    server = KVServer(receiver, host=args.host, port=args.port)
+    # the orchestrating parent (examples/remote_pair.py) reads this line
+    # to learn the bound port before dialing
+    print(f"PORT {server.port}", flush=True)
+    answered = server.serve_once(timeout_s=args.timeout)
+    print(f"[server] answered {answered} query frames", flush=True)
+
+
+def run_client(args) -> None:
+    from repro.data.synthetic import SyntheticTask, TaskConfig
+    sender, _, tok = _load_agents()
+    task = SyntheticTask(tok, TaskConfig("retrieval", num_facts=6, seed=42))
+    batch = task.batch(args.requests)
+    kvcfg = KVCommConfig(ratio=args.ratio, selector="prior_only")
+    from repro import core
+    select = core.make_selection(sender.cfg, kvcfg)
+    client = KVClient.connect(args.host, args.port)
+    try:
+        n = client.share(sender, batch["context"], kvcfg, select,
+                         wire_dtype=args.wire_dtype)
+        toks = client.generate(batch["query"], max_new=1)
+    finally:
+        client.close()
+    acc = float(np.mean(toks[:, 0] == batch["answer"]))
+    print(f"[client] shipped {n} payload bytes, accuracy {acc:.3f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="role", required=True)
+    s = sub.add_parser("server", help="receiver-side KV server")
+    s.add_argument("--host", default="127.0.0.1")
+    s.add_argument("--port", type=int, default=0,
+                   help="0 picks a free port (printed as 'PORT <p>')")
+    s.add_argument("--timeout", type=float, default=120.0)
+    c = sub.add_parser("client", help="sender-side KV client")
+    c.add_argument("--host", default="127.0.0.1")
+    c.add_argument("--port", type=int, required=True)
+    c.add_argument("--requests", type=int, default=8)
+    c.add_argument("--ratio", type=float, default=0.5)
+    c.add_argument("--wire-dtype", default="float16",
+                   choices=["float16", "bfloat16", "float32", "int8"])
+    args = ap.parse_args(argv)
+    if args.role == "server":
+        run_server(args)
+    else:
+        run_client(args)
+
+
+if __name__ == "__main__":
+    main()

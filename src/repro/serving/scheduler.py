@@ -78,6 +78,13 @@ class SchedulerConfig:
     capacity: int = 8            # slot-table rows (max in-flight requests)
     prefix_bucket: int = 16      # Sc rounds up to a multiple of this
     query_bucket: int = 8        # Sq rounds up to a multiple of this
+    eos_token: Optional[int] = None
+    # EOS-based early exit: when set, a slot that emits this token is
+    # retired (and its row readmitted) instead of decoding to max_new.
+    # Detection rides the existing one-iteration-behind host reads, so a
+    # finishing request wastes at most two masked slot iterations — never
+    # a host sync.  Completions are truncated at the EOS inclusive, which
+    # keeps token-for-token parity with ``serve_serial(eos_token=...)``.
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -225,6 +232,13 @@ class Scheduler:
             "budget": max(budget, 1),
         }
 
+        eos = cfgd.eos_token
+
+        def _retire(i: int) -> None:
+            done[slots[i].req.rid] = slots[i]
+            slots[i] = None
+            state["active"] = state["active"].at[i].set(False)
+
         pending = deque(sorted(requests, key=lambda r: r.rid))
         slots: List[Optional[_Slot]] = [None] * cap
         first_tok: Dict[int, jnp.ndarray] = {}
@@ -239,9 +253,7 @@ class Scheduler:
             # 1) retire finished slots (host-side step counters — no sync)
             for i, s in enumerate(slots):
                 if s is not None and s.decoded >= s.req.max_new - 1:
-                    done[s.req.rid] = s
-                    slots[i] = None
-                    state["active"] = state["active"].at[i].set(False)
+                    _retire(i)
             # 2) admit into free slots; the pipeline enqueues behind the
             #    in-flight step — sender prefill overlaps receiver decode
             for i in range(cap):
@@ -271,13 +283,28 @@ class Scheduler:
                     if s is not None:
                         s.decoded += 1
             # 4) double buffering: materialize LAST iteration's results
-            #    while this one executes; stamps TTFT one step late at most
+            #    while this one executes; stamps TTFT one step late at most.
+            #    The same lagged reads drive EOS-based early exit: a slot
+            #    whose materialized token is the EOS retires here, so its
+            #    row is readmitted next iteration instead of decoding out
+            #    the full budget (detection lags one step — the wasted
+            #    tokens are truncated from the completion below).
             while fetch_q and fetch_q[0][0] < it:
                 _, arr, rid = fetch_q.popleft()
-                np.asarray(arr)
+                tok0 = int(np.asarray(arr)[0])
                 ttft.setdefault(rid, time.perf_counter() - t0)
+                if eos is not None and tok0 == eos:
+                    for i, s in enumerate(slots):
+                        if s is not None and s.req.rid == rid:
+                            _retire(i)
             if len(history) >= 2:
-                np.asarray(history[-2])
+                h = np.asarray(history[-2])
+                if eos is not None:
+                    row = len(history) - 2
+                    for i, s in enumerate(slots):
+                        if s is not None and row >= s.start_hist \
+                                and h[s.col] == eos:
+                            _retire(i)
             # settle drained transfer stamps without blocking, so the
             # deferred log (which pins receiver views on device) stays
             # bounded by in-flight transfers, not stream length
@@ -299,17 +326,25 @@ class Scheduler:
             toks = [int(np.asarray(first_tok[rid])[0])]
             if s.req.max_new > 1:
                 # the request's decode tokens live in its own slot column,
-                # at history rows [start_hist, start_hist + max_new - 1)
+                # at the s.decoded history rows it was live for (its full
+                # budget unless EOS retired it early — later rows of that
+                # column may already belong to a readmitted request)
                 toks.extend(hist[s.start_hist:
-                                 s.start_hist + s.req.max_new - 1, s.col]
+                                 s.start_hist + s.decoded, s.col]
                             .tolist())
+            if eos is not None and eos in toks:
+                # EOS detection lags the lagged host read by a step or
+                # two; everything decoded past the EOS is dead weight
+                toks = toks[:toks.index(eos) + 1]
             completions.append(Completion(
                 rid=rid, tokens=np.asarray(toks, np.int32),
                 ttft_s=ttft.get(rid, now)))
         return completions, {
             "iterations": it,
             "occupancy": float(np.mean(occ)) if occ else 0.0,
-            "tokens": int(sum(r.max_new for r in requests)),
+            # tokens actually DELIVERED (EOS truncation included) — the
+            # honest numerator for any tokens/s derived from these stats
+            "tokens": int(sum(len(c.tokens) for c in completions)),
         }
 
 
@@ -317,12 +352,15 @@ class Scheduler:
 # the serial reference path
 # ---------------------------------------------------------------------------
 def serve_serial(session: CommSession, requests: Sequence[Request],
-                 kvcfg: KVCommConfig, *, calib_key: Optional[str] = None
+                 kvcfg: KVCommConfig, *, calib_key: Optional[str] = None,
+                 eos_token: Optional[int] = None
                  ) -> Tuple[List[Completion], Dict[str, float]]:
     """The pre-scheduler loop: one request at a time, every stage blocking
     (synced transport stamp, per-token streamed decode). This is the
     correctness reference the scheduler must match token-for-token, and
-    the baseline ``benchmarks/serve_bench.py`` races."""
+    the baseline ``benchmarks/serve_bench.py`` races.  ``eos_token`` stops
+    a stream after emitting that token (the reference semantics for the
+    scheduler's EOS-based early exit)."""
     completions = []
     t0 = time.perf_counter()
     for req in sorted(requests, key=lambda r: r.rid):
@@ -334,13 +372,15 @@ def serve_serial(session: CommSession, requests: Sequence[Request],
             if not toks:
                 ttft = time.perf_counter() - t0
             toks.append(int(step_tok[0]))
+            if eos_token is not None and toks[-1] == eos_token:
+                break
         completions.append(Completion(
             rid=req.rid, tokens=np.asarray(toks, np.int32), ttft_s=ttft))
     return completions, {
-        "iterations": sum(r.max_new for r in requests),
+        "iterations": sum(len(c.tokens) for c in completions),
         # one request at a time: the single implicit slot is always busy
         "occupancy": 1.0,
-        "tokens": int(sum(r.max_new for r in requests)),
+        "tokens": int(sum(len(c.tokens) for c in completions)),
     }
 
 

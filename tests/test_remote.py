@@ -1,0 +1,347 @@
+"""Fault injection for the remote framed codec.
+
+The invariant under attack: NO malformed byte stream may ever decode into
+garbage KV.  Truncations, corrupted headers, version skew, dtype/shape
+lies, and mid-decode disconnects must all surface as typed
+``RemoteProtocolError`` subclasses — property-tested with hypothesis over
+random frame mutations (the CRC + length-prefixed layout is what makes the
+property hold).  Plus the round-trip/channels/server-loop coverage the
+fault tests build on."""
+import socket
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro import core
+from repro.comm import Agent
+from repro.comm.remote import (MAGIC, PROTOCOL_VERSION, ChannelClosedError,
+                               FileChannel, FrameCorruptError,
+                               FrameTruncatedError, HeaderCorruptError,
+                               LoopbackChannel, PayloadMismatchError,
+                               RemoteProtocolError, SocketChannel,
+                               VersionSkewError, _PREFIX, decode_frame,
+                               decode_kv_transfer, encode_frame,
+                               encode_kv_transfer, read_frame, recv_shared,
+                               send_shared)
+from repro.core.types import KVCommConfig
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+
+def small_frame() -> bytes:
+    return encode_frame(
+        "shared_kv",
+        {"wire_dtype": "float32", "kv": None, "states": None,
+         "pos_mode": "shift", "sel_mask": None},
+        {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+         "b": np.arange(6, dtype=np.int8)})
+
+
+@pytest.fixture(scope="module")
+def kv_frame(tiny_cfg, tiny_params):
+    """A real shared_kv frame off a tiny sender prefill."""
+    ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 4,
+                             tiny_cfg.vocab_size)
+    kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+    select = jnp.array([True, False, True, False])
+    frame, n, _, _ = encode_kv_transfer(KVCFG, kv, select,
+                                        wire_dtype="float16")
+    return frame, n
+
+
+# ---------------------------------------------------------------------------
+# round trips (the baseline the faults mutate)
+# ---------------------------------------------------------------------------
+class TestRoundTrip:
+    def test_generic_frame_round_trips_exactly(self):
+        arrays = {"x": np.arange(10, dtype=np.int32),
+                  "y": np.ones((2, 3), np.float16)}
+        kind, meta, got = decode_frame(
+            encode_frame("blob", {"n": 7, "s": "hi"}, arrays))
+        assert kind == "blob" and meta == {"n": 7, "s": "hi"}
+        for k in arrays:
+            np.testing.assert_array_equal(got[k], arrays[k])
+            assert got[k].dtype == arrays[k].dtype
+
+    def test_shared_kv_frame_round_trips(self, kv_frame):
+        frame, n = kv_frame
+        kind, meta, arrays = decode_frame(frame)
+        shared, n2 = decode_kv_transfer(meta, arrays)
+        assert kind == "shared_kv" and n2 == n
+        assert shared.is_packed and shared.layers == (0, 2)
+        assert shared.prefix_len == 6
+
+    @given(st.integers(0, 3), st.sampled_from(
+        ["float32", "float16", "int8", "int32", "uint8"]))
+    @settings(max_examples=20, deadline=None)
+    def test_any_array_round_trips(self, ndim, dtype):
+        rng = np.random.default_rng(ndim)
+        shape = tuple(rng.integers(1, 5, ndim))
+        arr = rng.integers(0, 100, shape).astype(dtype)
+        _, _, got = decode_frame(encode_frame("blob", {}, {"a": arr}))
+        np.testing.assert_array_equal(got["a"], arr)
+
+
+# ---------------------------------------------------------------------------
+# the injected faults
+# ---------------------------------------------------------------------------
+class TestTruncation:
+    def test_empty_channel_is_clean_close(self):
+        with pytest.raises(ChannelClosedError):
+            read_frame(LoopbackChannel())
+
+    @pytest.mark.parametrize("cut", [1, 3, 10, 21, 40, -1])
+    def test_truncated_stream_raises_typed(self, kv_frame, cut):
+        frame, _ = kv_frame
+        cut = len(frame) + cut if cut < 0 else cut
+        ch = LoopbackChannel()
+        ch.write(frame[:cut])
+        with pytest.raises(FrameTruncatedError):
+            read_frame(ch)
+
+    def test_mid_decode_disconnect_over_a_real_socket(self, kv_frame):
+        """The peer dies mid-frame: the reader must get a typed truncation,
+        never a partial decode."""
+        frame, _ = kv_frame
+        a, b = socket.socketpair()
+        a.sendall(frame[:len(frame) // 2])
+        a.close()                    # disconnect halfway through the frame
+        with pytest.raises(FrameTruncatedError):
+            read_frame(SocketChannel(b))
+        b.close()
+
+    def test_file_channel_timeout_is_clean_close(self, tmp_path):
+        ch = FileChannel(str(tmp_path), timeout_s=0.05)
+        with pytest.raises(ChannelClosedError):
+            read_frame(ch)
+
+
+class TestHeaderFaults:
+    def test_bad_magic(self, kv_frame):
+        frame, _ = kv_frame
+        with pytest.raises(HeaderCorruptError):
+            decode_frame(b"XXXX" + frame[4:])
+
+    def test_version_skew(self, kv_frame):
+        frame, _ = kv_frame
+        skew = (frame[:4] + struct.pack(">H", PROTOCOL_VERSION + 1)
+                + frame[6:])
+        with pytest.raises(VersionSkewError):
+            decode_frame(skew)
+
+    def test_corrupted_payload_fails_checksum(self, kv_frame):
+        """A bit flip anywhere in the header/payload region is caught by
+        the CRC — the KV bytes can never be silently wrong."""
+        frame, _ = kv_frame
+        flipped = bytearray(frame)
+        flipped[-1] ^= 0x40              # last payload byte
+        with pytest.raises(FrameCorruptError):
+            decode_frame(bytes(flipped))
+        flipped = bytearray(frame)
+        flipped[_PREFIX.size + 2] ^= 0x01   # inside the JSON header
+        with pytest.raises(FrameCorruptError):
+            decode_frame(bytes(flipped))
+
+    def test_unparsable_header_with_valid_crc(self):
+        """A header that is valid by length and checksum but not valid
+        JSON — the parse failure itself must be typed."""
+        import zlib
+        header, body = b"this is not json", b""
+        frame = _PREFIX.pack(MAGIC, PROTOCOL_VERSION, len(header),
+                             len(body),
+                             zlib.crc32(body, zlib.crc32(header))) \
+            + header + body
+        with pytest.raises(HeaderCorruptError):
+            decode_frame(frame)
+
+    def test_implausible_lengths(self, kv_frame):
+        frame, _ = kv_frame
+        huge = frame[:6] + struct.pack(">I", 1 << 30) + frame[10:]
+        with pytest.raises((HeaderCorruptError, FrameTruncatedError)):
+            decode_frame(huge)
+
+
+class TestPayloadFaults:
+    def _frame(self, specs, body: bytes, meta=None) -> bytes:
+        import json
+        import zlib
+        header = json.dumps({"kind": "blob", "meta": meta or {},
+                             "arrays": specs}).encode()
+        return _PREFIX.pack(MAGIC, PROTOCOL_VERSION, len(header), len(body),
+                            zlib.crc32(body, zlib.crc32(header))) \
+            + header + body
+
+    def test_shape_overclaims_payload(self):
+        frame = self._frame(
+            [{"name": "a", "dtype": "float32", "shape": [100]}],
+            np.zeros(4, np.float32).tobytes())
+        with pytest.raises(PayloadMismatchError):
+            decode_frame(frame)
+
+    def test_payload_left_unaccounted(self):
+        frame = self._frame(
+            [{"name": "a", "dtype": "float32", "shape": [2]}],
+            np.zeros(4, np.float32).tobytes())
+        with pytest.raises(PayloadMismatchError):
+            decode_frame(frame)
+
+    def test_unknown_dtype(self):
+        frame = self._frame(
+            [{"name": "a", "dtype": "quaternion128", "shape": [1]}], b"junk")
+        with pytest.raises(PayloadMismatchError):
+            decode_frame(frame)
+
+    def test_negative_dim(self):
+        frame = self._frame(
+            [{"name": "a", "dtype": "int8", "shape": [-4]}], b"")
+        with pytest.raises(PayloadMismatchError):
+            decode_frame(frame)
+
+    def test_kv_header_lies_about_layers(self, kv_frame):
+        frame, _ = kv_frame
+        _, meta, arrays = decode_frame(frame)
+        meta["kv"]["layers"] = [0, 1, 2]       # payload stacks only 2
+        with pytest.raises(PayloadMismatchError):
+            decode_kv_transfer(meta, arrays)
+
+    def test_kv_header_lies_about_prefix_len(self, kv_frame):
+        frame, _ = kv_frame
+        _, meta, arrays = decode_frame(frame)
+        meta["kv"]["prefix_len"] = 99
+        with pytest.raises(PayloadMismatchError):
+            decode_kv_transfer(meta, arrays)
+
+    def test_kv_missing_scale_array(self, tiny_cfg, tiny_params):
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 4,
+                                 tiny_cfg.vocab_size)
+        kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+        frame, _, _, _ = encode_kv_transfer(
+            KVCFG, kv, jnp.array([True, False, False, True]),
+            wire_dtype="int8")
+        _, meta, arrays = decode_frame(frame)
+        del arrays["k@scale"]
+        with pytest.raises(PayloadMismatchError):
+            decode_kv_transfer(meta, arrays)
+
+    def test_wrong_frame_kind_for_recv_shared(self):
+        ch = LoopbackChannel()
+        ch.write(encode_frame("tokens", {}, {}))
+        with pytest.raises(PayloadMismatchError):
+            recv_shared(ch)
+
+
+class TestMutationProperty:
+    """The hypothesis sweep: ANY byte-level mutation of a valid frame must
+    raise a typed RemoteProtocolError — never decode, never crash with an
+    untyped exception."""
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_single_byte_mutation_never_decodes(self, data):
+        frame = bytearray(small_frame())
+        i = data.draw(st.integers(0, len(frame) - 1))
+        delta = data.draw(st.integers(1, 255))
+        frame[i] = (frame[i] + delta) % 256
+        with pytest.raises(RemoteProtocolError):
+            decode_frame(bytes(frame))
+
+    @given(st.data())
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_random_multi_byte_mutation_never_decodes(self, data):
+        frame = bytearray(small_frame())
+        k = data.draw(st.integers(1, 8))
+        for _ in range(k):
+            i = data.draw(st.integers(0, len(frame) - 1))
+            delta = data.draw(st.integers(1, 255))
+            frame[i] = (frame[i] + delta) % 256
+        with pytest.raises(RemoteProtocolError):
+            decode_frame(bytes(frame))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_any_strict_prefix_raises(self, cut):
+        frame = small_frame()
+        cut = cut % len(frame)
+        ch = LoopbackChannel()
+        ch.write(frame[:cut])
+        with pytest.raises((FrameTruncatedError, ChannelClosedError)):
+            read_frame(ch)
+
+
+# ---------------------------------------------------------------------------
+# channels + the server loop end to end (in-process)
+# ---------------------------------------------------------------------------
+class TestChannels:
+    def test_loopback_fifo_across_frames(self):
+        ch = LoopbackChannel()
+        ch.write(encode_frame("a", {"i": 0}, {}))
+        ch.write(encode_frame("b", {"i": 1}, {}))
+        assert read_frame(ch)[0] == "a"
+        assert read_frame(ch)[0] == "b"
+
+    def test_file_channel_round_trip(self, tmp_path):
+        tx = FileChannel(str(tmp_path), timeout_s=1.0)
+        rx = FileChannel(str(tmp_path), timeout_s=1.0)
+        frame = small_frame()
+        tx.write(frame)
+        kind, _, arrays = read_frame(rx)
+        assert kind == "shared_kv"
+        np.testing.assert_array_equal(
+            arrays["a"], np.arange(12, dtype=np.float32).reshape(3, 4))
+
+    def test_socket_channel_round_trip(self, kv_frame):
+        frame, _ = kv_frame
+        a, b = socket.socketpair()
+        SocketChannel(a).write(frame)
+        kind, meta, arrays = read_frame(SocketChannel(b))
+        shared, _ = decode_kv_transfer(meta, arrays)
+        assert shared.layers == (0, 2)
+        a.close(), b.close()
+
+
+class TestServerLoop:
+    def test_serve_channel_answers_queries(self, tiny_cfg, tiny_params,
+                                           tok):
+        """The kv_server protocol loop over a loopback: install a prefix,
+        answer a query, shut down — predictions match a local receiver run
+        bit for bit (fp32 wire)."""
+        from repro.launch.remote_serve import serve_channel
+        agent = Agent("r", tiny_cfg, tiny_params, tok)
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 4,
+                                 tiny_cfg.vocab_size)
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 4),
+                                            4, tiny_cfg.vocab_size))
+        kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+        select = jnp.array([True, False, True, False])
+
+        ch = LoopbackChannel()
+        send_shared(ch, KVCFG, kv, select, wire_dtype="float32")
+        ch.write(encode_frame("query", {"max_new": 3}, {"tokens": qry}))
+        ch.write(encode_frame("shutdown", {}, {}))
+        assert serve_channel(agent, ch) == 1
+        kind, _, arrays = read_frame(ch)
+        assert kind == "tokens"
+
+        ref_shared = core.pack_shared(KVCFG, kv, select)
+        ref, _ = core.generate(tiny_params, tiny_cfg, jnp.asarray(qry),
+                               ref_shared, max_new=3)
+        np.testing.assert_array_equal(arrays["tokens"], np.asarray(ref))
+
+    def test_query_before_share_is_refused(self, tiny_cfg, tiny_params,
+                                           tok):
+        """Answering from no prefix would be confidently wrong, not an
+        error the client could see — the server must refuse loudly."""
+        from repro.launch.remote_serve import serve_channel
+        agent = Agent("r", tiny_cfg, tiny_params, tok)
+        ch = LoopbackChannel()
+        ch.write(encode_frame("query", {"max_new": 1},
+                              {"tokens": np.zeros((1, 3), np.int32)}))
+        with pytest.raises(RemoteProtocolError):
+            serve_channel(agent, ch)

@@ -10,7 +10,7 @@ import pytest
 
 from repro import core
 from repro.comm import (Agent, CommSession, InMemoryTransport,
-                        SerializedTransport)
+                        RemoteTransport, SerializedTransport)
 from repro.core.protocol import TRACE_COUNTS
 from repro.core.types import KVCommConfig
 from repro.data.synthetic import SyntheticTask, TaskConfig
@@ -50,7 +50,10 @@ class TestSchedulerParity:
         lambda: InMemoryTransport(packed=False),
         lambda: SerializedTransport("float32"),
         lambda: SerializedTransport("float32", packed=False),
-    ], ids=["mem_packed", "mem_dense", "ser_packed", "ser_dense"])
+        lambda: RemoteTransport("float32"),
+        lambda: RemoteTransport("float32", packed=False),
+    ], ids=["mem_packed", "mem_dense", "ser_packed", "ser_dense",
+            "rem_packed", "rem_dense"])
     def test_tokens_match_serial(self, tiny_cfg, tok, transport):
         sess, _, _ = _session(tiny_cfg, tok, transport())
         reqs = _stream(tok)
@@ -102,6 +105,71 @@ class TestSchedulerParity:
             np.testing.assert_allclose(np.asarray(out.logits[:, 4, :]),
                                        np.asarray(ref.logits[:, 4, :]),
                                        atol=2e-5)
+
+
+class TestEosEarlyExit:
+    """EOS-based early exit (ROADMAP PR-4 follow-up): a slot that emits the
+    EOS token is retired and readmitted instead of decoding out its full
+    budget — with token-for-token parity against the serial reference's
+    stop-at-EOS semantics."""
+
+    def _eos_for(self, sess, reqs):
+        """Pick a token that the model really emits mid-stream (the tiny
+        pair has no trained EOS; any recurring token works — determinism
+        makes the choice stable)."""
+        ser, _ = serve_serial(sess, reqs, KVCFG)
+        counts = {}
+        for c in ser:
+            for t in c.tokens.tolist()[1:]:
+                counts[t] = counts.get(t, 0) + 1
+        assert counts, "streams too short to pick an EOS from"
+        return max(counts, key=counts.get)
+
+    def test_token_parity_with_serial_eos(self, tiny_cfg, tok):
+        sess, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        reqs = _stream(tok, n=6, max_new=(8, 8, 8))
+        eos = self._eos_for(sess, reqs)
+        ser, _ = serve_serial(sess, reqs, KVCFG, eos_token=eos)
+        got, _ = Scheduler(sess, KVCFG, config=SchedulerConfig(
+            capacity=2, prefix_bucket=8, query_bucket=4,
+            eos_token=eos)).run(reqs)
+        assert [c.rid for c in got] == [c.rid for c in ser]
+        for a, b in zip(ser, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        # at least one stream really ended early (otherwise the test
+        # pinned nothing)
+        assert any(len(c.tokens) < r.max_new
+                   for c, r in zip(ser, sorted(reqs, key=lambda r: r.rid)))
+
+    def test_eos_frees_slots_for_readmission(self, tiny_cfg, tok):
+        """The point of early exit: retiring at EOS drains the same stream
+        in fewer slot iterations, because freed rows readmit pending
+        requests instead of decoding dead tokens."""
+        sess, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        reqs = _stream(tok, n=6, max_new=(8, 8, 8))
+        eos = self._eos_for(sess, reqs)
+        cfg_s = dict(capacity=2, prefix_bucket=8, query_bucket=4)
+        _, full = Scheduler(sess, KVCFG,
+                            config=SchedulerConfig(**cfg_s)).run(reqs)
+        got, early = Scheduler(sess, KVCFG, config=SchedulerConfig(
+            eos_token=eos, **cfg_s)).run(reqs)
+        assert len(got) == len(reqs)          # everyone still completes
+        assert early["iterations"] < full["iterations"]
+
+    def test_first_token_eos_completes_immediately(self, tiny_cfg, tok):
+        """A request whose FIRST (prefill) token is the EOS must complete
+        with exactly [eos] — the lagged fetch-queue read retires it."""
+        sess, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        reqs = _stream(tok, n=4, max_new=(6, 6))
+        ser, _ = serve_serial(sess, reqs, KVCFG)
+        eos = int(ser[0].tokens[0])           # rid 0's prefill token
+        ser_e, _ = serve_serial(sess, reqs, KVCFG, eos_token=eos)
+        got, _ = Scheduler(sess, KVCFG, config=SchedulerConfig(
+            capacity=2, prefix_bucket=8, query_bucket=4,
+            eos_token=eos)).run(reqs)
+        assert got[0].tokens.tolist() == [eos]
+        for a, b in zip(ser_e, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
 
 
 class TestDeadSlotsInert:
@@ -205,6 +273,26 @@ class TestNoRetrace:
                     "scheduler_insert"):
             assert TRACE_COUNTS.get(key, 0) == after_first.get(key, 0), \
                 (key, dict(TRACE_COUNTS), after_first)
+
+    def test_remote_admission_reuses_compiled_steps(self, tiny_cfg, tok):
+        """Serving over a RemoteTransport must not cost a single extra
+        trace: the decoded remote view is layout-identical to the
+        in-memory one (same packed layers, same geometry), so admission
+        through the framed codec reuses the very same compiled prefill /
+        insert / ragged-step executables a warmed in-memory scheduler
+        built."""
+        cfg_s = SchedulerConfig(capacity=5, prefix_bucket=8, query_bucket=4)
+        reqs = _stream(tok, n=6, max_new=(5, 3, 1))
+        sess_mem, _, _ = _session(tiny_cfg, tok, InMemoryTransport())
+        Scheduler(sess_mem, KVCFG, config=cfg_s).run(reqs)     # warm
+        base = dict(TRACE_COUNTS)
+        sess_rem, _, _ = _session(tiny_cfg, tok, RemoteTransport("float32"))
+        got, _ = Scheduler(sess_rem, KVCFG, config=cfg_s).run(reqs)
+        assert len(got) == len(reqs)
+        for key in ("ragged_decode_step", "receiver_prefill",
+                    "scheduler_insert"):
+            assert TRACE_COUNTS.get(key, 0) == base.get(key, 0), \
+                (key, dict(TRACE_COUNTS), base)
 
 
 class TestTransportSync:

@@ -1,0 +1,233 @@
+"""The Transport conformance contract.
+
+ONE parameterized contract held over every transport — {InMemory,
+Serialized, Remote/loopback} x {packed, dense} x {homogeneous,
+heterogeneous assignment} x wire dtypes:
+
+  * receiver logits: bit-exact vs ``InMemoryTransport`` for lossless wires
+    (model dtype / fp32), bounded relative delta with full argmax agreement
+    for the lossy ones (fp16 / int8);
+  * measured bytes == the analytic ``kv_wire_bytes`` prediction (incl. the
+    int8 per-layer scales);
+  * ``TransferRecord`` latency stamping, the ``sync=False`` deferred-stamp
+    path, ``flush_latency`` / ``poll_latency`` semantics — identical
+    behavior whichever transport is underneath.
+
+Every future transport should add itself to ``TRANSPORTS`` below and pass
+unchanged."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.comm import (InMemoryTransport, RemoteTransport,
+                        SerializedTransport)
+from repro.core.types import KVCommConfig
+from repro.models import transformer as tfm
+
+# name -> (factory(packed, sync), wire itemsize or None for int8)
+TRANSPORTS = {
+    "mem": lambda **kw: InMemoryTransport(**kw),
+    "ser_fp32": lambda **kw: SerializedTransport("float32", **kw),
+    "ser_fp16": lambda **kw: SerializedTransport("float16", **kw),
+    "ser_int8": lambda **kw: SerializedTransport("int8", **kw),
+    "rem_fp32": lambda **kw: RemoteTransport("float32", **kw),
+    "rem_fp16": lambda **kw: RemoteTransport("float16", **kw),
+    "rem_int8": lambda **kw: RemoteTransport("int8", **kw),
+}
+# lossless = the receiver's logits must be bit-identical to InMemory
+LOSSLESS = {"mem", "ser_fp32", "rem_fp32"}
+ITEMSIZE = {"mem": 4, "ser_fp32": 4, "rem_fp32": 4,
+            "ser_fp16": 2, "rem_fp16": 2, "ser_int8": 1, "rem_int8": 1}
+PACKING = {"packed": True, "dense": False}
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+
+def expected_bytes(cfg, B, Sc, M, name) -> int:
+    """The analytic wire prediction per transport: KV payload at the wire
+    itemsize, plus the per-layer fp32 scales an int8 wire ships."""
+    n = core.kv_wire_bytes(cfg, B, Sc, M, itemsize=ITEMSIZE[name])
+    if name.endswith("int8"):
+        n += 2 * M * 4          # k and v scales: (M,1,1,1,1) float32 each
+    return n
+
+
+@pytest.fixture(scope="module")
+def homo(tiny_cfg, tiny_params):
+    """Sender KV + selection + a query for the homogeneous matrix."""
+    cfg = tiny_cfg
+    ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                             cfg.vocab_size)
+    qry = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 4,
+                             cfg.vocab_size)
+    kv, _ = core.sender_prefill(tiny_params, cfg, ctx)
+    select = core.make_selection(cfg, KVCFG)
+    return cfg, tiny_params, kv, select, qry
+
+
+@pytest.fixture(scope="module")
+def ref_logits(homo):
+    """The InMemoryTransport (packed) receiver logits — the one reference
+    every other cell is held against."""
+    cfg, params, kv, select, qry = homo
+    shared = InMemoryTransport().send(cfg, KVCFG, kv, select)
+    out = core.receiver_prefill(params, cfg, qry, shared, max_new=0)
+    return np.asarray(out.logits)
+
+
+class TestHomogeneousContract:
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_logits_vs_inmemory(self, homo, ref_logits, name, packing):
+        cfg, params, kv, select, qry = homo
+        t = TRANSPORTS[name](packed=PACKING[packing])
+        shared = t.send(cfg, KVCFG, kv, select)
+        assert shared.is_packed == PACKING[packing]
+        out = core.receiver_prefill(params, cfg, qry, shared, max_new=0)
+        got = np.asarray(out.logits)
+        if name in LOSSLESS:
+            np.testing.assert_array_equal(got, ref_logits)
+        else:
+            rel = np.max(np.abs(got - ref_logits)) \
+                / max(np.max(np.abs(ref_logits)), 1e-9)
+            assert rel < 0.05, f"lossy wire drifted {rel:.3f} rel"
+            np.testing.assert_array_equal(got.argmax(-1),
+                                          ref_logits.argmax(-1))
+
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_measured_bytes_match_analytics(self, homo, name, packing):
+        cfg, _, kv, select, qry = homo
+        t = TRANSPORTS[name](packed=PACKING[packing])
+        t.send(cfg, KVCFG, kv, select)
+        M = int(np.asarray(select).sum())
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        assert t.total_bytes == expected_bytes(cfg, B, Sc, M, name)
+        assert t.last.layers == M
+        assert t.last.context_len == Sc
+
+    def test_remote_frame_overhead_is_accounted(self, homo):
+        """The frame (header + CRC) is real overhead the payload count must
+        NOT hide: frame_bytes strictly exceeds n_bytes, and only the remote
+        transport reports it."""
+        cfg, _, kv, select, _ = homo
+        rem = RemoteTransport("float16")
+        ser = SerializedTransport("float16")
+        rem.send(cfg, KVCFG, kv, select)
+        ser.send(cfg, KVCFG, kv, select)
+        assert rem.last.n_bytes == ser.last.n_bytes
+        assert rem.last.frame_bytes > rem.last.n_bytes
+        assert ser.last.frame_bytes == 0
+
+
+class TestLatencyContract:
+    """Stamping semantics are part of the Transport contract — every
+    implementation must behave identically."""
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_sync_send_stamps(self, homo, name):
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name]()
+        t.send(cfg, KVCFG, kv, select)
+        assert t.last.latency_s > 0.0
+        assert not t._pending
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_async_defers_then_flush_settles(self, homo, name):
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name](sync=False)
+        t.send(cfg, KVCFG, kv, select)
+        assert t.last.latency_s == 0.0        # deferred, not yet measured
+        assert t.flush_latency() == 1
+        assert t.last.latency_s > 0.0
+        assert t.flush_latency() == 0         # idempotent
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_later_synced_send_settles_backlog(self, homo, name):
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name]()
+        t.send(cfg, KVCFG, kv, select, sync=False)
+        t.send(cfg, KVCFG, kv, select, sync=True)
+        assert all(r.latency_s > 0.0 for r in t.log)
+        assert not t._pending
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_poll_releases_drained(self, homo, name):
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name](sync=False)
+        shared = t.send(cfg, KVCFG, kv, select)
+        jax.block_until_ready(shared)
+        assert t.poll_latency() == 1
+        assert not t._pending and t.last.latency_s > 0.0
+
+    def test_remote_breakdown_sums_into_latency(self, homo):
+        cfg, _, kv, select, _ = homo
+        t = RemoteTransport("float16")
+        t.send(cfg, KVCFG, kv, select)
+        r = t.last
+        assert r.serialize_s > 0 and r.deserialize_s > 0
+        assert r.channel_s >= 0
+        assert r.serialize_s + r.channel_s + r.deserialize_s \
+            <= r.latency_s + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous assignment across the same matrix
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def hetero(tok, tiny_cfg, tiny_params):
+    """A 4-layer sender mapped into a 6-layer receiver."""
+    r_cfg = dataclasses.replace(tiny_cfg, num_layers=6)
+    r_params = tfm.init_params(r_cfg, jax.random.PRNGKey(7))
+    ctx = jax.random.randint(jax.random.PRNGKey(3), (2, 7), 4,
+                             tiny_cfg.vocab_size)
+    qry = jax.random.randint(jax.random.PRNGKey(4), (2, 4), 4,
+                             tiny_cfg.vocab_size)
+    kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+    assignment = core.get_layer_map("depth_proportional").assign(
+        (0, 1, 3), num_src_layers=4, num_dst_layers=6)
+    return tiny_cfg, r_cfg, r_params, kv, assignment, qry
+
+
+@pytest.fixture(scope="module")
+def hetero_ref(hetero):
+    s_cfg, r_cfg, r_params, kv, assignment, qry = hetero
+    shared = InMemoryTransport().send(s_cfg, KVCFG, kv, None,
+                                      assignment=assignment)
+    out = core.receiver_prefill(r_params, r_cfg, qry, shared, max_new=0)
+    return np.asarray(out.logits)
+
+
+class TestHeterogeneousContract:
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_mapped_logits_and_bytes(self, hetero, hetero_ref, name,
+                                     packing):
+        s_cfg, r_cfg, r_params, kv, assignment, qry = hetero
+        t = TRANSPORTS[name](packed=PACKING[packing])
+        shared = t.send(s_cfg, KVCFG, kv, None, assignment=assignment)
+        # RECEIVER-keyed view whichever transport moved it
+        np.testing.assert_array_equal(
+            np.asarray(shared.select), np.asarray(assignment.dst_mask()))
+        if PACKING[packing]:
+            assert shared.layers == tuple(assignment.dst)
+            assert shared.src_layers == tuple(assignment.src)
+        out = core.receiver_prefill(r_params, r_cfg, qry, shared, max_new=0)
+        got = np.asarray(out.logits)
+        if name in LOSSLESS:
+            np.testing.assert_array_equal(got, hetero_ref)
+        else:
+            rel = np.max(np.abs(got - hetero_ref)) \
+                / max(np.max(np.abs(hetero_ref)), 1e-9)
+            assert rel < 0.05
+            np.testing.assert_array_equal(got.argmax(-1),
+                                          hetero_ref.argmax(-1))
+        # bytes track the mapped pair count P (receiver-side accounting)
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        assert t.total_bytes == expected_bytes(
+            s_cfg, B, Sc, assignment.num_pairs, name)
+        assert t.last.layers == assignment.num_pairs
