@@ -72,6 +72,23 @@ def bench_transport(name: str, make, batch, ratio: float) -> dict:
     return row
 
 
+def bench_paged(batch, ratio: float) -> dict:
+    """The dedup-aware paged wire: same share repeated through a
+    ``PageStore``-backed loopback — the repeats should hit the pool and
+    ship (almost) nothing.  See ``store_bench.py`` for the full sweeps."""
+    from repro.store import PageStore
+    session, _, _ = common.make_session(
+        RemoteTransport(WIRE, store=PageStore()))
+    kvcfg = KVCommConfig(ratio=ratio, selector="prior_only")
+    for _ in range(1 + ITERS):
+        session.share(batch["context"], kvcfg)
+    summary = session.dedup_summary()
+    summary.update(transport="remote_loop_paged", ratio=ratio,
+                   first_bytes=session.transport.log[0].n_bytes,
+                   repeat_bytes=session.transport.log[-1].n_bytes)
+    return summary
+
+
 def main() -> None:
     _, _, tok = common.make_session()
     batch = common.eval_batch(tok, "countries", BATCH)
@@ -92,6 +109,12 @@ def main() -> None:
             print(f"ratio {ratio}: {name:<12} {row['latency_ms']:7.2f} ms "
                   f"({row['payload_bytes']} B, "
                   f"{row['vs_inmemory']:.2f}x in-memory){extra}")
+        paged = bench_paged(batch, ratio)
+        rows.append(paged)
+        print(f"ratio {ratio}: {'remote_paged':<12} dedup hit rate "
+              f"{paged['hit_rate']:.2f} over {paged['transfers']} transfers "
+              f"({paged['first_bytes']} B cold, "
+              f"{paged['repeat_bytes']} B repeat)")
     out = {"wire_dtype": WIRE, "iters": ITERS, "batch": BATCH, "rows": rows}
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)

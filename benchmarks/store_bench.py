@@ -1,0 +1,141 @@
+"""Paged prefix store: what content-addressed dedup buys on the wire.
+
+Two sweeps over the trained pair, both through ``RemoteTransport`` with a
+``PageStore`` attached (the full framed paged exchange):
+
+  fan-out   — N receivers admit the SAME shared context.  The first
+              transfer ships every page; the other N-1 hit the pool, so
+              total bytes should collapse toward 1/N of the unpaged cost
+              (plus the per-transfer int8-scale/state floor).
+  eviction  — a working set of distinct contexts is streamed twice
+              through pools sized at shrinking fractions of the working
+              set.  At fraction 1.0 the second pass fully dedups; as
+              capacity shrinks the LRU pool starts evicting and the
+              second-pass hit rate decays toward zero.
+
+Writes ``BENCH_store.json`` at the repo root (CI uploads it as an
+artifact); env knobs: REPRO_STORE_N (batch, default 8),
+REPRO_STORE_PAGE_LEN (default 16), REPRO_STORE_WIRE (default float16),
+REPRO_STORE_CTXS (eviction working-set size, default 6).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from repro.comm import RemoteTransport
+from repro.core.channel import kv_wire_bytes
+from repro.core.types import KVCommConfig
+from repro.store import PageStore
+
+BATCH = int(os.environ.get("REPRO_STORE_N", "8"))
+PAGE_LEN = int(os.environ.get("REPRO_STORE_PAGE_LEN", "16"))
+WIRE = os.environ.get("REPRO_STORE_WIRE", "float16")
+N_CTXS = int(os.environ.get("REPRO_STORE_CTXS", "6"))
+FAN_OUTS = (1, 2, 4, 8)
+CAP_FRACS = (1.0, 0.5, 0.25, 0.125)
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+ITEMSIZE = {"float16": 2, "bfloat16": 2, "float32": 4, "int8": 1}[WIRE]
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_store.json")
+
+
+def paged_session(store: PageStore):
+    session, cfg, _ = common.make_session(RemoteTransport(WIRE, store=store))
+    return session, cfg
+
+
+def unpaged_bytes(cfg, context) -> int:
+    """Analytic per-transfer cost of the same share without the store."""
+    sel = KVCFG.num_selected(cfg.attn_layer_count)
+    return kv_wire_bytes(cfg, context.shape[0], context.shape[1], sel,
+                         itemsize=ITEMSIZE)
+
+
+def fan_out_sweep(tok) -> list:
+    rows = []
+    for n in FAN_OUTS:
+        store = PageStore(page_len=PAGE_LEN)
+        session, cfg = paged_session(store)
+        batch = common.eval_batch(tok, "countries", BATCH)
+        for _ in range(n):                     # N receivers, same prefix
+            session.share(batch["context"], KVCFG)
+        summary = session.dedup_summary()
+        dense = n * unpaged_bytes(cfg, batch["context"])
+        row = {
+            "fan_out": n,
+            "paged_bytes": summary["bytes"],
+            "unpaged_bytes": dense,
+            "bytes_saved_frac": 1.0 - summary["bytes"] / dense,
+            **{k: summary[k] for k in ("pages_total", "pages_sent",
+                                       "pages_hit", "hit_rate")},
+        }
+        rows.append(row)
+        print(f"fan-out {n}: {row['paged_bytes']:>9} B paged vs "
+              f"{dense:>9} B unpaged "
+              f"(saved {row['bytes_saved_frac'] * 100:5.1f}%, "
+              f"hit rate {row['hit_rate']:.2f})")
+    return rows
+
+
+def eviction_sweep(tok) -> list:
+    """Stream N_CTXS distinct contexts twice; shrink the pool each run."""
+    batch = common.eval_batch(tok, "countries", 2 * N_CTXS)
+    ctxs = [batch["context"][2 * i:2 * i + 2] for i in range(N_CTXS)]
+
+    # size the working set with an effectively unbounded pool
+    probe = PageStore(page_len=PAGE_LEN)
+    session, _ = paged_session(probe)
+    per_transfer = 0
+    for ctx in ctxs:
+        session.share(ctx, KVCFG)
+        session.transport.release_table()
+        per_transfer = per_transfer or probe.stats().used_bytes
+    working_set = probe.stats().used_bytes
+
+    rows = []
+    for frac in CAP_FRACS:
+        # a transfer's own pages are pinned while live — the pool can
+        # never be smaller than one transfer's page set
+        cap = max(per_transfer, int(working_set * frac))
+        store = PageStore(page_len=PAGE_LEN, capacity_bytes=cap)
+        session, _ = paged_session(store)
+        for ctx in ctxs:                       # pass 1: populate
+            session.share(ctx, KVCFG)
+            session.transport.release_table()
+        session.transport.log.clear()
+        for ctx in ctxs:                       # pass 2: measured
+            session.share(ctx, KVCFG)
+            session.transport.release_table()
+        summary = session.dedup_summary()
+        stats = store.stats()
+        row = {
+            "capacity_frac": frac,
+            "capacity_bytes": cap,
+            "working_set_bytes": working_set,
+            "second_pass_hit_rate": summary["hit_rate"],
+            "second_pass_bytes": summary["bytes"],
+            "evictions": stats.evictions,
+        }
+        rows.append(row)
+        print(f"capacity {frac:>5.3f}x: second-pass hit rate "
+              f"{row['second_pass_hit_rate']:.2f} "
+              f"({row['second_pass_bytes']} B, "
+              f"{row['evictions']} evictions)")
+    return rows
+
+
+def main() -> None:
+    _, _, tok = common.make_session()
+    print(f"page_len={PAGE_LEN} wire={WIRE} batch={BATCH}")
+    fan_rows = fan_out_sweep(tok)
+    ev_rows = eviction_sweep(tok)
+    out = {"wire_dtype": WIRE, "page_len": PAGE_LEN, "batch": BATCH,
+           "ratio": KVCFG.ratio, "fan_out": fan_rows, "eviction": ev_rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,7 +58,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.channel import TransferRecord
 from repro.core.layermap import LayerAssignment
-from repro.core.protocol import selected_layer_ids
+from repro.core.protocol import (gather_mapped, gather_selected,
+                                 selected_layer_ids)
 from repro.core.types import KVCommConfig, SharedKV
 from repro.comm.transport import (Transport, _WIRE_DTYPES, decode_wire,
                                   encode_wire, selected_count)
@@ -196,7 +197,16 @@ class FileChannel(RemoteChannel):
     sees a half-written chunk); ``read`` tails the chunk sequence in order,
     polling up to ``timeout_s`` for the next chunk to appear.  Two processes
     sharing a directory get a one-way channel; consumed chunks are unlinked
-    by default so staging space stays bounded."""
+    after the read so staging space stays bounded.
+
+    Chunk names are namespaced by a per-connection NONCE: the writer mints
+    one on its first ``write``, publishes it through an atomically-renamed
+    ``<name>.nonce`` marker (clearing any stale chunks a dead pair left
+    under this channel name), and the reader adopts whatever the marker
+    says — re-checking it until its first chunk lands, so a reader that
+    raced a writer restart locks onto the NEW stream instead of consuming
+    a dead pair's leftovers.  Without the nonce, both sides restarting at
+    sequence 0 could silently replay stale chunk files as fresh frames."""
 
     def __init__(self, directory: str, name: str = "kv",
                  poll_s: float = 0.01, timeout_s: float = 10.0,
@@ -211,11 +221,50 @@ class FileChannel(RemoteChannel):
         self._rseq = 0
         self._rbuf = b""
         self._roff = 0
+        self._nonce: Optional[str] = None
+        self._published = False        # True once THIS side minted the nonce
+
+    def _marker(self) -> str:
+        return os.path.join(self.directory, f"{self.name}.nonce")
 
     def _path(self, seq: int) -> str:
-        return os.path.join(self.directory, f"{self.name}.{seq:08d}.chunk")
+        assert self._nonce is not None
+        return os.path.join(
+            self.directory, f"{self.name}.{self._nonce}.{seq:08d}.chunk")
+
+    def _publish_nonce(self) -> None:
+        self._nonce = os.urandom(6).hex()
+        self._published = True
+        # a fresh writer owns the channel name: clear whatever chunks a
+        # dead pair left so a restarted reader can never consume them
+        for fn in os.listdir(self.directory):
+            if fn.startswith(self.name + ".") and fn.endswith(".chunk"):
+                try:
+                    os.unlink(os.path.join(self.directory, fn))
+                except OSError:
+                    pass
+        tmp = self._marker() + "." + self._nonce
+        with open(tmp, "w") as f:
+            f.write(self._nonce)
+        os.replace(tmp, self._marker())
+
+    def _adopt_nonce(self) -> None:
+        """Reader side: take the nonce the writer's marker advertises.
+        Only called before the first chunk has been consumed — after
+        that, the stream identity is locked (a mid-stream nonce change is
+        a writer restart, surfaced as a timeout -> truncated frame, never
+        a silent stream splice)."""
+        try:
+            with open(self._marker(), "r") as f:
+                nonce = f.read().strip()
+        except OSError:
+            return
+        if nonce:
+            self._nonce = nonce
 
     def write(self, data: bytes) -> None:
+        if not self._published:
+            self._publish_nonce()
         tmp = self._path(self._wseq) + ".tmp"
         with open(tmp, "wb") as f:
             f.write(data)
@@ -224,9 +273,14 @@ class FileChannel(RemoteChannel):
 
     def read(self, n: int) -> bytes:
         if self._roff >= len(self._rbuf):
-            path = self._path(self._rseq)
             deadline = time.monotonic() + self.timeout_s
-            while not os.path.exists(path):
+            while True:
+                if not self._published and self._rseq == 0:
+                    self._adopt_nonce()
+                path = (self._path(self._rseq) if self._nonce is not None
+                        else None)
+                if path is not None and os.path.exists(path):
+                    break
                 if time.monotonic() >= deadline:
                     return b""
                 time.sleep(self.poll_s)
@@ -606,13 +660,16 @@ class RemoteTransport(Transport):
 
     def __init__(self, wire_dtype: str = "float16",
                  channel: Optional[RemoteChannel] = None,
-                 packed: bool = True, sync: bool = True) -> None:
-        super().__init__(packed=packed, sync=sync)
+                 packed: bool = True, sync: bool = True,
+                 store=None) -> None:
+        super().__init__(packed=packed, sync=sync, store=store)
         if wire_dtype not in _WIRE_DTYPES:
             raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                              f"one of {sorted(_WIRE_DTYPES)}")
         self.wire_dtype = wire_dtype
         self.channel = channel if channel is not None else LoopbackChannel()
+        self._paged_rx = None          # lazy PagedReceiver over self.store
+        self._xid = 0                  # paged exchange counter
 
     def _ship(self, kvcfg: KVCommConfig, kv, select, states, state_select,
               assignment: Optional[LayerAssignment]) -> SharedKV:
@@ -644,3 +701,86 @@ class RemoteTransport(Transport):
                      assignment: LayerAssignment, states=None,
                      state_select=None) -> SharedKV:
         return self._ship(kvcfg, kv, None, states, state_select, assignment)
+
+    # -- the paged (content-addressed) wire --------------------------------
+    def _send_paged(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                    select, states=None, state_select=None,
+                    assignment: Optional[LayerAssignment] = None
+                    ) -> SharedKV:
+        """The dedup-aware three-frame exchange (``repro.store.wire``):
+        ``page_query`` carries the block table (+ int8 scales),
+        ``page_need`` answers with the pool's missing IDs, ``page_data``
+        ships only those pages (+ states).  As with ``_ship``, one object
+        plays both roles over its channel — frames byte-identical to the
+        two-process split ``launch.remote_serve`` drives."""
+        # deferred so repro.comm never hard-depends on repro.store at
+        # import time (the store package imports this module's codec)
+        from repro.store.paging import split_payload
+        from repro.store.wire import (PagedReceiver, decode_page_need,
+                                      encode_page_data, encode_page_query)
+        if self._paged_rx is None or self._paged_rx.store is not self.store:
+            self._paged_rx = PagedReceiver(self.store)
+        if assignment is not None:
+            payload = gather_mapped(kv, assignment)
+            layers = tuple(assignment.dst)
+            src_layers = tuple(assignment.src)
+            sel_mask = np.asarray(assignment.dst_mask())
+            layer_count = assignment.num_pairs
+        else:
+            payload = gather_selected(kv, jnp.asarray(select))
+            layers = selected_layer_ids(select)
+            src_layers = None
+            sel_mask = np.asarray(select)
+            layer_count = selected_count(select)
+        xid, self._xid = self._xid, self._xid + 1
+        t0 = time.perf_counter()
+        table, pages = split_payload(
+            payload, layers=layers, select=sel_mask,
+            page_len=self.store.page_len, wire_dtype=self.wire_dtype,
+            pos_mode=kvcfg.pos_mode, src_layers=src_layers)
+        by_id = {p.page_id: p for p in pages}
+        qframe = encode_page_query(xid, table)
+        t1 = time.perf_counter()
+        self.channel.write(qframe)
+        kind, meta, arrays = read_frame(self.channel)
+        t2 = time.perf_counter()
+        if kind != "page_query":
+            raise PayloadMismatchError(
+                f"expected a page_query frame, got {kind!r}")
+        need_frame = self._paged_rx.handle_query(meta, arrays)
+        self.channel.write(need_frame)
+        kind, meta, _ = read_frame(self.channel)
+        if kind != "page_need":
+            raise PayloadMismatchError(
+                f"expected a page_need frame, got {kind!r}")
+        _, need = decode_page_need(meta)
+        t3 = time.perf_counter()
+        dframe, _ = encode_page_data(
+            xid, [by_id[pid] for pid in need],
+            wire_dtype=self.wire_dtype, states=states,
+            state_select=state_select)
+        t4 = time.perf_counter()
+        self.channel.write(dframe)
+        kind, meta, arrays = read_frame(self.channel)
+        t5 = time.perf_counter()
+        if kind != "page_data":
+            raise PayloadMismatchError(
+                f"expected a page_data frame, got {kind!r}")
+        shared, table_rx, novel_bytes, state_bytes = \
+            self._paged_rx.handle_data(meta, arrays)
+        if not self.packed:
+            shared = shared.to_dense()
+        self._swap_table(table_rx)
+        t6 = time.perf_counter()
+        self.log.append(TransferRecord(
+            kind="kv",
+            n_bytes=novel_bytes + table_rx.scale_nbytes + state_bytes,
+            layers=layer_count, context_len=table.prefix_len,
+            wire_dtype=self.wire_dtype,
+            serialize_s=(t1 - t0) + (t4 - t3),
+            channel_s=(t2 - t1) + (t5 - t4),
+            deserialize_s=(t3 - t2) + (t6 - t5),
+            frame_bytes=len(qframe) + len(need_frame) + len(dframe),
+            pages_total=table.num_pages, pages_sent=len(need),
+            pages_hit=table.num_pages - len(need)))
+        return shared

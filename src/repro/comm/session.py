@@ -277,6 +277,26 @@ class CommSession:
             self.mailbox.clear()
         return merged
 
+    # ---- paged-store accounting -------------------------------------------
+    def dedup_summary(self) -> Dict[str, float]:
+        """Aggregate the transport log's paged-transfer dedup accounting:
+        how many pages the session's transfers referenced, how many
+        actually crossed, and the pool-hit rate.  Zeroes (and 0 transfers)
+        when no ``PageStore`` is attached — unpaged records carry no page
+        counts."""
+        recs = [r for r in self.transport.log if r.pages_total]
+        total = sum(r.pages_total for r in recs)
+        sent = sum(r.pages_sent for r in recs)
+        hit = sum(r.pages_hit for r in recs)
+        return {
+            "transfers": len(recs),
+            "pages_total": total,
+            "pages_sent": sent,
+            "pages_hit": hit,
+            "hit_rate": (hit / total) if total else 0.0,
+            "bytes": sum(r.n_bytes for r in recs),
+        }
+
     # ---- dispatch ---------------------------------------------------------
     def run(self, method: str, batch: Dict[str, np.ndarray],
             kvcfg: Optional[KVCommConfig] = None,

@@ -197,12 +197,41 @@ class Transport(abc.ABC):
     benchmarks that need the true isolated transfer cost keep
     ``sync=True`` (the constructor default)."""
 
-    def __init__(self, packed: bool = True, sync: bool = True) -> None:
+    def __init__(self, packed: bool = True, sync: bool = True,
+                 store=None) -> None:
         self.log: List[TransferRecord] = []
         self.packed = packed
         self.sync = sync
         # deferred-stamp log: (record, t0, un-synced receiver view)
         self._pending: List[tuple] = []
+        # paged prefix store (repro.store.PageStore): when attached, every
+        # KV send routes through the content-addressed paged path — the
+        # payload is split into fixed-size pages, only the pages the
+        # store's pool is missing are counted as moved, and the record
+        # carries the pages_total/pages_sent/pages_hit dedup breakdown
+        self.store = store
+        # the last send's BlockTable, held PINNED in the store until the
+        # next paged send (or release_table) — the serving scheduler
+        # gathers admission prefixes from it
+        self.last_table = None
+
+    def attach_store(self, store) -> None:
+        """Attach (or replace) the paged prefix store; subsequent sends
+        route through it."""
+        self.release_table()
+        self.store = store
+
+    def release_table(self) -> None:
+        """Unpin the last paged send's block table (its pages become
+        evictable again)."""
+        if self.last_table is not None and self.store is not None:
+            self.store.release(self.last_table)
+        self.last_table = None
+
+    def _swap_table(self, table) -> None:
+        prev, self.last_table = self.last_table, table
+        if prev is not None:
+            self.store.release(prev)
 
     @property
     def total_bytes(self) -> int:
@@ -267,7 +296,10 @@ class Transport(abc.ABC):
             # timer starts, so their drain time cannot inflate it
             self.flush_latency()
         t0 = time.perf_counter()
-        if assignment is not None:
+        if self.store is not None and kv is not None:
+            shared = self._send_paged(cfg, kvcfg, kv, select, states,
+                                      state_select, assignment)
+        elif assignment is not None:
             shared = self._send_mapped(cfg, kvcfg, kv, assignment,
                                        states, state_select)
         else:
@@ -299,6 +331,72 @@ class Transport(abc.ABC):
         raise NotImplementedError(
             f"{type(self).__name__} does not support mapped "
             "(heterogeneous) transfers; override _send_mapped")
+
+    # -- the paged (content-addressed) path --------------------------------
+    def _paged_wire_dtype(self, kv) -> str:
+        """The wire dtype the store hashes/pages at.  Transports with an
+        explicit wire dtype use it; the in-memory hand-over pages at the
+        model's own dtype (a lossless cast), falling back to fp32 when the
+        compute dtype has no wire form."""
+        wd = getattr(self, "wire_dtype", None)
+        if wd is not None:
+            return wd
+        name = np.dtype(kv["k"].dtype).name
+        return name if name in _WIRE_DTYPES else "float32"
+
+    def _paged_states(self, states, state_select):
+        """States ride ALONGSIDE the paged KV (sequence-axis paging does
+        not apply to fixed-size SSM state): wire-dtype transports
+        round-trip them through the codec, the in-memory hand-over passes
+        them through at analytic bytes."""
+        wd = getattr(self, "wire_dtype", None)
+        if wd is None:
+            return states, payload_bytes(None, None, states, state_select)
+        return roundtrip_states(states, state_select, wd)
+
+    def _send_paged(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                    select, states=None, state_select=None,
+                    assignment: Optional[LayerAssignment] = None
+                    ) -> SharedKV:
+        """The store-routed transfer shared by the in-process transports:
+        gather the selected (or assignment-mapped) payload, ingest it into
+        the attached ``PageStore`` (dedup against the pool happens there),
+        and materialize the receiver view back out of the pool — so what
+        the receiver consumes is, by construction, what the pages hold.
+        Counted bytes are the NOVEL pages only (plus int8 scales and
+        states): the dedup win the record's pages_* fields break down.
+        ``RemoteTransport`` overrides this with the framed
+        page_query/page_need/page_data exchange."""
+        if assignment is not None:
+            payload = gather_mapped(kv, assignment)
+            layers = tuple(assignment.dst)
+            src_layers = tuple(assignment.src)
+            sel_mask = np.asarray(assignment.dst_mask())
+            layer_count = assignment.num_pairs
+        else:
+            payload = gather_selected(kv, jnp.asarray(select))
+            layers = selected_layer_ids(select)
+            src_layers = None
+            sel_mask = np.asarray(select)
+            layer_count = selected_count(select)
+        wd = self._paged_wire_dtype(kv)
+        table, novel, novel_bytes = self.store.ingest(
+            payload, layers=layers, select=sel_mask, wire_dtype=wd,
+            pos_mode=kvcfg.pos_mode, src_layers=src_layers)
+        rx_states, state_bytes = self._paged_states(states, state_select)
+        shared = self.store.materialize(table, states=rx_states,
+                                        state_select=state_select)
+        if not self.packed:
+            shared = shared.to_dense()
+        self._swap_table(table)
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=novel_bytes + table.scale_nbytes
+            + state_bytes,
+            layers=layer_count, context_len=table.prefix_len,
+            wire_dtype=getattr(self, "wire_dtype", "model"),
+            pages_total=table.num_pages, pages_sent=len(novel),
+            pages_hit=table.num_pages - len(novel)))
+        return shared
 
     def send_text(self, token_count: int, bytes_per_token: int = 2) -> int:
         """Account an NLD/CIPHER-style natural-language transfer."""
@@ -376,8 +474,9 @@ class SerializedTransport(Transport):
     """
 
     def __init__(self, wire_dtype: str = "float16",
-                 packed: bool = True, sync: bool = True) -> None:
-        super().__init__(packed=packed, sync=sync)
+                 packed: bool = True, sync: bool = True,
+                 store=None) -> None:
+        super().__init__(packed=packed, sync=sync, store=store)
         if wire_dtype not in _WIRE_DTYPES:
             raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                              f"one of {sorted(_WIRE_DTYPES)}")

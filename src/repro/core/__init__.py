@@ -1,6 +1,6 @@
 """KVComm core: the paper's contribution as a composable JAX module."""
 from repro.core.channel import (Channel, TransferRecord, combine_senders,
-                                kv_wire_bytes)
+                                kv_wire_bytes, kv_wire_bytes_paged)
 from repro.core.layermap import (LAYER_MAPS, LayerAssignment, LayerMap,
                                  get_layer_map, register_layer_map)
 from repro.core.protocol import (build_mapped, build_packed, build_shared,
@@ -23,7 +23,8 @@ __all__ = [
     "build_shared", "calibrate", "combine_senders", "decode_step",
     "extract_kv", "extract_states", "gather_mapped", "gather_selected",
     "gaussian_prior", "generate", "get_layer_map", "interp_scores",
-    "kendall_tau", "kv_wire_bytes", "make_selection", "normalize_scores",
+    "kendall_tau", "kv_wire_bytes", "kv_wire_bytes_paged", "make_selection",
+    "normalize_scores",
     "pack_mapped", "pack_shared", "pad_prefix", "ragged_decode_step",
     "receiver_decode", "receiver_prefill",
     "register_layer_map", "scatter_mapped", "select_layers",

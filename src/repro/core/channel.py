@@ -39,6 +39,20 @@ class TransferRecord:
                                 # and checksum (0 for in-process transports;
                                 # n_bytes stays the payload-only count that
                                 # matches the kv_wire_bytes analytics)
+    # paged-store dedup accounting (zero on the unpaged path): the block
+    # table referenced pages_total pages, of which pages_hit were already
+    # resident in the receiver's pool and only pages_sent crossed; n_bytes
+    # then matches the kv_wire_bytes_paged analytics at pages_sent.
+    pages_total: int = 0
+    pages_sent: int = 0
+    pages_hit: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of this transfer's pages the receiver already held
+        (0.0 for unpaged transfers)."""
+        return (self.pages_hit / self.pages_total) if self.pages_total \
+            else 0.0
 
 
 @dataclass
@@ -121,4 +135,25 @@ def kv_wire_bytes(cfg: ModelConfig, batch: int, context_len: int,
                   num_layers_sent: int, itemsize: int = 2) -> int:
     """Analytic wire bytes for KV transfer (cross-check for tests)."""
     return (2 * num_layers_sent * batch * context_len
+            * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize)
+
+
+def kv_wire_bytes_paged(cfg: ModelConfig, batch: int, context_len: int,
+                        num_layers_sent: int, *, page_len: int,
+                        pages_sent: Optional[int] = None,
+                        itemsize: int = 2) -> int:
+    """Analytic wire bytes for a PAGED KV transfer: ``pages_sent`` pages
+    (default: every page the prefix splits into — the cold-pool first
+    transfer) at the fixed page size.  Every page is
+    2 * batch * page_len * Hkv * Dh * itemsize bytes — the tail page is
+    zero-padded up to ``page_len``, so a cold transfer costs slightly MORE
+    than the unpaged ``kv_wire_bytes`` unless ``page_len`` divides
+    ``context_len``; dedup (``pages_sent`` < the total) is where the paged
+    wire wins.  Block-table IDs and int8 scales are control plane /
+    side-band and not counted here (same convention as ``kv_wire_bytes``
+    leaving out the int8 scales)."""
+    pages_per_layer = -(-context_len // page_len)    # ceil
+    total = num_layers_sent * pages_per_layer
+    sent = total if pages_sent is None else pages_sent
+    return (2 * sent * batch * page_len
             * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize)

@@ -47,13 +47,26 @@ from repro.core.types import KVCommConfig, SharedKV
 # ---------------------------------------------------------------------------
 # server half (receiver side)
 # ---------------------------------------------------------------------------
-def serve_channel(agent: Agent, channel: RemoteChannel) -> int:
+def serve_channel(agent: Agent, channel: RemoteChannel,
+                  store=None) -> int:
     """The receiver-side protocol loop, channel-agnostic (tests drive it
     over a loopback).  A clean peer close ends the loop; a *mid-frame*
     disconnect or corrupt frame propagates as the typed
     ``RemoteProtocolError`` — the server never answers from a half-decoded
-    prefix.  Returns the number of query frames answered."""
+    prefix.  Returns the number of query frames answered.
+
+    With a ``store`` (``repro.store.PageStore``) attached the loop also
+    speaks the paged wire: ``page_query`` frames are answered with the
+    pool's missing-page set and the matching ``page_data`` frame installs
+    the materialized prefix — the content-addressed cache server.  The
+    installed prefix's block table stays pinned (its pages cannot be
+    evicted out from under in-flight queries) until the next paged
+    transfer replaces it."""
     from repro.comm.remote import decode_kv_transfer
+    paged_rx = pinned = None
+    if store is not None:
+        from repro.store.wire import PagedReceiver
+        paged_rx = PagedReceiver(store)
     shared: Optional[SharedKV] = None
     answered = 0
     while True:
@@ -65,6 +78,13 @@ def serve_channel(agent: Agent, channel: RemoteChannel) -> int:
             break
         if kind == "shared_kv":
             shared, _ = decode_kv_transfer(meta, arrays)
+        elif kind == "page_query" and paged_rx is not None:
+            channel.write(paged_rx.handle_query(meta, arrays))
+        elif kind == "page_data" and paged_rx is not None:
+            shared, table, _, _ = paged_rx.handle_data(meta, arrays)
+            if pinned is not None:
+                store.release(pinned)
+            pinned = table
         elif kind == "query":
             if shared is None:
                 # answering from no prefix would be confidently wrong, not
@@ -79,6 +99,8 @@ def serve_channel(agent: Agent, channel: RemoteChannel) -> int:
             answered += 1
         else:
             raise RemoteProtocolError(f"unexpected frame kind {kind!r}")
+    if pinned is not None:
+        store.release(pinned)
     return answered
 
 
@@ -88,8 +110,10 @@ class KVServer:
     ``serve_once`` accepts a single connection and serves it to shutdown."""
 
     def __init__(self, agent: Agent, host: str = "127.0.0.1",
-                 port: int = 0) -> None:
+                 port: int = 0, store=None) -> None:
         self.agent = agent
+        self.store = store   # repro.store.PageStore: the evicting pool the
+                             # paged wire dedups against across connections
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -102,10 +126,32 @@ class KVServer:
         self._listener.settimeout(timeout_s)
         sock, _ = self._listener.accept()
         try:
-            return serve_channel(self.agent, SocketChannel(sock))
+            return serve_channel(self.agent, SocketChannel(sock),
+                                 store=self.store)
         finally:
             sock.close()
             self._listener.close()
+
+    def serve(self, conns: int, timeout_s: float = 120.0) -> int:
+        """Accept ``conns`` sequential clients over the same listener.
+        The page pool outlives each connection, so a later client's
+        ``page_query`` dedups against every earlier client's pages —
+        this is what makes the paged server a cross-request cache.
+        Returns the total number of query frames answered."""
+        self._listener.settimeout(timeout_s)
+        answered = 0
+        try:
+            for _ in range(conns):
+                sock, _ = self._listener.accept()
+                try:
+                    answered += serve_channel(self.agent,
+                                              SocketChannel(sock),
+                                              store=self.store)
+                finally:
+                    sock.close()
+        finally:
+            self._listener.close()
+        return answered
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +163,7 @@ class KVClient:
     def __init__(self, channel: RemoteChannel) -> None:
         self.channel = channel
         self.sent_bytes = 0
+        self._xid = 0
 
     @classmethod
     def connect(cls, host: str, port: int,
@@ -140,6 +187,49 @@ class KVClient:
                         packed=packed)
         self.sent_bytes += n
         return n
+
+    def share_paged(self, sender: Agent, context: np.ndarray,
+                    kvcfg: KVCommConfig, select, *, page_len: int = 16,
+                    wire_dtype: str = "float16") -> Tuple[int, int, int]:
+        """Dedup-aware share: split the selected KV into content-addressed
+        pages, ask the server's pool which it is missing (``page_query`` ->
+        ``page_need``), and ship ONLY those (``page_data``).  The sender
+        needs no pool of its own — the server's ``PageStore`` is the single
+        source of residency truth.  Returns ``(payload_bytes, pages_total,
+        pages_sent)``; payload bytes (novel pages + int8 scales + states)
+        accumulate on ``sent_bytes``."""
+        from repro import core
+        from repro.core.protocol import gather_selected
+        from repro.store.paging import split_payload
+        from repro.store.wire import (decode_page_need, encode_page_data,
+                                      encode_page_query)
+        import jax.numpy as jnp
+        kv, states, _ = sender.export_kv(context)
+        state_select = None
+        if states is not None:
+            import jax
+            n_ssm = jax.tree.leaves(states)[0].shape[0]
+            state_select = np.ones((n_ssm,), bool)
+        payload = gather_selected(kv, jnp.asarray(select))
+        table, pages = split_payload(
+            payload, layers=core.selected_layer_ids(select),
+            select=np.asarray(select), page_len=page_len,
+            wire_dtype=wire_dtype, pos_mode=kvcfg.pos_mode)
+        xid, self._xid = self._xid, self._xid + 1
+        self.channel.write(encode_page_query(xid, table))
+        kind, meta, _ = read_frame(self.channel)
+        if kind != "page_need":
+            raise RemoteProtocolError(f"expected a page_need frame, "
+                                      f"got {kind!r}")
+        _, need = decode_page_need(meta)
+        by_id = {p.page_id: p for p in pages}
+        frame, n = encode_page_data(
+            xid, [by_id[pid] for pid in need], wire_dtype=wire_dtype,
+            states=states, state_select=state_select)
+        self.channel.write(frame)
+        n += table.scale_nbytes
+        self.sent_bytes += n
+        return n, table.num_pages, len(need)
 
     def generate(self, query: np.ndarray, max_new: int = 1) -> np.ndarray:
         """Ask the remote receiver to answer ``query`` (B, Sq) against the
@@ -173,12 +263,26 @@ def _load_agents() -> Tuple[Agent, Agent, object]:
 
 def run_server(args) -> None:
     _, receiver, _ = _load_agents()
-    server = KVServer(receiver, host=args.host, port=args.port)
+    store = None
+    if args.pool_mb > 0:
+        from repro.store import PageStore
+        store = PageStore(page_len=args.page_len,
+                          capacity_bytes=args.pool_mb * (1 << 20))
+    server = KVServer(receiver, host=args.host, port=args.port,
+                      store=store)
     # the orchestrating parent (examples/remote_pair.py) reads this line
     # to learn the bound port before dialing
     print(f"PORT {server.port}", flush=True)
-    answered = server.serve_once(timeout_s=args.timeout)
+    if args.serve_conns > 1:
+        answered = server.serve(args.serve_conns, timeout_s=args.timeout)
+    else:
+        answered = server.serve_once(timeout_s=args.timeout)
     print(f"[server] answered {answered} query frames", flush=True)
+    if store is not None:
+        st = store.stats()
+        print(f"[server] pool: {st.pages} pages, {st.used_bytes} bytes, "
+              f"hit_rate {st.hit_rate:.3f}, {st.evictions} evictions",
+              flush=True)
 
 
 def run_client(args) -> None:
@@ -191,8 +295,15 @@ def run_client(args) -> None:
     select = core.make_selection(sender.cfg, kvcfg)
     client = KVClient.connect(args.host, args.port)
     try:
-        n = client.share(sender, batch["context"], kvcfg, select,
-                         wire_dtype=args.wire_dtype)
+        if args.paged:
+            n, total, sent = client.share_paged(
+                sender, batch["context"], kvcfg, select,
+                page_len=args.page_len, wire_dtype=args.wire_dtype)
+            print(f"[client] paged: {sent}/{total} pages shipped "
+                  f"({total - sent} pool hits)")
+        else:
+            n = client.share(sender, batch["context"], kvcfg, select,
+                             wire_dtype=args.wire_dtype)
         toks = client.generate(batch["query"], max_new=1)
     finally:
         client.close()
@@ -208,6 +319,15 @@ def main(argv=None) -> None:
     s.add_argument("--port", type=int, default=0,
                    help="0 picks a free port (printed as 'PORT <p>')")
     s.add_argument("--timeout", type=float, default=120.0)
+    s.add_argument("--pool-mb", type=int, default=0,
+                   help=">0 attaches a content-addressed page pool of this "
+                        "capacity — the server answers the paged wire and "
+                        "dedups repeat prefixes against it")
+    s.add_argument("--page-len", type=int, default=16)
+    s.add_argument("--serve-conns", type=int, default=1,
+                   help="accept this many sequential client connections; "
+                        "the page pool persists across them (a later "
+                        "client's shares dedup against earlier clients')")
     c = sub.add_parser("client", help="sender-side KV client")
     c.add_argument("--host", default="127.0.0.1")
     c.add_argument("--port", type=int, required=True)
@@ -215,6 +335,10 @@ def main(argv=None) -> None:
     c.add_argument("--ratio", type=float, default=0.5)
     c.add_argument("--wire-dtype", default="float16",
                    choices=["float16", "bfloat16", "float32", "int8"])
+    c.add_argument("--paged", action="store_true",
+                   help="ship via the dedup-aware paged wire (the server "
+                        "must run with --pool-mb > 0)")
+    c.add_argument("--page-len", type=int, default=16)
     args = ap.parse_args(argv)
     if args.role == "server":
         run_server(args)

@@ -329,6 +329,65 @@ def cache_insert_row(table: Dict[str, Any], row: Dict[str, Any], slot,
     return {"len": table["len"], "runs": new_runs}
 
 
+def cache_insert_row_paged(cfg: ModelConfig, table: Dict[str, Any],
+                           row: Dict[str, Any], slot, prefix, *,
+                           layers: Tuple[int, ...], src_prefix: int,
+                           dst_prefix: int,
+                           row_max_len: int) -> Dict[str, Any]:
+    """``cache_insert_row`` that consumes a page-table gather: the prefix
+    region of each selected layer's slot row is written from ``prefix``
+    (the ``PageStore.gather_prefix`` result — a packed
+    ``{"k","v"}: (M, B, src_prefix, Hkv, Dh)`` stack rebuilt from
+    content-addressed pages) instead of from the request row's own
+    buffers.  The self region still comes from ``row`` exactly as in
+    ``cache_insert_row``; ``ctx_valid`` and ``len`` stay untouched.
+
+    Requires the packed (sel/unsel) attention-only cache — ``layers`` is
+    the frozen selection map that partitions each run.  Bit-parity with
+    ``cache_insert_row`` holds because ``gather_prefix`` at the prefix
+    bucket equals the padded prefix the row was prefilled with.
+    Jit-friendly; ``slot`` and ``prefix`` may be traced."""
+    new_runs: List[Any] = []
+    attn_i = 0
+    packed_i = 0   # cursor into the packed (M, ...) prefix, layer-ordered
+    for spec, t_run, r_run in zip(cfg.layer_plan(), table["runs"],
+                                  row["runs"]):
+        n = spec.count
+        if spec.kind not in ("attn", "shared_attn") \
+                or not _is_packed_entry(t_run):
+            raise ValueError("cache_insert_row_paged requires the packed "
+                             "(sel/unsel) attention-only cache")
+        sel, _, _ = _run_partition(attn_i, n, layers)
+        m = len(sel)
+        entry = {}
+        for name in ("sel", "unsel"):
+            t_sub, r_sub = dict(t_run[name]), r_run[name]
+            for part in ("k", "v"):
+                t, r = t_sub[part], r_sub[part]
+                if name == "sel" and m:
+                    pg = prefix[part][packed_i:packed_i + m]
+                    self_len = r.shape[2] - src_prefix
+                    t = t.at[:, slot, :src_prefix].set(
+                        pg[:, 0].astype(t.dtype))
+                    t = t.at[:, slot,
+                             dst_prefix:dst_prefix + self_len].set(
+                        r[:, 0, src_prefix:])
+                elif t.shape[2] == r.shape[2]:
+                    t = t.at[:, slot].set(r[:, 0])
+                else:
+                    t = t.at[:, slot, :r.shape[2]].set(r[:, 0])
+                t_sub[part] = t
+            for part in ("xk", "xv"):
+                if part in t_sub:
+                    t_sub[part] = t_sub[part].at[:, slot].set(
+                        r_sub[part][:, 0])
+            entry[name] = t_sub
+        packed_i += m
+        new_runs.append(entry)
+        attn_i += n
+    return {"len": table["len"], "runs": new_runs}
+
+
 def _seed_states(st, shared, ssm_i, n):
     sel = shared.state_select[ssm_i:ssm_i + n]
     def blend(z, s):

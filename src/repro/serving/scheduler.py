@@ -117,6 +117,28 @@ def _insert_jit(table, row, slot, new_len, src_prefix, dst_prefix,
     return table
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "layers", "src_prefix",
+                                    "dst_prefix", "row_max_len"),
+                   donate_argnums=(0,))
+def _insert_paged_jit(table, row, slot, new_len, prefix, *, cfg, layers,
+                      src_prefix, dst_prefix, row_max_len):
+    """The page-table-consuming admission insert: the prefix region comes
+    from a ``PageStore.gather_prefix`` rebuild instead of the request
+    row's own buffers.  Compiles per (selection, prefix bucket, query
+    bucket) — the page-count bucket IS the prefix bucket (pages are
+    fixed-size), so attaching a store adds no new compile axis."""
+    from repro.core.protocol import TRACE_COUNTS
+    TRACE_COUNTS["scheduler_insert_paged"] += 1
+    table = tfm.cache_insert_row_paged(cfg, table, row, slot, prefix,
+                                       layers=layers,
+                                       src_prefix=src_prefix,
+                                       dst_prefix=dst_prefix,
+                                       row_max_len=row_max_len)
+    table["len"] = table["len"].at[slot].set(new_len)
+    return table
+
+
 # ---------------------------------------------------------------------------
 # the scheduler
 # ---------------------------------------------------------------------------
@@ -188,11 +210,27 @@ class Scheduler:
             prefix_lens=jnp.full((1,), sc_real, jnp.int32))
         tok1 = jnp.argmax(out.logits[:, sq_real - 1, :], axis=-1)  # (1,)
         if req.max_new > 1:
-            state["table"] = _insert_jit(
-                state["table"], out.cache, slot,
-                state["dst_prefix"] + sq_real,
-                src_prefix=scb, dst_prefix=state["dst_prefix"],
-                row_max_len=sqb + state["budget"])
+            store = getattr(sess.transport, "store", None)
+            btab = getattr(sess.transport, "last_table", None)
+            if self.packed and store is not None and btab is not None:
+                # paged admission: rebuild the prefix from the store's
+                # content-addressed pages (bit-identical to the padded
+                # prefix the row was prefilled with) and let the donated
+                # insert consume the page gather.  Must happen before the
+                # NEXT request's share() swaps/releases the pinned table.
+                prefix_pages = store.gather_prefix(btab, scb)
+                state["table"] = _insert_paged_jit(
+                    state["table"], out.cache, slot,
+                    state["dst_prefix"] + sq_real, prefix_pages,
+                    cfg=sess.cfg, layers=self.layers,
+                    src_prefix=scb, dst_prefix=state["dst_prefix"],
+                    row_max_len=sqb + state["budget"])
+            else:
+                state["table"] = _insert_jit(
+                    state["table"], out.cache, slot,
+                    state["dst_prefix"] + sq_real,
+                    src_prefix=scb, dst_prefix=state["dst_prefix"],
+                    row_max_len=sqb + state["budget"])
             state["prefix_lens"] = state["prefix_lens"].at[slot].set(sc_real)
             state["cur_tok"] = state["cur_tok"].at[slot, 0].set(tok1[0])
             state["active"] = state["active"].at[slot].set(True)

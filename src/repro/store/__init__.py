@@ -1,0 +1,39 @@
+"""repro.store — the paged prefix store.
+
+An LMCache-style content-addressed KV page store (SNIPPETS.md snippet 1,
+vllm-project/production-stack): every packed ``SharedKV`` payload is split
+along the sequence axis into fixed-size pages — per-layer
+``(B, page_len, Hkv, Dh)`` wire-dtype blocks, the last page zero-padded to
+the nominal size — keyed by a content hash over (layer, position span, wire
+bytes).  A ``BlockTable`` maps a prefix to its ordered page-ID grid, so two
+transfers that share a sender context share page IDs, and only the pages a
+receiver's pool is missing ever cross the wire (dedup across requests /
+fan-out receivers).
+
+  paging.py — Page / BlockTable, ``split_payload`` / ``rebuild_payload`` /
+              ``rebuild_shared``: the pure split/rebuild half, bit-exact
+              against the unpaged wire codec by construction (the pages ARE
+              slices of the ``encode_wire`` output).
+  pool.py   — ``PagePool``: capacity-accounted page residency with
+              pluggable LRU/priority eviction and pin/unpin refcounts for
+              in-flight requests.
+  store.py  — ``PageStore``: the pool + table façade transports attach to
+              (``Transport(store=...)``) and ``launch.remote_serve``'s
+              cache server holds.
+  wire.py   — the dedup-aware frame protocol (``page_query`` /
+              ``page_need`` / ``page_data`` frame kinds over
+              ``repro.comm.remote``'s framed codec).
+"""
+from repro.store.paging import (BlockTable, Page, page_id_for,
+                                rebuild_payload, rebuild_shared,
+                                split_payload)
+from repro.store.pool import (EVICTION_POLICIES, PagePool, PagePoolError,
+                              PoolFullError, register_eviction_policy)
+from repro.store.store import PageStore, StoreStats
+
+__all__ = [
+    "BlockTable", "EVICTION_POLICIES", "Page", "PagePool", "PagePoolError",
+    "PageStore", "PoolFullError", "StoreStats", "page_id_for",
+    "rebuild_payload", "rebuild_shared", "register_eviction_policy",
+    "split_payload",
+]

@@ -1,0 +1,280 @@
+"""Pages and block tables: the pure split/rebuild half of the store.
+
+A packed ``SharedKV`` payload is one {"k","v"} stack of
+(M, B, Sc, Hkv, Dh).  The store operates on its WIRE form — the exact
+arrays ``repro.comm.transport.encode_wire`` produces (fp16/bf16/fp32 cast,
+or int8 with per-layer fp32 scales) — so a page's bytes are literally a
+slice of what crosses the wire, and two transfers of the same context at
+the same wire dtype produce byte-identical pages (int8 scales are computed
+once over each full layer, so re-quantization cannot perturb page content).
+
+``split_payload`` cuts each packed layer slot's wire arrays along the
+sequence axis into fixed-size pages — (B, page_len, Hkv, Dh) blocks, the
+last one zero-padded up to ``page_len`` — and keys every page by a content
+hash over (layer, position span, geometry, wire dtype, scale bytes, k
+bytes, v bytes).  Identical content under an identical span collides
+deliberately (that IS the dedup); differing bytes under the same span
+cannot (the hash covers them).
+
+The ``BlockTable`` is the control plane: the ordered per-slot page-ID
+grid plus every static field a receiver needs to rebuild the packed
+``SharedKV`` once it holds the pages (``rebuild_payload`` concatenates
+pages, trims the tail padding, and ``rebuild_shared`` decodes back to the
+compute dtype) — bit-exact against the unpaged wire path by construction,
+because trim(concat(split(x))) == x.
+"""
+from __future__ import annotations
+
+import hashlib
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.transport import _WIRE_DTYPES, decode_wire, encode_wire
+from repro.core.types import SharedKV
+
+
+def _wire_np_dtype(name: str) -> np.dtype:
+    """The numpy dtype of a wire array (int8 payloads are int8; float
+    wires are their own dtype, via ml_dtypes for bfloat16)."""
+    if name == "int8":
+        return np.dtype(np.int8)
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def page_id_for(layer: int, start: int, length: int,
+                k: np.ndarray, v: np.ndarray, *, wire_dtype: str,
+                salt: bytes = b"") -> str:
+    """Content hash of one page: 128-bit blake2b over the (layer, span,
+    geometry, wire dtype) preamble, the layer-level ``salt`` (int8 scale
+    bytes — two quantized payloads with equal codes but different scales
+    decode differently and must not collide), and the page's k/v bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    B, page_len, Hkv, Dh = k.shape
+    h.update(struct.pack(">7i", layer, start, length, B, page_len, Hkv, Dh))
+    h.update(wire_dtype.encode("ascii"))
+    h.update(salt)
+    h.update(np.ascontiguousarray(k).tobytes())
+    h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class Page:
+    """One content-addressed block: both halves (k and v) of one packed
+    layer slot's wire KV over positions [start, start+length), zero-padded
+    along the sequence axis up to the store's fixed ``page_len``.  ``layer``
+    is the RECEIVER layer slot (``SharedKV.layers`` keying), so dedup works
+    across transfers that agree on where the KV lands."""
+    page_id: str
+    layer: int
+    start: int
+    length: int                  # real positions (< page_len on the tail)
+    k: np.ndarray                # (B, page_len, Hkv, Dh) wire dtype
+    v: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.k.nbytes + self.v.nbytes)
+
+
+@dataclass(frozen=True)
+class BlockTable:
+    """The static description of one paged prefix: per packed slot, the
+    ordered page IDs covering [0, prefix_len), plus everything needed to
+    rebuild the packed receiver-keyed ``SharedKV`` (``rebuild_shared``).
+    JSON-safe via ``meta()``/``from_meta`` — only the int8 scales travel as
+    arrays (they are payload, counted in wire bytes, not control plane)."""
+    page_ids: Tuple[Tuple[str, ...], ...]   # [M][n_pages], layer order
+    layers: Tuple[int, ...]                 # receiver slots (SharedKV.layers)
+    select: Tuple[bool, ...]                # receiver selection mask
+    prefix_len: int
+    page_len: int
+    pos_mode: str
+    wire_dtype: str
+    compute_dtype: str
+    batch: int
+    kv_heads: int
+    head_dim: int
+    src_layers: Optional[Tuple[int, ...]] = None   # hetero provenance
+    scales: Optional[Dict[str, np.ndarray]] = None  # int8: (M,1,1,1,1) fp32
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.prefix_len // self.page_len)   # ceil
+
+    @property
+    def num_pages(self) -> int:
+        return sum(len(ids) for ids in self.page_ids)
+
+    def all_ids(self) -> List[str]:
+        return [pid for ids in self.page_ids for pid in ids]
+
+    @property
+    def page_nbytes(self) -> int:
+        """Bytes of ONE page's k+v wire arrays (every page is the same
+        fixed size — the accounting the paged analytics rest on)."""
+        isz = _wire_np_dtype(self.wire_dtype).itemsize
+        return 2 * self.batch * self.page_len * self.kv_heads \
+            * self.head_dim * isz
+
+    @property
+    def scale_nbytes(self) -> int:
+        return 0 if self.scales is None else \
+            int(sum(s.nbytes for s in self.scales.values()))
+
+    def meta(self) -> dict:
+        """JSON-safe control-plane description (scales excluded — they are
+        arrays and ride the frame's array section)."""
+        return {
+            "page_ids": [list(ids) for ids in self.page_ids],
+            "layers": list(self.layers),
+            "src_layers": (None if self.src_layers is None
+                           else list(self.src_layers)),
+            "select": [bool(b) for b in self.select],
+            "prefix_len": int(self.prefix_len),
+            "page_len": int(self.page_len),
+            "pos_mode": self.pos_mode,
+            "wire_dtype": self.wire_dtype,
+            "compute_dtype": self.compute_dtype,
+            "batch": int(self.batch),
+            "kv_heads": int(self.kv_heads),
+            "head_dim": int(self.head_dim),
+        }
+
+    @classmethod
+    def from_meta(cls, meta: dict,
+                  scales: Optional[Dict[str, np.ndarray]] = None
+                  ) -> "BlockTable":
+        return cls(
+            page_ids=tuple(tuple(ids) for ids in meta["page_ids"]),
+            layers=tuple(int(i) for i in meta["layers"]),
+            src_layers=(None if meta.get("src_layers") is None
+                        else tuple(int(i) for i in meta["src_layers"])),
+            select=tuple(bool(b) for b in meta["select"]),
+            prefix_len=int(meta["prefix_len"]),
+            page_len=int(meta["page_len"]),
+            pos_mode=meta["pos_mode"],
+            wire_dtype=meta["wire_dtype"],
+            compute_dtype=meta["compute_dtype"],
+            batch=int(meta["batch"]),
+            kv_heads=int(meta["kv_heads"]),
+            head_dim=int(meta["head_dim"]),
+            scales=scales)
+
+
+def split_payload(payload, *, layers: Sequence[int],
+                  select: Sequence[bool], page_len: int,
+                  wire_dtype: str, pos_mode: str = "shift",
+                  src_layers: Optional[Sequence[int]] = None
+                  ) -> Tuple[BlockTable, List[Page]]:
+    """Wire-encode a packed {"k","v"} (M, B, Sc, Hkv, Dh) payload and cut
+    it into fixed-size pages.
+
+    Returns ``(table, pages)`` with ``pages`` in table order (slot-major,
+    then position).  Duplicate content within one payload (two layers or
+    two spans hashing identically) yields one Page per occurrence — the
+    pool deduplicates on insert.  The encode happens HERE, once over each
+    full layer, so int8 scales (and therefore page bytes) are independent
+    of the paging — identical to what the unpaged wire would ship.
+    """
+    if wire_dtype not in _WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                         f"one of {sorted(_WIRE_DTYPES)}")
+    if page_len <= 0:
+        raise ValueError(f"page_len must be positive, got {page_len}")
+    M, B, Sc, Hkv, Dh = (int(d) for d in payload["k"].shape)
+    compute_dtype = np.dtype(payload["k"].dtype).name
+    wires, scales = {}, None
+    for part in ("k", "v"):
+        arrs, _ = encode_wire(jnp.asarray(payload[part]), wire_dtype)
+        wires[part] = np.asarray(arrs[0])
+        if len(arrs) > 1:
+            scales = scales or {}
+            scales[part] = np.asarray(arrs[1], np.float32)
+    n_pages = -(-Sc // page_len)
+    grid: List[Tuple[str, ...]] = []
+    pages: List[Page] = []
+    for m in range(M):
+        salt = b""
+        if scales is not None:
+            salt = scales["k"][m].tobytes() + scales["v"][m].tobytes()
+        ids = []
+        for p in range(n_pages):
+            start = p * page_len
+            length = min(page_len, Sc - start)
+            blk = {}
+            for part in ("k", "v"):
+                b = np.zeros((B, page_len, Hkv, Dh),
+                             dtype=wires[part].dtype)
+                b[:, :length] = wires[part][m, :, start:start + length]
+                blk[part] = b
+            pid = page_id_for(int(layers[m]), start, length, blk["k"],
+                              blk["v"], wire_dtype=wire_dtype, salt=salt)
+            pages.append(Page(page_id=pid, layer=int(layers[m]),
+                              start=start, length=length,
+                              k=blk["k"], v=blk["v"]))
+            ids.append(pid)
+        grid.append(tuple(ids))
+    table = BlockTable(
+        page_ids=tuple(grid), layers=tuple(int(i) for i in layers),
+        src_layers=(None if src_layers is None
+                    else tuple(int(i) for i in src_layers)),
+        select=tuple(bool(b) for b in np.asarray(select)),
+        prefix_len=Sc, page_len=page_len, pos_mode=pos_mode,
+        wire_dtype=wire_dtype, compute_dtype=compute_dtype,
+        batch=B, kv_heads=Hkv, head_dim=Dh, scales=scales)
+    return table, pages
+
+
+def rebuild_payload(table: BlockTable, pages: Dict[str, Page],
+                    out_len: Optional[int] = None
+                    ) -> Dict[str, np.ndarray]:
+    """Reassemble the WIRE arrays from resident pages: concatenate each
+    slot's pages along the sequence axis into a zero-initialized
+    (M, B, out_len, Hkv, Dh) stack (``out_len`` defaults to ``prefix_len``
+    — exactly trimming the tail page's padding, which makes the rebuilt
+    bytes identical to the pre-split wire; a larger ``out_len`` is the
+    scheduler's bucket-padded gather).  Raises ``KeyError`` naming the
+    first page ID absent from ``pages``."""
+    out_len = table.prefix_len if out_len is None else out_len
+    M = len(table.page_ids)
+    dt = _wire_np_dtype(table.wire_dtype)
+    out = {part: np.zeros((M, table.batch, out_len, table.kv_heads,
+                           table.head_dim), dt) for part in ("k", "v")}
+    for m, ids in enumerate(table.page_ids):
+        for pid in ids:
+            pg = pages[pid]
+            stop = min(pg.start + pg.length, out_len)
+            if stop <= pg.start:
+                continue
+            n = stop - pg.start
+            out["k"][m, :, pg.start:stop] = pg.k[:, :n]
+            out["v"][m, :, pg.start:stop] = pg.v[:, :n]
+    return out
+
+
+def rebuild_shared(table: BlockTable, pages: Dict[str, Page], *,
+                   states=None, state_select=None) -> SharedKV:
+    """Decode the rebuilt wire arrays back to the compute dtype and wrap
+    them as the packed receiver-keyed ``SharedKV`` — the exact view the
+    unpaged transport would have produced for the same transfer."""
+    wire = rebuild_payload(table, pages)
+    dtype = np.dtype(table.compute_dtype)
+    payload = {}
+    for part in ("k", "v"):
+        arrs = ((wire[part], table.scales[part])
+                if table.wire_dtype == "int8" else (wire[part],))
+        payload[part] = decode_wire(arrs, table.wire_dtype, dtype)
+    return SharedKV(packed_kv=payload, layers=table.layers,
+                    src_layers=table.src_layers,
+                    select=jnp.asarray(table.select, bool),
+                    states=states, state_select=state_select,
+                    prefix_len=table.prefix_len, pos_mode=table.pos_mode)

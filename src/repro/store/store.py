@@ -1,0 +1,158 @@
+"""PageStore: the pool + paging facade the rest of the stack talks to.
+
+One store = one receiver-side page pool plus the fixed ``page_len`` every
+table it produces uses.  Transports attach one (``Transport(store=...)``)
+to route their KV sends through the paged path; ``launch.remote_serve``'s
+server holds one as the content-addressed cache; the serving scheduler
+gathers admission prefixes straight out of one.
+
+The call cycle for a transfer:
+
+    table, novel, novel_bytes = store.ingest(payload, ...)   # pins table
+    shared = store.materialize(table, states=...)            # packed view
+    ...                                                      # (in flight)
+    store.release(table)                                     # unpin
+
+``ingest`` is the dedup moment: only ``novel`` pages were actually
+inserted — the rest were already resident (a previous transfer of an
+overlapping context), so an honest wire would have shipped
+``novel_bytes``, not the full payload.  The table's pages are pinned
+atomically with insertion, so an eviction triggered mid-ingest can never
+tear the table being built.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SharedKV
+from repro.store.paging import (BlockTable, Page, rebuild_payload,
+                                rebuild_shared, split_payload)
+from repro.store.pool import PagePool
+
+
+@dataclass
+class StoreStats:
+    """A point-in-time snapshot of the store (pool stats + geometry)."""
+    page_len: int
+    pages: int
+    used_bytes: int
+    capacity_bytes: int
+    pinned_bytes: int
+    hits: int
+    misses: int
+    hit_rate: float
+    evictions: int
+    inserts: int
+
+
+class PageStore:
+    """A content-addressed paged prefix store over one ``PagePool``."""
+
+    def __init__(self, page_len: int = 16,
+                 capacity_bytes: int = 1 << 30,
+                 policy: str = "lru") -> None:
+        if page_len <= 0:
+            raise ValueError(f"page_len must be positive, got {page_len}")
+        self.page_len = int(page_len)
+        self.pool = PagePool(capacity_bytes, policy=policy)
+
+    # -- the transfer cycle -------------------------------------------------
+    def ingest(self, payload, *, layers: Sequence[int],
+               select: Sequence[bool], wire_dtype: str,
+               pos_mode: str = "shift",
+               src_layers: Optional[Sequence[int]] = None,
+               priority: float = 0.0
+               ) -> Tuple[BlockTable, List[str], int]:
+        """Split a packed {"k","v"} payload into pages and insert them.
+
+        Returns ``(table, novel_ids, novel_bytes)``: the block table (its
+        pages pinned — ``release`` when the transfer's view is no longer
+        in flight), the page IDs that were NOT already resident, and their
+        byte total (what a dedup-aware wire ships)."""
+        table, pages = split_payload(
+            payload, layers=layers, select=select, page_len=self.page_len,
+            wire_dtype=wire_dtype, pos_mode=pos_mode, src_layers=src_layers)
+        novel: List[str] = []
+        novel_bytes = 0
+        for page in pages:
+            if self.pool.put(page, priority=priority, pin=True):
+                novel.append(page.page_id)
+                novel_bytes += page.nbytes
+        return table, novel, novel_bytes
+
+    def insert_pages(self, table: BlockTable, pages: Sequence[Page], *,
+                     priority: float = 0.0) -> int:
+        """Receiver half of a paged wire exchange: insert the shipped
+        (novel) pages, then pin the WHOLE table — the resident pages it
+        dedups against included.  Returns the inserted byte count.
+        Raises ``PagePoolError`` if the table references a page neither
+        resident nor shipped (the sender lied, or an eviction raced the
+        exchange)."""
+        inserted = 0
+        shipped = set()
+        for page in pages:
+            if self.pool.put(page, priority=priority, pin=True):
+                inserted += page.nbytes
+            shipped.add(page.page_id)
+        # pin the dedup'd remainder (shipped pages were pinned on insert).
+        # Table IDs are distinct by construction — the hash covers the
+        # (layer, span) pair, unique per slot/page — so per-ID pinning is
+        # per-reference pinning.
+        self.pool.pin(pid for pid in table.all_ids()
+                      if pid not in shipped)
+        return inserted
+
+    def materialize(self, table: BlockTable, *, states=None,
+                    state_select=None) -> SharedKV:
+        """Rebuild the packed receiver-keyed ``SharedKV`` from resident
+        pages — bit-exact vs the unpaged wire for the same transfer."""
+        return rebuild_shared(table, self._resident(table),
+                              states=states, state_select=state_select)
+
+    def gather_prefix(self, table: BlockTable, bucket_len: int
+                      ) -> Dict[str, jnp.ndarray]:
+        """Scheduler admission gather: reassemble the prefix DIRECTLY from
+        pool pages into a bucket-padded (M, B, bucket_len, Hkv, Dh) stack
+        at the compute dtype — equal, bit for bit, to
+        ``pad_prefix(materialize(table), bucket_len).packed_kv`` (pad
+        positions are zeros; real positions decode the same wire bytes)."""
+        if bucket_len < table.prefix_len:
+            raise ValueError(
+                f"bucket {bucket_len} < prefix_len {table.prefix_len}")
+        wire = rebuild_payload(table, self._resident(table),
+                               out_len=bucket_len)
+        from repro.comm.transport import decode_wire
+        dtype = np.dtype(table.compute_dtype)
+        out = {}
+        for part in ("k", "v"):
+            arrs = ((wire[part], table.scales[part])
+                    if table.wire_dtype == "int8" else (wire[part],))
+            out[part] = decode_wire(arrs, table.wire_dtype, dtype)
+        return out
+
+    def pin(self, table: BlockTable) -> None:
+        """Take one extra pin ref per table reference (e.g. the scheduler
+        holding a table across an admission)."""
+        self.pool.pin(table.all_ids())
+
+    def release(self, table: BlockTable) -> None:
+        """Drop the pin refs ``ingest``/``insert_pages``/``pin`` took."""
+        self.pool.unpin(table.all_ids())
+
+    # -- introspection ------------------------------------------------------
+    def _resident(self, table: BlockTable) -> Dict[str, Page]:
+        return {pid: self.pool.get(pid) for pid in set(table.all_ids())}
+
+    def stats(self) -> StoreStats:
+        p = self.pool.stats()
+        return StoreStats(
+            page_len=self.page_len, pages=p["pages"],
+            used_bytes=p["used_bytes"],
+            capacity_bytes=p["capacity_bytes"],
+            pinned_bytes=p["pinned_bytes"], hits=p["hits"],
+            misses=p["misses"], hit_rate=p["hit_rate"],
+            evictions=p["evictions"], inserts=p["inserts"])

@@ -1,0 +1,264 @@
+"""The dedup-aware paged wire: page_query / page_need / page_data frames.
+
+A paged transfer replaces the monolithic ``shared_kv`` frame with a
+three-frame exchange over the same framed codec (``repro.comm.remote``):
+
+  sender                                   receiver (owns the PageStore)
+  ------                                   -----------------------------
+  page_query {xid, table meta, scales}  →  look up the pool
+                                        ←  page_need {xid, missing ids}
+  page_data  {xid, missing pages,       →  insert pages, pin the table,
+              states}                      materialize the SharedKV
+
+Only the pages the receiver's pool is missing ride the ``page_data``
+frame — the dedup the store exists for.  The block-table IDs are control
+plane (they count toward frame overhead, not payload bytes, the same
+convention the unpaged frame header follows); int8 scales and SSM states
+are payload and counted.
+
+``PagedReceiver`` is the receiver-side state machine shared by
+``RemoteTransport`` (loopback, both roles in one process) and
+``launch.remote_serve``'s server loop (the true two-process split).  It
+re-derives every shipped page's content hash before insertion — a
+tampered or mis-keyed page can never poison the content-addressed pool.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.remote import (PayloadMismatchError, _np_dtype, _put_wire,
+                               _take_wire, _tree_build, _tree_parts,
+                               encode_frame)
+from repro.core.types import SharedKV
+from repro.store.paging import BlockTable, Page, page_id_for
+from repro.store.store import PageStore
+
+PAGE_FRAME_KINDS = ("page_query", "page_need", "page_data")
+
+
+# ---------------------------------------------------------------------------
+# frame encode/decode
+# ---------------------------------------------------------------------------
+def encode_page_query(xid: int, table: BlockTable) -> bytes:
+    """The sender's opening frame: the full block table (IDs + static
+    layout) plus the int8 scales when the wire is quantized (they are
+    needed to rebuild EVERY page's KV, hit or miss, so they always
+    ship)."""
+    arrays: Dict[str, np.ndarray] = {}
+    if table.scales is not None:
+        arrays["k@scale"] = table.scales["k"]
+        arrays["v@scale"] = table.scales["v"]
+    return encode_frame("page_query",
+                        {"xid": int(xid), "table": table.meta()}, arrays)
+
+
+def decode_page_query(meta: Dict[str, Any],
+                      arrays: Dict[str, np.ndarray]
+                      ) -> Tuple[int, BlockTable]:
+    try:
+        xid = int(meta["xid"])
+        tmeta = meta["table"]
+        wire_dtype = tmeta["wire_dtype"]
+    except (KeyError, TypeError, ValueError) as e:
+        raise PayloadMismatchError(
+            f"page_query frame meta lacks {e}") from None
+    scales = None
+    if wire_dtype == "int8":
+        try:
+            scales = {"k": np.asarray(arrays["k@scale"], np.float32),
+                      "v": np.asarray(arrays["v@scale"], np.float32)}
+        except KeyError as e:
+            raise PayloadMismatchError(
+                f"int8 page_query lacks scale array {e.args[0]!r}") \
+                from None
+    try:
+        table = BlockTable.from_meta(tmeta, scales=scales)
+    except (KeyError, TypeError, ValueError) as e:
+        raise PayloadMismatchError(
+            f"cannot rebuild BlockTable: {e}") from None
+    if scales is not None:
+        want = (len(table.layers), 1, 1, 1, 1)
+        for part in ("k", "v"):
+            if tuple(scales[part].shape) != want:
+                raise PayloadMismatchError(
+                    f"{part} scales shape {tuple(scales[part].shape)} != "
+                    f"expected {want}")
+    return xid, table
+
+
+def encode_page_need(xid: int, need: Sequence[str]) -> bytes:
+    return encode_frame("page_need",
+                        {"xid": int(xid), "need": list(need)}, {})
+
+
+def decode_page_need(meta: Dict[str, Any]) -> Tuple[int, List[str]]:
+    try:
+        return int(meta["xid"]), [str(p) for p in meta["need"]]
+    except (KeyError, TypeError, ValueError) as e:
+        raise PayloadMismatchError(
+            f"page_need frame meta lacks {e}") from None
+
+
+def encode_page_data(xid: int, pages: Sequence[Page], *,
+                     wire_dtype: str, states=None,
+                     state_select=None) -> Tuple[bytes, int]:
+    """Ship the missing pages (plus states).  Returns ``(frame bytes,
+    payload wire bytes)`` — the counted bytes are page k/v + state wire,
+    exactly what the analytics predict for ``pages_sent`` pages."""
+    arrays: Dict[str, np.ndarray] = {}
+    specs: List[Dict[str, Any]] = []
+    n_bytes = 0
+    for i, pg in enumerate(pages):
+        arrays[f"p{i}.k"] = pg.k
+        arrays[f"p{i}.v"] = pg.v
+        n_bytes += pg.nbytes
+        specs.append({"id": pg.page_id, "layer": int(pg.layer),
+                      "start": int(pg.start), "length": int(pg.length)})
+    state_meta = None
+    if states is not None and state_select is not None:
+        skel, leaves = _tree_parts(states)
+        sel = np.nonzero(np.asarray(state_select))[0]
+        shapes, dtypes = [], []
+        for i, leaf in enumerate(leaves):
+            leaf = jnp.asarray(leaf)
+            shapes.append(list(leaf.shape))
+            dtypes.append(np.dtype(leaf.dtype).name)
+            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], wire_dtype)
+        state_meta = {"skeleton": skel, "shapes": shapes, "dtypes": dtypes,
+                      "select": [bool(b) for b in np.asarray(state_select)]}
+    meta = {"xid": int(xid), "pages": specs, "wire_dtype": wire_dtype,
+            "states": state_meta}
+    return encode_frame("page_data", meta, arrays), n_bytes
+
+
+def decode_page_data(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
+                     ) -> Tuple[int, List[Page], Any, Any, int]:
+    """Returns ``(xid, pages, states, state_select, state_bytes)``.  Page
+    content hashes are NOT verified here (the table that defines their
+    expected geometry and salt lives with the receiver's pending exchange
+    — ``PagedReceiver.handle_data`` verifies)."""
+    try:
+        xid = int(meta["xid"])
+        specs = meta["pages"]
+        wire_dtype = meta["wire_dtype"]
+        state_meta = meta["states"]
+        assert isinstance(specs, list)
+    except (KeyError, TypeError, ValueError, AssertionError) as e:
+        raise PayloadMismatchError(
+            f"page_data frame meta lacks {e}") from None
+    pages: List[Page] = []
+    for i, spec in enumerate(specs):
+        try:
+            k = arrays[f"p{i}.k"]
+            v = arrays[f"p{i}.v"]
+            pages.append(Page(page_id=str(spec["id"]),
+                              layer=int(spec["layer"]),
+                              start=int(spec["start"]),
+                              length=int(spec["length"]), k=k, v=v))
+        except (KeyError, TypeError, ValueError) as e:
+            raise PayloadMismatchError(
+                f"malformed page spec {i}: {e}") from None
+        if k.shape != v.shape or k.ndim != 4:
+            raise PayloadMismatchError(
+                f"page {i} k/v must be (B, page_len, Hkv, Dh); got "
+                f"{k.shape} vs {v.shape}")
+    states = state_select = None
+    state_bytes = 0
+    if state_meta is not None:
+        try:
+            sel = np.asarray(state_meta["select"], bool)
+            shapes, dtypes = state_meta["shapes"], state_meta["dtypes"]
+            skel = state_meta["skeleton"]
+        except (KeyError, TypeError) as e:
+            raise PayloadMismatchError(f"state meta lacks {e}") from None
+        idx = np.nonzero(sel)[0]
+        leaves = []
+        for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
+            part = _take_wire(arrays, f"s{i}", wire_dtype, _np_dtype(dname))
+            state_bytes += int(arrays[f"s{i}"].nbytes)
+            if wire_dtype == "int8":
+                state_bytes += int(arrays[f"s{i}@scale"].nbytes)
+            want = (len(idx),) + tuple(shape[1:])
+            if tuple(part.shape) != want:
+                raise PayloadMismatchError(
+                    f"state leaf {i} shape {tuple(part.shape)} != "
+                    f"expected {want}")
+            dense = jnp.zeros(tuple(shape), _np_dtype(dname))
+            leaves.append(dense.at[idx].set(part) if len(idx) else dense)
+        states = _tree_build(skel, leaves)
+        state_select = jnp.asarray(sel)
+    return xid, pages, states, state_select, state_bytes
+
+
+# ---------------------------------------------------------------------------
+# the receiver-side state machine
+# ---------------------------------------------------------------------------
+class PagedReceiver:
+    """Drives the receiving half of the paged exchange against one
+    ``PageStore``: answer ``page_query`` frames with the pool's missing
+    set, then turn the matching ``page_data`` frame into a materialized
+    ``SharedKV`` — verifying every shipped page's content hash (and
+    geometry) against the pending table before it touches the pool."""
+
+    def __init__(self, store: PageStore) -> None:
+        self.store = store
+        self._pending: Dict[int, BlockTable] = {}
+
+    def handle_query(self, meta: Dict[str, Any],
+                     arrays: Dict[str, np.ndarray]) -> bytes:
+        """Process a ``page_query``; returns the ``page_need`` response
+        frame."""
+        xid, table = decode_page_query(meta, arrays)
+        need = self.store.pool.missing(table.all_ids())
+        self._pending[xid] = table
+        return encode_page_need(xid, need)
+
+    def _verify(self, table: BlockTable, pages: Sequence[Page]) -> None:
+        layer_to_slot = {lyr: m for m, lyr in enumerate(table.layers)}
+        want_shape = (table.batch, table.page_len, table.kv_heads,
+                      table.head_dim)
+        for pg in pages:
+            if tuple(pg.k.shape) != want_shape:
+                raise PayloadMismatchError(
+                    f"page {pg.page_id!r} shape {tuple(pg.k.shape)} != "
+                    f"table geometry {want_shape}")
+            m = layer_to_slot.get(pg.layer)
+            salt = b""
+            if table.scales is not None:
+                if m is None:
+                    raise PayloadMismatchError(
+                        f"page {pg.page_id!r} names layer {pg.layer}, "
+                        f"absent from the table's {table.layers}")
+                salt = table.scales["k"][m].tobytes() \
+                    + table.scales["v"][m].tobytes()
+            derived = page_id_for(pg.layer, pg.start, pg.length, pg.k,
+                                  pg.v, wire_dtype=table.wire_dtype,
+                                  salt=salt)
+            if derived != pg.page_id:
+                raise PayloadMismatchError(
+                    f"page content hash mismatch: frame claims "
+                    f"{pg.page_id!r}, content derives {derived!r} — "
+                    "refusing to poison the pool")
+
+    def handle_data(self, meta: Dict[str, Any],
+                    arrays: Dict[str, np.ndarray]
+                    ) -> Tuple[SharedKV, BlockTable, int, int]:
+        """Process a ``page_data``; inserts the verified pages, pins the
+        table, and returns ``(shared, table, novel_bytes, state_bytes)``.
+        The table stays pinned — the caller decides when to
+        ``store.release(table)``."""
+        xid, pages, states, state_select, state_bytes = \
+            decode_page_data(meta, arrays)
+        table = self._pending.pop(xid, None)
+        if table is None:
+            raise PayloadMismatchError(
+                f"page_data for unknown exchange {xid} "
+                "(no matching page_query)")
+        self._verify(table, pages)
+        novel_bytes = self.store.insert_pages(table, pages)
+        shared = self.store.materialize(table, states=states,
+                                        state_select=state_select)
+        return shared, table, novel_bytes, state_bytes

@@ -345,3 +345,112 @@ class TestServerLoop:
                               {"tokens": np.zeros((1, 3), np.int32)}))
         with pytest.raises(RemoteProtocolError):
             serve_channel(agent, ch)
+
+
+class TestFileChannelNonce:
+    """The restart-collision regression: chunk files are namespaced by a
+    per-connection nonce and unlinked once consumed, so a restarted
+    writer's sequence numbers can never collide with a dead pair's
+    leftover chunks."""
+
+    def test_consumed_chunks_are_unlinked(self, tmp_path):
+        import os
+        tx = FileChannel(str(tmp_path), timeout_s=1.0)
+        rx = FileChannel(str(tmp_path), timeout_s=1.0)
+        for _ in range(3):
+            tx.write(small_frame())
+        for _ in range(3):
+            assert read_frame(rx)[0] == "shared_kv"
+        left = [f for f in os.listdir(tmp_path) if f.endswith(".chunk")]
+        assert left == [], f"consumed chunks not unlinked: {left}"
+
+    def test_writer_restart_does_not_replay_stale_chunks(self, tmp_path):
+        """A dead pair left unconsumed chunks at seq 0..1; the restarted
+        writer also starts at seq 0.  Pre-nonce, a fresh reader would
+        consume the DEAD pair's seq-0 chunk as its first frame."""
+        import os
+        dead = FileChannel(str(tmp_path), timeout_s=0.5)
+        dead.write(encode_frame("stale_a", {}, {}))
+        dead.write(encode_frame("stale_b", {}, {}))
+        tx = FileChannel(str(tmp_path), timeout_s=0.5)    # the restart
+        tx.write(encode_frame("fresh", {"ok": 1}, {}))
+        rx = FileChannel(str(tmp_path), timeout_s=0.5)
+        kind, meta, _ = read_frame(rx)
+        assert kind == "fresh" and meta["ok"] == 1
+        # the restart's nonce publish also cleared the dead pair's chunks
+        stale = [f for f in os.listdir(tmp_path)
+                 if f.endswith(".chunk") and dead._nonce in f]
+        assert stale == []
+
+    def test_reader_locks_stream_identity_mid_stream(self, tmp_path):
+        """Once a reader consumed a chunk it is locked to that stream's
+        nonce: a writer restart surfaces as a timeout (truncated frame),
+        never a silent splice onto the new stream."""
+        tx = FileChannel(str(tmp_path), timeout_s=0.2)
+        rx = FileChannel(str(tmp_path), timeout_s=0.2)
+        tx.write(encode_frame("a", {}, {}))
+        assert read_frame(rx)[0] == "a"
+        tx2 = FileChannel(str(tmp_path), timeout_s=0.2)
+        tx2.write(encode_frame("x", {}, {}))
+        with pytest.raises(RemoteProtocolError):
+            read_frame(rx)
+
+    def test_fresh_pair_still_round_trips_transfers(self, tmp_path,
+                                                    kv_frame):
+        """End-to-end sanity after the nonce rework: a real KV transfer
+        frame crosses the staged channel intact."""
+        frame, _ = kv_frame
+        tx = FileChannel(str(tmp_path), timeout_s=2.0)
+        rx = FileChannel(str(tmp_path), timeout_s=2.0)
+        tx.write(frame)
+        kind, meta, arrays = read_frame(rx)
+        shared, _ = decode_kv_transfer(meta, arrays)
+        assert kind == "shared_kv" and shared.layers == (0, 2)
+
+
+class TestPagedServerLoop:
+    def test_paged_exchange_dedups_and_matches_unpaged(self, tiny_cfg,
+                                                       tiny_params, tok):
+        """The content-addressed cache server: a client ships pages over a
+        socketpair twice — the second share moves zero payload bytes and
+        both answer identically to a local unpaged run (fp32 wire)."""
+        import threading
+        from repro.launch.remote_serve import KVClient, serve_channel
+        from repro.store import PageStore
+        agent_r = Agent("r", tiny_cfg, tiny_params, tok)
+        agent_s = Agent("s", tiny_cfg, tiny_params, tok)
+        select = core.make_selection(tiny_cfg, KVCFG)
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 7),
+                                            4, tiny_cfg.vocab_size))
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 4),
+                                            4, tiny_cfg.vocab_size))
+        store = PageStore(page_len=4)
+        a, b = socket.socketpair()
+        served = {}
+        th = threading.Thread(
+            target=lambda: served.update(n=serve_channel(
+                agent_r, SocketChannel(b), store=store)))
+        th.start()
+        client = KVClient(SocketChannel(a))
+        try:
+            n1, total1, sent1 = client.share_paged(
+                agent_s, ctx, KVCFG, select, page_len=4,
+                wire_dtype="float32")
+            toks1 = client.generate(qry, max_new=2)
+            n2, total2, sent2 = client.share_paged(
+                agent_s, ctx, KVCFG, select, page_len=4,
+                wire_dtype="float32")
+            toks2 = client.generate(qry, max_new=2)
+        finally:
+            client.close()
+            th.join()
+        assert served["n"] == 2
+        assert sent1 == total1 and n1 > 0
+        assert sent2 == 0 and n2 == 0          # full dedup on the repeat
+        kv, _, _ = agent_s.export_kv(ctx)
+        ref_shared = core.pack_shared(KVCFG, kv, select)
+        ref, _ = agent_r.generate(qry, ref_shared, max_new=2)
+        np.testing.assert_array_equal(toks1, np.asarray(ref))
+        np.testing.assert_array_equal(toks2, np.asarray(ref))
+        # nothing leaked a pin past the connection teardown
+        assert store.stats().pinned_bytes == 0

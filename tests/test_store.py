@@ -1,0 +1,401 @@
+"""The paged prefix store: split/rebuild bit-exactness against the unpaged
+wire codec, pool eviction/pinning invariants (property-tested), content-hash
+collision guards, and the dedup acceptance bar — a second receiver sharing
+the same sender context ships only the novel pages."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import core
+from repro.comm import InMemoryTransport, RemoteTransport
+from repro.comm.transport import roundtrip_kv
+from repro.core.protocol import gather_mapped, gather_selected
+from repro.core.types import KVCommConfig
+from repro.store import (BlockTable, Page, PagePool, PagePoolError,
+                         PageStore, PoolFullError, page_id_for,
+                         rebuild_payload, rebuild_shared, split_payload)
+
+WIRES = ["float32", "float16", "int8"]
+RATIOS = [0.3, 0.5, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sender_kv(tiny_cfg, tiny_params):
+    ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 4,
+                             tiny_cfg.vocab_size)
+    kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+    return kv
+
+
+def _payload(cfg, kv, ratio):
+    kvcfg = KVCommConfig(ratio=ratio, selector="prior_only")
+    select = core.make_selection(cfg, kvcfg)
+    payload = gather_selected(kv, jnp.asarray(select))
+    return payload, core.selected_layer_ids(select), np.asarray(select)
+
+
+def _mk_page(pid="x", layer=0, nbytes=64, start=0):
+    """A hand-built page for pool tests (content hash irrelevant there —
+    the pool keys purely on page_id)."""
+    side = max(nbytes // 2, 1)
+    k = np.zeros((1, side, 1, 1), np.int8)
+    v = np.zeros((1, side, 1, 1), np.int8)
+    return Page(page_id=pid, layer=layer, start=start, length=side,
+                k=k, v=v)
+
+
+# ---------------------------------------------------------------------------
+# split/rebuild bit-exactness
+# ---------------------------------------------------------------------------
+class TestSplitRebuild:
+    @pytest.mark.parametrize("wire", WIRES)
+    @pytest.mark.parametrize("ratio", RATIOS)
+    @pytest.mark.parametrize("page_len", [3, 4, 16])
+    def test_roundtrip_matches_unpaged_codec(self, tiny_cfg, sender_kv,
+                                             wire, ratio, page_len):
+        """trim(concat(split(x))) == x: the rebuilt compute-dtype payload
+        equals what the unpaged wire codec produces for the same transfer
+        — paging is invisible, whatever the ratio / wire / page size."""
+        payload, layers, select = _payload(tiny_cfg, sender_kv, ratio)
+        ref, _ = roundtrip_kv(payload, wire, payload["k"].dtype)
+        table, pages = split_payload(payload, layers=layers, select=select,
+                                     page_len=page_len, wire_dtype=wire)
+        got = rebuild_shared(table, {p.page_id: p for p in pages})
+        assert got.layers == layers
+        assert got.prefix_len == int(payload["k"].shape[2])
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(got.packed_kv[part]),
+                                          np.asarray(ref[part]))
+
+    def test_hetero_payload_roundtrips(self, tiny_cfg, sender_kv):
+        """A mapped (heterogeneous) payload pages by RECEIVER slot and
+        keeps its src_layers provenance through the table."""
+        assignment = core.get_layer_map("depth_proportional").assign(
+            (0, 1, 3), num_src_layers=4, num_dst_layers=6)
+        payload = gather_mapped(sender_kv, assignment)
+        ref, _ = roundtrip_kv(payload, "float32", payload["k"].dtype)
+        table, pages = split_payload(
+            payload, layers=tuple(assignment.dst),
+            select=np.asarray(assignment.dst_mask()), page_len=4,
+            wire_dtype="float32", src_layers=tuple(assignment.src))
+        got = rebuild_shared(table, {p.page_id: p for p in pages})
+        assert got.layers == tuple(assignment.dst)
+        assert got.src_layers == tuple(assignment.src)
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(got.packed_kv[part]),
+                                          np.asarray(ref[part]))
+
+    @pytest.mark.parametrize("page_len", [3, 5, 7])
+    def test_pages_are_fixed_size_and_tail_padded(self, tiny_cfg,
+                                                  sender_kv, page_len):
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        Sc = int(payload["k"].shape[2])
+        table, pages = split_payload(payload, layers=layers, select=select,
+                                     page_len=page_len,
+                                     wire_dtype="float32")
+        assert table.pages_per_slot == -(-Sc // page_len)
+        for pg in pages:
+            assert pg.k.shape[1] == page_len       # fixed-size block
+            assert pg.nbytes == table.page_nbytes
+            if pg.start + page_len > Sc:           # the tail page
+                assert pg.length == Sc - pg.start
+                assert not np.any(pg.k[:, pg.length:])   # zero padding
+                assert not np.any(pg.v[:, pg.length:])
+            else:
+                assert pg.length == page_len
+
+    def test_bucket_gather_equals_pad_prefix(self, tiny_cfg, sender_kv):
+        """The scheduler's page gather at a bucket == pad_prefix of the
+        materialized view, bit for bit (the paged-admission parity
+        argument)."""
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        for wire in ("float32", "int8"):
+            store = PageStore(page_len=4)
+            table, _, _ = store.ingest(payload, layers=layers,
+                                       select=select, wire_dtype=wire)
+            bucket = 16
+            got = store.gather_prefix(table, bucket)
+            ref = core.pad_prefix(store.materialize(table), bucket)
+            for part in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(got[part]), np.asarray(ref.packed_kv[part]))
+            with pytest.raises(ValueError):
+                store.gather_prefix(table, table.prefix_len - 1)
+
+    def test_missing_page_raises_keyerror(self, tiny_cfg, sender_kv):
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        table, pages = split_payload(payload, layers=layers, select=select,
+                                     page_len=4, wire_dtype="float32")
+        have = {p.page_id: p for p in pages[:-1]}
+        with pytest.raises(KeyError):
+            rebuild_payload(table, have)
+
+    def test_table_meta_roundtrips(self, tiny_cfg, sender_kv):
+        import json
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        table, _ = split_payload(payload, layers=layers, select=select,
+                                 page_len=4, wire_dtype="int8")
+        meta = json.loads(json.dumps(table.meta()))   # wire-safe
+        back = BlockTable.from_meta(meta, scales=table.scales)
+        assert back == dataclasses.replace(table, scales=back.scales)
+        np.testing.assert_array_equal(back.scales["k"], table.scales["k"])
+
+
+# ---------------------------------------------------------------------------
+# content hashing
+# ---------------------------------------------------------------------------
+class TestContentHash:
+    def test_same_content_same_span_collides_deliberately(self):
+        k = np.arange(32, dtype=np.float32).reshape(1, 4, 2, 4)
+        v = k + 1
+        a = page_id_for(0, 0, 4, k, v, wire_dtype="float32")
+        b = page_id_for(0, 0, 4, k.copy(), v.copy(), wire_dtype="float32")
+        assert a == b                                   # that IS the dedup
+
+    def test_differing_bytes_span_layer_or_salt_differ(self):
+        k = np.arange(32, dtype=np.float32).reshape(1, 4, 2, 4)
+        v = k + 1
+        base = page_id_for(0, 0, 4, k, v, wire_dtype="float32")
+        k2 = k.copy()
+        k2[0, 0, 0, 0] += 1
+        assert page_id_for(0, 0, 4, k2, v, wire_dtype="float32") != base
+        assert page_id_for(1, 0, 4, k, v, wire_dtype="float32") != base
+        assert page_id_for(0, 4, 4, k, v, wire_dtype="float32") != base
+        assert page_id_for(0, 0, 3, k, v, wire_dtype="float32") != base
+        assert page_id_for(0, 0, 4, k, v, wire_dtype="float16") != base
+        assert page_id_for(0, 0, 4, k, v, wire_dtype="float32",
+                           salt=b"s") != base
+
+    def test_int8_scale_salt_prevents_cross_scale_collisions(self, tiny_cfg,
+                                                             sender_kv):
+        """Two payloads quantizing to the SAME int8 codes under different
+        scales decode differently — the per-layer scale salt must keep
+        their pages distinct."""
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        doubled = {p: jnp.asarray(payload[p]) * 2.0 for p in ("k", "v")}
+        t1, _ = split_payload(payload, layers=layers, select=select,
+                              page_len=4, wire_dtype="int8")
+        t2, _ = split_payload(doubled, layers=layers, select=select,
+                              page_len=4, wire_dtype="int8")
+        assert not set(t1.all_ids()) & set(t2.all_ids())
+
+
+# ---------------------------------------------------------------------------
+# pool invariants
+# ---------------------------------------------------------------------------
+class TestPagePool:
+    def test_lru_eviction_order(self):
+        pool = PagePool(capacity_bytes=3 * 64, policy="lru")
+        for pid in ("a", "b", "c"):
+            pool.put(_mk_page(pid))
+        pool.get("a")                   # touch: a is now most recent
+        pool.put(_mk_page("d"))        # evicts b (oldest untouched)
+        assert "b" not in pool and set(pool.ids()) == {"a", "c", "d"}
+        assert pool.evictions == 1
+
+    def test_priority_eviction_lowest_first_lru_tiebreak(self):
+        pool = PagePool(capacity_bytes=3 * 64, policy="priority")
+        pool.put(_mk_page("a"), priority=1.0)
+        pool.put(_mk_page("b"), priority=0.0)
+        pool.put(_mk_page("c"), priority=0.0)
+        pool.put(_mk_page("d"), priority=2.0)   # evicts b (lowest, oldest)
+        assert "b" not in pool
+        pool.put(_mk_page("e"), priority=2.0)   # evicts c
+        assert "c" not in pool and set(pool.ids()) == {"a", "d", "e"}
+
+    def test_pinned_pages_survive_eviction(self):
+        pool = PagePool(capacity_bytes=2 * 64)
+        pool.put(_mk_page("a"), pin=True)
+        pool.put(_mk_page("b"))
+        pool.put(_mk_page("c"))         # must evict b, never pinned a
+        assert "a" in pool and "b" not in pool
+
+    def test_all_pinned_raises_pool_full(self):
+        pool = PagePool(capacity_bytes=2 * 64)
+        pool.put(_mk_page("a"), pin=True)
+        pool.put(_mk_page("b"), pin=True)
+        with pytest.raises(PoolFullError):
+            pool.put(_mk_page("c"))
+        assert pool.used_bytes == 2 * 64   # failed insert left no residue
+
+    def test_oversize_page_refused(self):
+        pool = PagePool(capacity_bytes=32)
+        with pytest.raises(PoolFullError):
+            pool.put(_mk_page("big", nbytes=64))
+
+    def test_unbalanced_unpin_and_absent_pin_raise(self):
+        pool = PagePool()
+        pool.put(_mk_page("a"))
+        with pytest.raises(PagePoolError):
+            pool.unpin(["a"])
+        with pytest.raises(PagePoolError):
+            pool.pin(["ghost"])
+
+    @given(st.lists(st.tuples(st.integers(0, 7), st.booleans()),
+                    min_size=1, max_size=40))
+    @settings(max_examples=60, deadline=None)
+    def test_eviction_property_capacity_and_pins_respected(self, ops):
+        """Random insert/touch streams: used_bytes never exceeds capacity,
+        pinned pages are never evicted, and accounting stays exact."""
+        pool = PagePool(capacity_bytes=4 * 64)
+        pinned = set()
+        try:
+            for i, (n, pin) in enumerate(ops):
+                pid = f"p{n}"
+                novel = pool.put(_mk_page(pid), pin=pin)
+                if pin:
+                    pinned.add(pid)
+                assert pool.used_bytes <= pool.capacity_bytes
+                assert pool.used_bytes == 64 * len(pool)
+                assert all(p in pool for p in pinned)
+        except PoolFullError:
+            assert len(pinned) >= 4     # only an all-pinned pool refuses
+
+    @given(st.lists(st.integers(1, 3), min_size=1, max_size=10))
+    @settings(max_examples=40, deadline=None)
+    def test_pin_refcount_property(self, counts):
+        """pin(n) then unpin(n) is balanced; unpin(n+1) raises; a page is
+        evictable exactly when its refcount is zero."""
+        pool = PagePool(capacity_bytes=1 << 20)
+        for i, n in enumerate(counts):
+            pid = f"p{i}"
+            pool.put(_mk_page(pid))
+            pool.pin([pid] * n)
+            assert pool.pins[pid] == n
+            pool.unpin([pid] * (n - 1))
+            assert pool.pins[pid] == 1
+            pool.unpin([pid])
+            assert pid not in pool.pins
+            with pytest.raises(PagePoolError):
+                pool.unpin([pid])
+
+
+# ---------------------------------------------------------------------------
+# the store: ingest/dedup/lifecycle
+# ---------------------------------------------------------------------------
+class TestPageStore:
+    def test_second_ingest_ships_nothing(self, tiny_cfg, sender_kv):
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        store = PageStore(page_len=4)
+        t1, novel1, nb1 = store.ingest(payload, layers=layers,
+                                       select=select, wire_dtype="float32")
+        assert len(novel1) == t1.num_pages and nb1 > 0
+        t2, novel2, nb2 = store.ingest(payload, layers=layers,
+                                       select=select, wire_dtype="float32")
+        assert novel2 == [] and nb2 == 0
+        assert t2.all_ids() == t1.all_ids()
+
+    def test_overlapping_context_ships_only_novel_pages(self, tiny_cfg,
+                                                        tiny_params):
+        """The acceptance bar: a second request whose context EXTENDS the
+        first shares every full page of the common prefix — only the new
+        tail (and the page the old tail padding sat in) crosses."""
+        page = 4
+        ctx = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 4,
+                                 tiny_cfg.vocab_size)
+        ext = jnp.concatenate(
+            [ctx, jax.random.randint(jax.random.PRNGKey(6), (1, 4), 4,
+                                     tiny_cfg.vocab_size)], axis=1)
+        kv1, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+        kv2, _ = core.sender_prefill(tiny_params, tiny_cfg, ext)
+        _, layers, select = _payload(tiny_cfg, kv1, 0.5)
+        p1 = gather_selected(kv1, jnp.asarray(select))
+        p2 = gather_selected(kv2, jnp.asarray(select))
+        store = PageStore(page_len=page)
+        t1, novel1, _ = store.ingest(p1, layers=layers, select=select,
+                                     wire_dtype="float32")
+        t2, novel2, _ = store.ingest(p2, layers=layers, select=select,
+                                     wire_dtype="float32")
+        # the 8-token prefix = 2 full pages per layer, shared verbatim; the
+        # extension adds 1 page per layer (12 tokens / page 4 = 3 pages)
+        assert len(novel1) == t1.num_pages
+        assert len(novel2) == t2.num_pages - 2 * len(layers)
+        assert set(t1.all_ids()) < set(t2.all_ids())
+
+    def test_release_makes_pages_evictable(self, tiny_cfg, sender_kv):
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        probe, _ = split_payload(payload, layers=layers, select=select,
+                                 page_len=4, wire_dtype="float32")
+        store = PageStore(page_len=4,
+                          capacity_bytes=probe.num_pages
+                          * probe.page_nbytes)
+        table, _, _ = store.ingest(payload, layers=layers, select=select,
+                                   wire_dtype="float32")
+        assert store.stats().pinned_bytes == store.stats().used_bytes
+        # a full, fully-pinned pool refuses a new page
+        with pytest.raises(PoolFullError):
+            store.pool.put(_mk_page("fresh",
+                                    nbytes=probe.page_nbytes))
+        store.release(table)
+        assert store.stats().pinned_bytes == 0
+        assert store.pool.put(_mk_page("fresh",
+                                       nbytes=probe.page_nbytes))
+
+    def test_dedup_summary_and_fanout(self, tiny_cfg, tiny_params, tok):
+        """Two receivers sharing ONE sender context: the second receiver's
+        transfer dedups against the first's pages — measured bytes drop by
+        the full shared-page fraction (here: all of it)."""
+        from repro.comm import Agent, CommSession
+        kvcfg = KVCommConfig(ratio=0.5, selector="prior_only")
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (1, 8),
+                                            4, tiny_cfg.vocab_size))
+        store = PageStore(page_len=4)     # ONE receiver-side pool
+        sender = Agent("s", tiny_cfg, tiny_params, tok)
+        recs = []
+        for i in range(2):
+            t = InMemoryTransport(store=store)
+            sess = CommSession(sender,
+                               Agent(f"r{i}", tiny_cfg, tiny_params, tok),
+                               t)
+            sess.share(ctx, kvcfg)
+            recs.append(t.last)
+            s = sess.dedup_summary()
+            assert s["transfers"] == 1
+            assert s["pages_total"] == recs[0].pages_total
+        assert recs[0].pages_sent == recs[0].pages_total
+        assert recs[1].pages_sent == 0 and recs[1].hit_rate == 1.0
+        assert recs[1].n_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# the paged wire's tamper guard
+# ---------------------------------------------------------------------------
+class TestPagedWireVerification:
+    def test_tampered_page_is_refused(self, tiny_cfg, sender_kv):
+        from repro.comm.remote import (PayloadMismatchError, decode_frame,
+                                       encode_frame)
+        from repro.store.wire import (PagedReceiver, encode_page_data,
+                                      encode_page_query)
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        table, pages = split_payload(payload, layers=layers, select=select,
+                                     page_len=4, wire_dtype="float32")
+        store = PageStore(page_len=4)
+        rx = PagedReceiver(store)
+        _, meta, arrays = decode_frame(encode_page_query(0, table))
+        rx.handle_query(meta, arrays)
+        pages[0].k[0, 0, 0, 0] += 1.0     # bit-flip AFTER hashing
+        frame, _ = encode_page_data(0, pages, wire_dtype="float32")
+        _, meta, arrays = decode_frame(frame)
+        with pytest.raises(PayloadMismatchError, match="hash mismatch"):
+            rx.handle_data(meta, arrays)
+        assert len(store.pool) == 0       # nothing poisoned the pool
+
+    def test_data_without_query_is_refused(self, tiny_cfg, sender_kv):
+        from repro.comm.remote import PayloadMismatchError, decode_frame
+        from repro.store.wire import PagedReceiver, encode_page_data
+        payload, layers, select = _payload(tiny_cfg, sender_kv, 0.5)
+        _, pages = split_payload(payload, layers=layers, select=select,
+                                 page_len=4, wire_dtype="float32")
+        rx = PagedReceiver(PageStore(page_len=4))
+        frame, _ = encode_page_data(7, pages, wire_dtype="float32")
+        _, meta, arrays = decode_frame(frame)
+        with pytest.raises(PayloadMismatchError, match="unknown exchange"):
+            rx.handle_data(meta, arrays)

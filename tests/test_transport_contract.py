@@ -231,3 +231,101 @@ class TestHeterogeneousContract:
         assert t.total_bytes == expected_bytes(
             s_cfg, B, Sc, assignment.num_pairs, name)
         assert t.last.layers == assignment.num_pairs
+
+
+# ---------------------------------------------------------------------------
+# the paged column: every transport with a PageStore attached
+# ---------------------------------------------------------------------------
+PAGE_LEN = 3    # deliberately does NOT divide Sc=8 — the tail page pads
+
+
+def expected_paged_bytes(cfg, B, Sc, M, name, pages_sent) -> int:
+    n = core.kv_wire_bytes_paged(cfg, B, Sc, M, page_len=PAGE_LEN,
+                                 pages_sent=pages_sent,
+                                 itemsize=ITEMSIZE[name])
+    if name.endswith("int8"):
+        n += 2 * M * 4          # k and v scales: (M,1,1,1,1) float32 each
+    return n
+
+
+class TestPagedContract:
+    """Attaching a ``repro.store.PageStore`` must be invisible to the
+    receiver (same logits bar as the unpaged column — bit-exact on
+    lossless wires) while the byte accounting switches to the paged
+    analytics with full dedup on a repeat send."""
+
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_paged_logits_vs_unpaged(self, homo, ref_logits, name,
+                                     packing):
+        from repro.store import PageStore
+        cfg, params, kv, select, qry = homo
+        t = TRANSPORTS[name](packed=PACKING[packing],
+                             store=PageStore(page_len=PAGE_LEN))
+        shared = t.send(cfg, KVCFG, kv, select)
+        assert shared.is_packed == PACKING[packing]
+        out = core.receiver_prefill(params, cfg, qry, shared, max_new=0)
+        got = np.asarray(out.logits)
+        if name in LOSSLESS:
+            np.testing.assert_array_equal(got, ref_logits)
+        else:
+            rel = np.max(np.abs(got - ref_logits)) \
+                / max(np.max(np.abs(ref_logits)), 1e-9)
+            assert rel < 0.05, f"paged lossy wire drifted {rel:.3f} rel"
+            np.testing.assert_array_equal(got.argmax(-1),
+                                          ref_logits.argmax(-1))
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_paged_bytes_reconcile(self, homo, name):
+        """Measured bytes == the paged analytics at the record's own
+        pages_sent; a repeat send dedups to zero payload (int8 still ships
+        its per-layer scales — they are needed to rebuild hit pages)."""
+        from repro.store import PageStore
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name](store=PageStore(page_len=PAGE_LEN))
+        t.send(cfg, KVCFG, kv, select)
+        M = int(np.asarray(select).sum())
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        pages = M * -(-Sc // PAGE_LEN)
+        r = t.last
+        assert (r.pages_total, r.pages_sent, r.pages_hit) == (pages, pages,
+                                                              0)
+        assert r.hit_rate == 0.0
+        assert r.n_bytes == expected_paged_bytes(cfg, B, Sc, M, name,
+                                                 pages)
+        t.send(cfg, KVCFG, kv, select)
+        r2 = t.last
+        assert (r2.pages_total, r2.pages_sent, r2.pages_hit) == (pages, 0,
+                                                                 pages)
+        assert r2.hit_rate == 1.0
+        assert r2.n_bytes == expected_paged_bytes(cfg, B, Sc, M, name, 0)
+
+    @pytest.mark.parametrize("name", ["mem", "ser_fp32", "rem_fp32"])
+    def test_paged_hetero_logits(self, hetero, hetero_ref, name):
+        """The paged path under a LayerAssignment: receiver-keyed view,
+        bit-exact on lossless wires, bytes track the mapped pair count."""
+        from repro.store import PageStore
+        s_cfg, r_cfg, r_params, kv, assignment, qry = hetero
+        t = TRANSPORTS[name](store=PageStore(page_len=PAGE_LEN))
+        shared = t.send(s_cfg, KVCFG, kv, None, assignment=assignment)
+        assert shared.layers == tuple(assignment.dst)
+        assert shared.src_layers == tuple(assignment.src)
+        out = core.receiver_prefill(r_params, r_cfg, qry, shared,
+                                    max_new=0)
+        np.testing.assert_array_equal(np.asarray(out.logits), hetero_ref)
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        P = assignment.num_pairs
+        assert t.last.layers == P
+        assert t.total_bytes == expected_paged_bytes(
+            s_cfg, B, Sc, P, name, P * -(-Sc // PAGE_LEN))
+
+    @pytest.mark.parametrize("name", sorted(TRANSPORTS))
+    def test_paged_latency_contract_holds(self, homo, name):
+        """The deferred-stamp semantics survive the store routing."""
+        from repro.store import PageStore
+        cfg, _, kv, select, _ = homo
+        t = TRANSPORTS[name](sync=False, store=PageStore(page_len=PAGE_LEN))
+        t.send(cfg, KVCFG, kv, select)
+        assert t.last.latency_s == 0.0
+        assert t.flush_latency() == 1
+        assert t.last.latency_s > 0.0
