@@ -1,0 +1,178 @@
+"""Fault-tolerance overhead: what recovery costs when the channel misbehaves.
+
+The trained pair shares the SAME retrieval context batch through a
+``RemoteTransport`` whose loopback channel is wrapped in a ``FaultyChannel``
+driving seeded chaos schedules (``FaultSchedule.random``).  Three sweeps:
+
+  chaos rate sweep — fault rates 0.0 / 0.15 / 0.3 over several seeds;
+                     every share must land (retry or degradation ladder),
+                     and the rows report recovered-share latency vs the
+                     clean floor, attempts burned, and the retry-byte
+                     overhead (every byte handed to the channel, failed
+                     attempts included, vs the clean byte floor).
+  paged retry      — a scripted fault inside a REPEAT paged handshake:
+                     the retry re-answers ``page_need`` from the pool, so
+                     the recovered repeat ships zero payload pages.
+  dead channel     — a channel that never heals: exhausted retries walk
+                     the degradation ladder to the text-only baseline rung
+                     (zero KV bytes) instead of raising.
+
+Writes ``BENCH_faults.json`` at the repo root (CI uploads it as an
+artifact); env knobs: REPRO_FAULTS_ITERS (shares per row, default 12),
+REPRO_FAULTS_N (batch, default 8), REPRO_FAULTS_SEEDS (default 3).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.comm import (Fault, FaultSchedule, FaultyChannel,
+                        LoopbackChannel, RemoteTransport, Resilience,
+                        RetryPolicy)
+from repro.core.types import KVCommConfig
+
+ITERS = int(os.environ.get("REPRO_FAULTS_ITERS", "12"))
+BATCH = int(os.environ.get("REPRO_FAULTS_N", "8"))
+SEEDS = int(os.environ.get("REPRO_FAULTS_SEEDS", "3"))
+WIRE = os.environ.get("REPRO_FAULTS_WIRE", "float16")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+# Generous attempts with near-zero backoff: the sweep measures recovery
+# mechanics, not sleep time.  Dense schedules can fault the retry write
+# too — the budget rides through runs of consecutive faults.
+POLICY = RetryPolicy(max_attempts=6, backoff_s=1e-4, jitter=0.0)
+
+
+def _faulty_session(schedule, store=None):
+    channel = FaultyChannel(LoopbackChannel(), schedule)
+    session, _, _ = common.make_session(
+        RemoteTransport(WIRE, channel=channel, policy=POLICY, store=store))
+    session.resilience = Resilience()       # baseline rung backstop
+    return session, channel
+
+
+def bench_rate(batch, rate: float, seed: int) -> dict:
+    """ITERS shares through a seeded chaos schedule.  Unpaged exchange is
+    one write per share, so n_ops covers every share plus retry slack."""
+    schedule = FaultSchedule.random(seed=seed, n_ops=ITERS * 4, rate=rate)
+    session, channel = _faulty_session(schedule)
+    session.share(batch["context"], KVCFG)              # warm (compiles)
+    channel.reset()
+    session.transport.log.clear()
+    session.degradations.clear()
+    base_writes = channel.writes
+    base_bytes = channel.bytes_written
+    for _ in range(ITERS):
+        session.share(batch["context"], KVCFG)
+    log = session.transport.log
+    clean = [r.latency_s for r in log if r.attempts == 1 and r.n_bytes]
+    recovered = [r.latency_s for r in log if r.attempts > 1]
+    clean_bytes = next(r.frame_bytes for r in log if r.n_bytes) * ITERS
+    row = {
+        "sweep": "chaos_rate",
+        "rate": rate,
+        "seed": seed,
+        "shares": ITERS,
+        "faults_fired": len(schedule.fired),
+        "recovered": len(recovered),
+        "degraded": len(session.degradations),
+        "attempts_total": sum(r.attempts for r in log),
+        "clean_latency_ms": float(np.mean(clean)) * 1e3 if clean else None,
+        "recovered_latency_ms": (float(np.mean(recovered)) * 1e3
+                                 if recovered else None),
+        # bytes that actually reached the inner channel (truncated partials
+        # included; dropped frames hand over nothing) vs the clean floor...
+        "wire_byte_overhead": ((channel.bytes_written - base_bytes)
+                               / clean_bytes - 1.0),
+        # ...and frames ATTEMPTED: each retry re-frames the full payload,
+        # so this is the sender-side resend cost
+        "retry_frame_overhead": (channel.writes - base_writes) / ITERS - 1.0,
+        "writes": channel.writes - base_writes,
+    }
+    return row
+
+
+def bench_paged_retry(batch) -> dict:
+    """A scripted mid-handshake fault on a REPEAT share: the retry's
+    ``page_need`` answer comes from the pool, so recovery ships nothing."""
+    from repro.store import PageStore
+    # Paged exchange = 3 writes/share.  Cold share: ops 0-2; first repeat:
+    # ops 3-5 — kill its page_data frame (op 5); retry burns ops 6-8.
+    session, channel = _faulty_session(FaultSchedule(), store=PageStore())
+    session.share(batch["context"], KVCFG)              # cold: fills pool
+    cold = session.transport.log[-1]
+    channel.schedule = FaultSchedule(
+        [Fault(channel.writes + 2, "truncate")])
+    bytes_before = channel.bytes_written
+    session.share(batch["context"], KVCFG)              # faulted repeat
+    rec = session.transport.log[-1]
+    return {
+        "sweep": "paged_retry",
+        "cold_bytes": cold.n_bytes,
+        "repeat_attempts": rec.attempts,
+        "repeat_payload_bytes": rec.n_bytes,
+        "repeat_channel_bytes": channel.bytes_written - bytes_before,
+        "dedup": session.dedup_summary(),
+    }
+
+
+def bench_dead_channel(batch) -> dict:
+    """Every op faults: retries exhaust and the ladder lands each share on
+    the text-only baseline rung — zero KV bytes, no exception."""
+    schedule = FaultSchedule.random(seed=0, n_ops=10_000, rate=1.0,
+                                    kinds=("disconnect",))
+    session, channel = _faulty_session(schedule)
+    n = max(2, ITERS // 4)
+    for _ in range(n):
+        session.share(batch["context"], KVCFG)
+    log = session.transport.log
+    return {
+        "sweep": "dead_channel",
+        "shares": n,
+        "degraded": len(session.degradations),
+        "baseline_stage": all(ev.stage == "baseline"
+                              for ev in session.degradations),
+        "kv_bytes": sum(r.n_bytes for r in log),
+        "attempts_per_share": session.degradations[0].attempts,
+    }
+
+
+def main() -> None:
+    _, _, tok = common.make_session()
+    batch = common.eval_batch(tok, "countries", BATCH)
+    rows = []
+    for rate in (0.0, 0.15, 0.3):
+        for seed in range(SEEDS):
+            row = bench_rate(batch, rate, seed)
+            rows.append(row)
+            rec = (f"{row['recovered_latency_ms']:.2f}"
+                   if row["recovered_latency_ms"] else "-")
+            print(f"rate {rate:.2f} seed {seed}: {row['faults_fired']:2d} "
+                  f"faults, {row['recovered']:2d} recovered, "
+                  f"{row['degraded']} degraded; clean "
+                  f"{row['clean_latency_ms']:.2f} ms, recovered {rec} ms, "
+                  f"resend +{row['retry_frame_overhead'] * 100:.1f}% frames")
+            if rate == 0.0:
+                break                       # one clean floor row is enough
+    paged = bench_paged_retry(batch)
+    rows.append(paged)
+    print(f"paged retry: repeat took {paged['repeat_attempts']} attempts, "
+          f"shipped {paged['repeat_payload_bytes']} payload B "
+          f"(cold {paged['cold_bytes']} B)")
+    dead = bench_dead_channel(batch)
+    rows.append(dead)
+    print(f"dead channel: {dead['degraded']}/{dead['shares']} degraded to "
+          f"baseline ({dead['kv_bytes']} KV bytes, "
+          f"{dead['attempts_per_share']} attempts each)")
+    out = {"wire_dtype": WIRE, "iters": ITERS, "batch": BATCH, "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -84,6 +84,14 @@ class ChannelClosedError(RemoteProtocolError):
     """The channel ended cleanly at a frame boundary (peer hung up)."""
 
 
+class ChannelTimeoutError(ChannelClosedError):
+    """The channel produced nothing within its deadline — distinguishable
+    from a genuine peer close (a stalled peer may still be alive, so a
+    retry policy treats this as retriable).  Subclasses
+    ``ChannelClosedError`` so pre-existing clean-close handling (server
+    loops, boundary tests) keeps working unchanged."""
+
+
 class FrameTruncatedError(RemoteProtocolError):
     """The channel ended mid-frame — a disconnect or a cut-short stream."""
 
@@ -160,26 +168,45 @@ class SocketChannel(RemoteChannel):
 
     @classmethod
     def connect(cls, host: str, port: int, timeout_s: float = 30.0,
-                retry_s: float = 0.1) -> "SocketChannel":
+                retry_s: float = 0.1,
+                io_timeout_s: Optional[float] = None) -> "SocketChannel":
+        """Dial with a REAL deadline: each connect attempt's own timeout is
+        capped at the remaining budget (never a hardcoded inner timeout
+        that could outlive ``timeout_s``).  ``io_timeout_s`` arms a
+        per-read/write socket timeout on the connected channel (stalled
+        peers surface as ``ChannelTimeoutError`` instead of hanging)."""
         deadline = time.monotonic() + timeout_s
         while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise ChannelTimeoutError(
+                    f"could not connect to {host}:{port} "
+                    f"within {timeout_s}s")
             try:
-                return cls(socket.create_connection((host, port), timeout=60))
+                sock = socket.create_connection(
+                    (host, port), timeout=max(remaining, 1e-3))
+                sock.settimeout(io_timeout_s)
+                return cls(sock)
             except OSError as e:
                 if time.monotonic() >= deadline:
                     raise ChannelClosedError(
                         f"could not connect to {host}:{port}: {e}") from e
-                time.sleep(retry_s)
+                time.sleep(min(retry_s,
+                               max(deadline - time.monotonic(), 0.0)))
 
     def write(self, data: bytes) -> None:
         try:
             self.sock.sendall(data)
+        except socket.timeout as e:
+            raise ChannelTimeoutError(f"socket send timed out: {e}") from e
         except OSError as e:
             raise ChannelClosedError(f"socket send failed: {e}") from e
 
     def read(self, n: int) -> bytes:
         try:
             return self.sock.recv(min(n, 1 << 20))
+        except socket.timeout as e:
+            raise ChannelTimeoutError(f"socket recv timed out: {e}") from e
         except OSError as e:
             raise ChannelClosedError(f"socket recv failed: {e}") from e
 
@@ -206,14 +233,25 @@ class FileChannel(RemoteChannel):
     says — re-checking it until its first chunk lands, so a reader that
     raced a writer restart locks onto the NEW stream instead of consuming
     a dead pair's leftovers.  Without the nonce, both sides restarting at
-    sequence 0 could silently replay stale chunk files as fresh frames."""
+    sequence 0 could silently replay stale chunk files as fresh frames.
+
+    Polling backs off exponentially from ``poll_s`` up to ``max_poll_s``
+    (reset on every hit), so an idle reader doesn't spin the filesystem at
+    a fixed rate.  A writer's ``close()`` drops an ``.eof`` marker naming
+    its final sequence number, which lets the reader tell a CLEAN close
+    (marker present, all chunks consumed -> b"" -> ``ChannelClosedError``
+    at a frame boundary / ``FrameTruncatedError`` mid-frame) apart from a
+    stalled writer (no marker within ``timeout_s`` ->
+    ``ChannelTimeoutError``) — previously both surfaced as the same
+    timeout-shaped truncation."""
 
     def __init__(self, directory: str, name: str = "kv",
                  poll_s: float = 0.01, timeout_s: float = 10.0,
-                 consume: bool = True) -> None:
+                 consume: bool = True, max_poll_s: float = 0.25) -> None:
         self.directory = directory
         self.name = name
         self.poll_s = poll_s
+        self.max_poll_s = max(max_poll_s, poll_s)
         self.timeout_s = timeout_s
         self.consume = consume
         os.makedirs(directory, exist_ok=True)
@@ -227,6 +265,23 @@ class FileChannel(RemoteChannel):
     def _marker(self) -> str:
         return os.path.join(self.directory, f"{self.name}.nonce")
 
+    def _eof_marker(self) -> str:
+        assert self._nonce is not None
+        return os.path.join(self.directory,
+                            f"{self.name}.{self._nonce}.eof")
+
+    def _writer_closed(self) -> bool:
+        """True when the writer published an EOF marker and every chunk it
+        wrote has been consumed — the stream genuinely ended."""
+        if self._nonce is None:
+            return False
+        try:
+            with open(self._eof_marker(), "r") as f:
+                final_seq = int(f.read().strip() or 0)
+        except (OSError, ValueError):
+            return False
+        return self._rseq >= final_seq
+
     def _path(self, seq: int) -> str:
         assert self._nonce is not None
         return os.path.join(
@@ -238,7 +293,8 @@ class FileChannel(RemoteChannel):
         # a fresh writer owns the channel name: clear whatever chunks a
         # dead pair left so a restarted reader can never consume them
         for fn in os.listdir(self.directory):
-            if fn.startswith(self.name + ".") and fn.endswith(".chunk"):
+            if fn.startswith(self.name + ".") \
+                    and fn.endswith((".chunk", ".eof")):
                 try:
                     os.unlink(os.path.join(self.directory, fn))
                 except OSError:
@@ -274,6 +330,7 @@ class FileChannel(RemoteChannel):
     def read(self, n: int) -> bytes:
         if self._roff >= len(self._rbuf):
             deadline = time.monotonic() + self.timeout_s
+            pause = self.poll_s
             while True:
                 if not self._published and self._rseq == 0:
                     self._adopt_nonce()
@@ -281,9 +338,19 @@ class FileChannel(RemoteChannel):
                         else None)
                 if path is not None and os.path.exists(path):
                     break
+                if self._writer_closed():
+                    return b""      # clean end: framing decides Closed
+                                    # (boundary) vs Truncated (mid-frame)
                 if time.monotonic() >= deadline:
-                    return b""
-                time.sleep(self.poll_s)
+                    raise ChannelTimeoutError(
+                        f"no chunk {self._rseq} under {self.name!r} "
+                        f"within {self.timeout_s}s (writer stalled or "
+                        "gone without closing)")
+                time.sleep(min(pause, max(
+                    deadline - time.monotonic(), 0.0)))
+                # capped exponential backoff: idle polls decay to
+                # max_poll_s instead of hammering the filesystem
+                pause = min(pause * 2.0, self.max_poll_s)
             with open(path, "rb") as f:
                 self._rbuf = f.read()
             self._roff = 0
@@ -296,6 +363,20 @@ class FileChannel(RemoteChannel):
         chunk = self._rbuf[self._roff:self._roff + n]
         self._roff += len(chunk)
         return chunk
+
+    def close(self) -> None:
+        """Writer side: publish the EOF marker (atomic rename, like the
+        chunks) so the reader can distinguish this clean close from a
+        stall.  A reader-side close is a no-op."""
+        if not self._published:
+            return
+        tmp = self._eof_marker() + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                f.write(str(self._wseq))
+            os.replace(tmp, self._eof_marker())
+        except OSError:
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -656,23 +737,95 @@ class RemoteTransport(Transport):
     (gather + wire cast + framing), ``channel_s`` (channel write + read
     back), ``deserialize_s`` (parse + rebuild), plus ``frame_bytes`` (full
     frame incl. header/CRC) next to the analytics-matching ``n_bytes``.
+
+    Fault tolerance (``repro.comm.resilience``): a ``policy``
+    (``RetryPolicy``) re-runs a failed exchange over a healed channel —
+    ``channel_factory`` reconnects (fresh channel per retry attempt), a
+    channel exposing ``reset()`` (``FaultyChannel``) is reset in place.
+    Retries are idempotent by construction: the unpaged exchange re-frames
+    the same deterministic payload, and a paged retry re-runs
+    ``page_query`` against the (possibly partially filled) pool, so the
+    resend ships ONLY the pages the receiver never pooled.  An optional
+    ``breaker`` (``CircuitBreaker``) short-circuits sends while its peer
+    is quarantined.  The successful record's ``attempts`` counts what the
+    transfer burned.
     """
 
     def __init__(self, wire_dtype: str = "float16",
                  channel: Optional[RemoteChannel] = None,
                  packed: bool = True, sync: bool = True,
-                 store=None) -> None:
+                 store=None, policy=None, channel_factory=None,
+                 breaker=None) -> None:
         super().__init__(packed=packed, sync=sync, store=store)
         if wire_dtype not in _WIRE_DTYPES:
             raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                              f"one of {sorted(_WIRE_DTYPES)}")
         self.wire_dtype = wire_dtype
-        self.channel = channel if channel is not None else LoopbackChannel()
+        self.policy = policy                    # resilience.RetryPolicy
+        self.channel_factory = channel_factory  # () -> RemoteChannel
+        self.breaker = breaker                  # resilience.CircuitBreaker
+        if channel is None:
+            channel = (channel_factory() if channel_factory is not None
+                       else LoopbackChannel())
+        self.channel = channel
         self._paged_rx = None          # lazy PagedReceiver over self.store
         self._xid = 0                  # paged exchange counter
 
+    # -- retry plumbing ----------------------------------------------------
+    def _reset_channel(self) -> None:
+        """Heal the channel between retry attempts: drop any pending paged
+        exchange state (a died handshake's expectations), then reconnect
+        via the factory or reset the channel in place."""
+        if self._paged_rx is not None:
+            self._paged_rx.abort()
+        if self.channel_factory is not None:
+            try:
+                self.channel.close()
+            except (RemoteProtocolError, OSError):
+                pass
+            self.channel = self.channel_factory()
+        elif hasattr(self.channel, "reset"):
+            self.channel.reset()
+
+    def _attempt(self, fn, describe: str):
+        """Run one exchange under the breaker + retry policy.  ``fn`` must
+        be self-contained (appends its own TransferRecord on success); the
+        record's ``attempts`` is stamped here."""
+        from repro.comm.resilience import CircuitOpenError
+        if self.breaker is not None and not self.breaker.allow():
+            raise CircuitOpenError(
+                f"{describe}: peer circuit is open (quarantined after "
+                f"{self.breaker.failures} consecutive failures)")
+        used = [1]
+
+        def wrapped(attempt: int):
+            used[0] = attempt + 1
+            if attempt:
+                self._reset_channel()
+            return fn()
+
+        try:
+            out = wrapped(0) if self.policy is None \
+                else self.policy.run(wrapped, describe=describe)
+        except (RemoteProtocolError, OSError):
+            if self.breaker is not None:
+                self.breaker.record_failure()
+            raise
+        if self.breaker is not None:
+            self.breaker.record_success()
+        self.log[-1].attempts = used[0]
+        return out
+
     def _ship(self, kvcfg: KVCommConfig, kv, select, states, state_select,
               assignment: Optional[LayerAssignment]) -> SharedKV:
+        return self._attempt(
+            lambda: self._ship_once(kvcfg, kv, select, states,
+                                    state_select, assignment),
+            describe="remote shared_kv exchange")
+
+    def _ship_once(self, kvcfg: KVCommConfig, kv, select, states,
+                   state_select,
+                   assignment: Optional[LayerAssignment]) -> SharedKV:
         t0 = time.perf_counter()
         frame, n_bytes, layer_count, prefix_len = encode_kv_transfer(
             kvcfg, kv, select, states, state_select, assignment,
@@ -712,7 +865,22 @@ class RemoteTransport(Transport):
         ``page_need`` answers with the pool's missing IDs, ``page_data``
         ships only those pages (+ states).  As with ``_ship``, one object
         plays both roles over its channel — frames byte-identical to the
-        two-process split ``launch.remote_serve`` drives."""
+        two-process split ``launch.remote_serve`` drives.
+
+        A retried exchange re-asks ``page_query`` with a FRESH xid: pages
+        that survived a truncated ``page_data`` (hash-verified before
+        pooling) answer as hits, so the resend carries only what the pool
+        genuinely never got — retry bytes are bounded by novel-page
+        bytes."""
+        return self._attempt(
+            lambda: self._send_paged_once(cfg, kvcfg, kv, select, states,
+                                          state_select, assignment),
+            describe="paged page_query/need/data exchange")
+
+    def _send_paged_once(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
+                         select, states=None, state_select=None,
+                         assignment: Optional[LayerAssignment] = None
+                         ) -> SharedKV:
         # deferred so repro.comm never hard-depends on repro.store at
         # import time (the store package imports this module's codec)
         from repro.store.paging import split_payload
@@ -768,9 +936,15 @@ class RemoteTransport(Transport):
                 f"expected a page_data frame, got {kind!r}")
         shared, table_rx, novel_bytes, state_bytes = \
             self._paged_rx.handle_data(meta, arrays)
-        if not self.packed:
-            shared = shared.to_dense()
-        self._swap_table(table_rx)
+        # handle_data left table_rx pinned; anything failing between here
+        # and a successful swap must release it or the refcounts leak
+        try:
+            if not self.packed:
+                shared = shared.to_dense()
+            self._swap_table(table_rx)
+        except BaseException:
+            self.store.release(table_rx)
+            raise
         t6 = time.perf_counter()
         self.log.append(TransferRecord(
             kind="kv",

@@ -1,0 +1,386 @@
+"""Policy-driven fault tolerance for the remote KV stack.
+
+KV-as-communication only survives production if a dropped socket, a
+stalled kv_server, or a corrupt frame degrades ONE request instead of
+killing the serving loop.  This module holds the four pieces the rest of
+the stack threads through:
+
+  RetryPolicy     — max attempts, exponential backoff with deterministic
+                    seeded jitter, per-call deadline.  Wraps channel
+                    connect/send/recv and the paged page_query/need/data
+                    handshake.  Retries are dedup-aware by construction:
+                    a resend after reconnect re-runs ``page_query``
+                    against the receiver's pool, so retry bytes are the
+                    NOVEL pages only.
+  CircuitBreaker  — per-peer closed -> open -> half-open gate keyed by
+                    consecutive exhausted sends.  An open breaker
+                    quarantines the peer: callers skip the doomed remote
+                    attempt and go straight to their fallback.
+  Resilience +    — the graceful-degradation ladder a ``CommSession``
+  DegradationEvent  walks when retries are exhausted: remote ->
+                    serialized-local -> baseline (text-only, zero KV
+                    bytes).  Every downgrade is recorded as a
+                    ``DegradationEvent`` on the transfer log (and on the
+                    scheduler's ``Completion``) instead of raising.
+  FaultSchedule + — the deterministic chaos harness: scripted
+  FaultyChannel     drop/truncate/corrupt/delay/disconnect faults fired
+                    at exact frame boundaries (every ``write`` on a
+                    channel is one frame in this codebase), from an
+                    explicit script or a seeded random schedule — every
+                    recovery path is reproducibly testable.
+
+Everything here is host-side control flow: no traced code, no new
+compiles.  Determinism is load-bearing — jitter comes from
+``random.Random(seed)``, never the global RNG, so a chaos run replays
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+from repro.comm.remote import (ChannelClosedError, FrameCorruptError,
+                               FrameTruncatedError, HeaderCorruptError,
+                               RemoteChannel, RemoteProtocolError)
+
+# What a retry can fix: the channel died, the stream was cut short, or
+# bytes were damaged in flight — a fresh attempt over a reset channel can
+# succeed.  Version skew and payload-mismatch claims are PERMANENT (the
+# peer will answer the same way forever), so they propagate immediately.
+RETRIABLE_ERRORS: Tuple[type, ...] = (
+    ChannelClosedError, FrameTruncatedError, FrameCorruptError,
+    HeaderCorruptError, OSError)
+
+
+class RetriesExhaustedError(RemoteProtocolError):
+    """Every attempt a ``RetryPolicy`` allowed has failed.  Carries the
+    attempt count and the last underlying error (also its ``__cause__``)
+    so degradation ladders can record WHY they downgraded."""
+
+    def __init__(self, describe: str, attempts: int,
+                 last: BaseException) -> None:
+        super().__init__(
+            f"{describe}: {attempts} attempt(s) exhausted; "
+            f"last error: {type(last).__name__}: {last}")
+        self.attempts = attempts
+        self.last = last
+
+
+class CircuitOpenError(RemoteProtocolError):
+    """The peer's circuit breaker is open — the call was never attempted
+    (quarantine, not failure)."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff and deterministic jitter.
+
+    ``run(fn)`` calls ``fn(attempt)`` up to ``max_attempts`` times,
+    sleeping ``backoff(attempt)`` between failures.  Only ``retriable``
+    exception types are retried; anything else propagates untouched.
+    ``deadline_s`` bounds the WHOLE call (attempts + sleeps): once it is
+    spent, the next failure raises instead of sleeping.  Jitter is drawn
+    from a policy-seeded RNG so two runs of the same schedule back off
+    identically (the chaos suite depends on it)."""
+
+    max_attempts: int = 3
+    backoff_s: float = 0.02        # first sleep
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 1.0
+    jitter: float = 0.25           # +/- fraction of the base backoff
+    deadline_s: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+
+    def backoff(self, attempt: int, rng: random.Random) -> float:
+        """Sleep before attempt ``attempt + 1`` (attempt counts from 0)."""
+        base = min(self.backoff_s * (self.backoff_mult ** attempt),
+                   self.max_backoff_s)
+        if self.jitter <= 0:
+            return base
+        return max(0.0, base * (1.0 + self.jitter * rng.uniform(-1, 1)))
+
+    def run(self, fn: Callable[[int], Any], *,
+            retriable: Tuple[type, ...] = RETRIABLE_ERRORS,
+            describe: str = "remote op",
+            on_retry: Optional[Callable[[int, BaseException], None]] = None,
+            sleep: Callable[[float], None] = time.sleep,
+            clock: Callable[[], float] = time.monotonic) -> Any:
+        """Drive ``fn(attempt)`` under this policy.  ``on_retry(attempt,
+        err)`` fires before each re-attempt (transports reset/reconnect
+        their channel there).  ``sleep``/``clock`` are injectable for
+        tests."""
+        rng = random.Random(self.seed)
+        deadline = (None if self.deadline_s is None
+                    else clock() + self.deadline_s)
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_attempts):
+            try:
+                return fn(attempt)
+            except retriable as e:       # noqa: PERF203 — retry loop
+                last = e
+                out_of_time = deadline is not None and clock() >= deadline
+                if attempt == self.max_attempts - 1 or out_of_time:
+                    raise RetriesExhaustedError(
+                        describe, attempt + 1, e) from e
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                pause = self.backoff(attempt, rng)
+                if deadline is not None:
+                    pause = min(pause, max(0.0, deadline - clock()))
+                if pause > 0:
+                    sleep(pause)
+        raise AssertionError("unreachable")     # pragma: no cover
+
+
+class CircuitBreaker:
+    """Per-peer closed -> open -> half-open failure gate.
+
+    ``failure_threshold`` consecutive recorded failures open the circuit;
+    while open, ``allow()`` is False (callers skip the peer — the
+    quarantine).  After ``reset_timeout_s`` the breaker goes half-open:
+    exactly one trial call is allowed through; its success closes the
+    circuit, its failure re-opens it (and restarts the timer).  The clock
+    is injectable so state transitions are testable without sleeping."""
+
+    def __init__(self, failure_threshold: int = 3,
+                 reset_timeout_s: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.reset_timeout_s = reset_timeout_s
+        self._clock = clock
+        self.state = "closed"
+        self.failures = 0              # consecutive failures
+        self._opened_at = 0.0
+        self._probing = False          # half-open trial in flight
+
+    def allow(self) -> bool:
+        """May the caller attempt the peer right now?"""
+        if self.state == "open":
+            if self._clock() - self._opened_at >= self.reset_timeout_s:
+                self.state = "half-open"
+                self._probing = False
+            else:
+                return False
+        if self.state == "half-open":
+            if self._probing:
+                return False           # one trial at a time
+            self._probing = True
+        return True
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self._probing = False
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        self._probing = False
+        if self.state == "half-open" \
+                or self.failures >= self.failure_threshold:
+            self.state = "open"
+            self._opened_at = self._clock()
+
+
+@dataclass
+class DegradationEvent:
+    """One request's downgrade decision: which ladder rung actually served
+    it, which stage failed, and why.  Attached to the ``TransferRecord``
+    the serving rung logged and to the scheduler's ``Completion``."""
+    stage: str                     # rung that served: "serialized"|"baseline"
+    from_stage: str = "remote"     # rung that failed
+    reason: str = ""               # last error, human-readable
+    attempts: int = 1              # attempts the failing stage burned
+    rid: Optional[int] = None      # request id, when known
+
+    def __str__(self) -> str:
+        tag = "" if self.rid is None else f"rid={self.rid} "
+        return (f"DegradationEvent({tag}{self.from_stage} -> {self.stage} "
+                f"after {self.attempts} attempt(s): {self.reason})")
+
+
+@dataclass
+class Resilience:
+    """A ``CommSession``'s degradation ladder + optional peer breaker.
+
+    ``fallbacks`` is an ordered list of (stage name, Transport-or-None)
+    rungs tried after the primary transport exhausts its retries; a None
+    transport is the terminal ``baseline`` rung — the request is served
+    text-only (``shared=None``, zero KV bytes) instead of raising.  The
+    retry policy itself lives on the transport (``RemoteTransport(policy=
+    ...)``); this object only decides what happens when it gives up."""
+    fallbacks: Sequence[Tuple[str, Optional[Any]]] = \
+        field(default_factory=lambda: [("baseline", None)])
+    breaker: Optional[CircuitBreaker] = None
+
+
+def default_resilience(wire_dtype: str = "float16",
+                       breaker: Optional[CircuitBreaker] = None
+                       ) -> Resilience:
+    """The full remote -> serialized-local -> baseline ladder: an
+    in-process ``SerializedTransport`` at the same wire dtype (the KV
+    still crosses a lossy wire, just not a broken channel), then
+    text-only."""
+    from repro.comm.transport import SerializedTransport
+    return Resilience(
+        fallbacks=[("serialized", SerializedTransport(wire_dtype)),
+                   ("baseline", None)],
+        breaker=breaker if breaker is not None else CircuitBreaker())
+
+
+# ---------------------------------------------------------------------------
+# the deterministic chaos harness
+# ---------------------------------------------------------------------------
+FAULT_KINDS = ("drop", "truncate", "corrupt", "delay", "disconnect")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scripted fault, fired on the ``op``-th frame written through a
+    ``FaultyChannel`` (frame == one ``write`` everywhere in this codebase,
+    so ``op`` IS the exact frame boundary).
+
+      drop       — the frame silently never lands (reader times out /
+                   sees a closed stream).
+      truncate   — only ``frac`` of the frame's bytes land, then the
+                   channel breaks (the mid-frame kill).
+      corrupt    — one byte at relative offset ``frac`` is flipped (CRC
+                   catches it downstream).
+      delay      — the frame lands after ``delay_s`` of real wall clock.
+      disconnect — the write itself raises ``ChannelClosedError`` and the
+                   channel breaks (nothing lands).
+    """
+    op: int
+    kind: str
+    frac: float = 0.5
+    delay_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+
+
+class FaultSchedule:
+    """A deterministic map of write-index -> Fault.  Build it explicitly
+    (``FaultSchedule([Fault(0, "truncate")])``) or seeded-randomly
+    (``FaultSchedule.random(seed=7, n_ops=12, rate=0.3)``); either way the
+    same schedule replays the same faults at the same frame boundaries."""
+
+    def __init__(self, faults: Sequence[Fault] = ()) -> None:
+        self._by_op: Dict[int, Fault] = {}
+        for f in faults:
+            if f.op in self._by_op:
+                raise ValueError(f"two faults scripted for op {f.op}")
+            self._by_op[f.op] = f
+        self.fired: List[Fault] = []
+
+    @classmethod
+    def random(cls, seed: int, n_ops: int, rate: float,
+               kinds: Sequence[str] = FAULT_KINDS,
+               delay_s: float = 0.0) -> "FaultSchedule":
+        """Seeded random schedule: each of the first ``n_ops`` writes
+        independently faults with probability ``rate``.  Same seed, same
+        schedule — the chaos sweeps parametrize over seeds."""
+        rng = random.Random(seed)
+        faults = []
+        for op in range(n_ops):
+            if rng.random() < rate:
+                kind = rng.choice(list(kinds))
+                faults.append(Fault(op=op, kind=kind,
+                                    frac=rng.uniform(0.1, 0.9),
+                                    delay_s=delay_s))
+        return cls(faults)
+
+    def pop(self, op: int) -> Optional[Fault]:
+        f = self._by_op.pop(op, None)
+        if f is not None:
+            self.fired.append(f)
+        return f
+
+    def __len__(self) -> int:
+        return len(self._by_op)
+
+
+class FaultyChannel(RemoteChannel):
+    """Wraps any ``RemoteChannel`` and injects the schedule's faults at
+    exact frame boundaries.  After a breaking fault (truncate /
+    disconnect / drop) the channel stays down — writes raise, reads
+    return b"" — until ``reset()`` "reconnects" it, which is exactly what
+    a retrying transport does between attempts (``RemoteTransport`` calls
+    ``reset()`` when no channel factory is configured).
+
+    ``bytes_written``/``writes`` count EVERY attempt including the failed
+    ones — the retry-byte overhead the fault benchmark reports."""
+
+    def __init__(self, inner: RemoteChannel,
+                 schedule: Optional[FaultSchedule] = None) -> None:
+        self.inner = inner
+        self.schedule = schedule if schedule is not None else FaultSchedule()
+        self.writes = 0                # frames attempted (faulted included)
+        self.bytes_written = 0         # bytes actually handed to inner
+        self.resets = 0
+        self._broken = False
+
+    def _write_inner(self, data: bytes) -> None:
+        self.inner.write(data)
+        self.bytes_written += len(data)
+
+    def write(self, data: bytes) -> None:
+        op = self.writes
+        self.writes += 1
+        if self._broken:
+            raise ChannelClosedError(
+                "faulty channel is down (awaiting reset/reconnect)")
+        fault = self.schedule.pop(op)
+        if fault is None:
+            self._write_inner(data)
+            return
+        if fault.kind == "drop":
+            self._broken = True        # the frame vanishes; the reader
+            return                     # sees a dead stream, not garbage
+        if fault.kind == "truncate":
+            cut = max(1, min(len(data) - 1, int(len(data) * fault.frac)))
+            self._write_inner(data[:cut])
+            self._broken = True
+            return
+        if fault.kind == "corrupt":
+            i = min(len(data) - 1, max(0, int(len(data) * fault.frac)))
+            bad = bytearray(data)
+            bad[i] ^= 0xFF
+            self._write_inner(bytes(bad))
+            return
+        if fault.kind == "delay":
+            if fault.delay_s > 0:
+                time.sleep(fault.delay_s)
+            self._write_inner(data)
+            return
+        # disconnect
+        self._broken = True
+        raise ChannelClosedError("fault injected: peer disconnected")
+
+    def read(self, n: int) -> bytes:
+        if self._broken:
+            return b""                 # framing turns this into Closed /
+        return self.inner.read(n)      # Truncated depending on position
+
+    def reset(self) -> None:
+        """Reconnect: heal the broken state and drain any half-written
+        frame still sitting in the inner buffer (a real reconnect gets a
+        fresh socket; a loopback just flushes the residue)."""
+        self._broken = False
+        self.resets += 1
+        if hasattr(self.inner, "__len__"):
+            while len(self.inner):     # type: ignore[arg-type]
+                self.inner.read(1 << 16)
+
+    def close(self) -> None:
+        self.inner.close()

@@ -30,9 +30,16 @@ import numpy as np
 from repro import core
 from repro.comm.agent import Agent
 from repro.comm.methods import CommRequest, MethodResult, get_method
+from repro.comm.remote import RemoteProtocolError
+from repro.comm.resilience import DegradationEvent, Resilience
 from repro.comm.transport import InMemoryTransport, Transport
-from repro.core.channel import combine_senders
+from repro.core.channel import TransferRecord, combine_senders
 from repro.core.types import KVCommConfig, SharedKV
+
+# what the degradation ladder can catch: transport/protocol failures (incl.
+# RetriesExhaustedError and CircuitOpenError) and raw socket errors — never
+# programming errors, which propagate
+_LADDER_ERRORS = (RemoteProtocolError, OSError)
 
 
 @dataclass
@@ -75,7 +82,8 @@ class CommSession:
     the (possibly >1) senders talking to one receiver."""
 
     def __init__(self, sender: Agent, receiver: Agent,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None,
+                 resilience: Optional[Resilience] = None):
         scfg, rcfg = sender.cfg, receiver.cfg
         if scfg.supports_kv_sharing and rcfg.supports_kv_sharing:
             # depths may differ (a LayerMap aligns them) but the per-layer
@@ -100,6 +108,12 @@ class CommSession:
                              jnp.ndarray] = {}
         self.mailbox: List[Tuple[str, SharedKV]] = []
         self._n_handles = 0
+        # graceful degradation (repro.comm.resilience): when set, a share
+        # whose transport exhausts its retries walks the fallback ladder
+        # instead of raising; every downgrade lands in ``degradations``
+        self.resilience = resilience
+        self.degradations: List[DegradationEvent] = []
+        self.last_degradation: Optional[DegradationEvent] = None
 
     @property
     def is_hetero(self) -> bool:
@@ -196,24 +210,107 @@ class CommSession:
             None, n_ssm, dataclasses.replace(kvcfg, selector="prior_only"))
 
     # ---- one communication round -----------------------------------------
+    def _resilient_send(self, kvcfg: KVCommConfig, kv, select, states,
+                        state_select, *, assignment=None,
+                        sync: Optional[bool] = None,
+                        rid: Optional[int] = None) -> Optional[SharedKV]:
+        """Push one transfer through the primary transport, walking the
+        ``Resilience`` fallback ladder when it fails.
+
+        The healthy path is exactly ``transport.send``.  With a resilience
+        config, an exhausted/failed primary send (or an open circuit —
+        quarantine skips the doomed attempt entirely) tries each fallback
+        rung in order; a rung with a transport serves the SAME payload
+        in-process, the terminal ``("baseline", None)`` rung serves the
+        request text-only (returns None — zero KV bytes).  Either way the
+        downgrade is recorded: a ``DegradationEvent`` lands in
+        ``self.degradations`` / ``self.last_degradation`` and on the
+        ``TransferRecord`` appended to the PRIMARY transport's log (the
+        single source of byte accounting; fallback rungs' records are
+        moved there)."""
+        self.last_degradation = None
+        res = self.resilience
+        if res is None:
+            return self.transport.send(self.cfg, kvcfg, kv, select, states,
+                                       state_select, assignment=assignment,
+                                       sync=sync)
+        failure: Optional[BaseException] = None
+        if res.breaker is None or res.breaker.allow():
+            try:
+                shared = self.transport.send(
+                    self.cfg, kvcfg, kv, select, states, state_select,
+                    assignment=assignment, sync=sync)
+                if res.breaker is not None:
+                    res.breaker.record_success()
+                return shared
+            except _LADDER_ERRORS as e:
+                failure = e
+                if res.breaker is not None:
+                    res.breaker.record_failure()
+        else:
+            from repro.comm.resilience import CircuitOpenError
+            failure = CircuitOpenError(
+                "sender quarantined: circuit open after "
+                f"{res.breaker.failures} consecutive failures")
+        attempts = getattr(failure, "attempts", 1)
+        reason = f"{type(failure).__name__}: {failure}"
+        for stage, tr in res.fallbacks:
+            if tr is None:
+                ev = DegradationEvent(stage="baseline", reason=reason,
+                                      attempts=attempts, rid=rid)
+                # a zero-byte record so the transfer log stays one row per
+                # request and dedup/byte summaries see the degraded send
+                self.transport.log.append(TransferRecord(
+                    kind="kv", n_bytes=0, layers=0, context_len=0,
+                    wire_dtype="none", attempts=attempts, degradation=ev))
+                self.degradations.append(ev)
+                self.last_degradation = ev
+                return None
+            try:
+                # synced on purpose: the degraded rung is off the hot path
+                # and must not park deferred stamps on a log nobody flushes
+                shared = tr.send(self.cfg, kvcfg, kv, select, states,
+                                 state_select, assignment=assignment,
+                                 sync=True)
+            except _LADDER_ERRORS as e:
+                reason = f"{reason}; then {stage}: {type(e).__name__}: {e}"
+                continue
+            ev = DegradationEvent(stage=stage, reason=reason,
+                                  attempts=attempts, rid=rid)
+            rec = tr.log.pop()
+            rec.degradation = ev
+            self.transport.log.append(rec)
+            self.degradations.append(ev)
+            self.last_degradation = ev
+            return shared
+        raise failure       # ladder had no terminal baseline rung
+
     def share(self, context: np.ndarray, kvcfg: KVCommConfig,
               scores: Optional[jnp.ndarray] = None,
               key: Optional[str] = None,
-              sync: Optional[bool] = None
-              ) -> Tuple[SharedKV, jnp.ndarray]:
+              sync: Optional[bool] = None,
+              rid: Optional[int] = None
+              ) -> Tuple[Optional[SharedKV], jnp.ndarray]:
         """Primary-sender round: prefill the context, select layers, push
         through the transport. Returns (receiver-side SharedKV, select).
         ``sync=False`` keeps the whole round async-dispatched (no host
         block; the transfer latency stamp is deferred — the serving
-        scheduler's hot path)."""
+        scheduler's hot path).
+
+        With a ``resilience`` config the round degrades instead of
+        raising: the SharedKV may come from a fallback transport, or be
+        None (text-only baseline — callers pass it straight to
+        ``stream``/``generate``); check ``last_degradation``.  ``rid``
+        tags the resulting DegradationEvent with the caller's request
+        id."""
         assert not self.is_hetero, \
             "sender and receiver disagree on depth; use share_mapped " \
             "(or the 'hetero_kvcomm' method) with a LayerMap policy"
         select = self.selection(kvcfg, scores=scores, key=key)
         kv, states, _ = self.sender.export_kv(context)
         state_select = self._state_selection(kvcfg, states)
-        shared = self.transport.send(self.cfg, kvcfg, kv, select,
-                                     states, state_select, sync=sync)
+        shared = self._resilient_send(kvcfg, kv, select, states,
+                                      state_select, sync=sync, rid=rid)
         return shared, select
 
     def share_mapped(self, context: np.ndarray, kvcfg: KVCommConfig,
@@ -221,8 +318,9 @@ class CommSession:
                      src_scores: Optional[jnp.ndarray] = None,
                      dst_scores: Optional[jnp.ndarray] = None,
                      key: Optional[str] = None,
-                     sync: Optional[bool] = None
-                     ) -> Tuple[SharedKV, "core.LayerAssignment"]:
+                     sync: Optional[bool] = None,
+                     rid: Optional[int] = None
+                     ) -> Tuple[Optional[SharedKV], "core.LayerAssignment"]:
         """Heterogeneous-sender round: selection runs on the SENDER side
         over its own L_attn, the ``policy`` LayerMap places the selected
         layers into receiver slots, and the transport moves exactly the
@@ -254,9 +352,9 @@ class CommSession:
             if n_ssm != _n_ssm(self.receiver.cfg):
                 states = None
         state_select = self._state_selection(kvcfg, states)
-        shared = self.transport.send(self.cfg, kvcfg, kv, None,
-                                     states, state_select,
-                                     assignment=assignment, sync=sync)
+        shared = self._resilient_send(kvcfg, kv, None, states, state_select,
+                                      assignment=assignment, sync=sync,
+                                      rid=rid)
         return shared, assignment
 
     # ---- multi-sender (§J) ------------------------------------------------

@@ -383,12 +383,19 @@ class Transport(abc.ABC):
         table, novel, novel_bytes = self.store.ingest(
             payload, layers=layers, select=sel_mask, wire_dtype=wd,
             pos_mode=kvcfg.pos_mode, src_layers=src_layers)
-        rx_states, state_bytes = self._paged_states(states, state_select)
-        shared = self.store.materialize(table, states=rx_states,
-                                        state_select=state_select)
-        if not self.packed:
-            shared = shared.to_dense()
-        self._swap_table(table)
+        # ingest pinned the table; release on any failure before the swap
+        # so an aborted send cannot leak refcounts into the pool
+        try:
+            rx_states, state_bytes = self._paged_states(states,
+                                                        state_select)
+            shared = self.store.materialize(table, states=rx_states,
+                                            state_select=state_select)
+            if not self.packed:
+                shared = shared.to_dense()
+            self._swap_table(table)
+        except BaseException:
+            self.store.release(table)
+            raise
         self.log.append(TransferRecord(
             kind="kv", n_bytes=novel_bytes + table.scale_nbytes
             + state_bytes,

@@ -46,6 +46,13 @@ class TransferRecord:
     pages_total: int = 0
     pages_sent: int = 0
     pages_hit: int = 0
+    # fault-tolerance accounting: how many channel attempts this transfer
+    # burned (1 = clean first try; RetryPolicy-driven transports stamp the
+    # real count), and — when the request could not be served by its
+    # primary transport at all — the DegradationEvent describing which
+    # ladder rung actually served it (None on the healthy path)
+    attempts: int = 1
+    degradation: Optional[object] = None
 
     @property
     def hit_rate(self) -> float:

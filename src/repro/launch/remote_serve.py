@@ -69,38 +69,57 @@ def serve_channel(agent: Agent, channel: RemoteChannel,
         paged_rx = PagedReceiver(store)
     shared: Optional[SharedKV] = None
     answered = 0
-    while True:
-        try:
-            kind, meta, arrays = read_frame(channel)
-        except ChannelClosedError:
-            break                  # peer hung up between frames: clean end
-        if kind == "shutdown":
-            break
-        if kind == "shared_kv":
-            shared, _ = decode_kv_transfer(meta, arrays)
-        elif kind == "page_query" and paged_rx is not None:
-            channel.write(paged_rx.handle_query(meta, arrays))
-        elif kind == "page_data" and paged_rx is not None:
-            shared, table, _, _ = paged_rx.handle_data(meta, arrays)
-            if pinned is not None:
-                store.release(pinned)
-            pinned = table
-        elif kind == "query":
-            if shared is None:
-                # answering from no prefix would be confidently wrong, not
-                # an error the client could see — refuse loudly instead
+    try:
+        while True:
+            try:
+                kind, meta, arrays = read_frame(channel)
+            except ChannelClosedError:
+                break              # peer hung up between frames: clean end
+            if kind == "shutdown":
+                break
+            if kind == "shared_kv":
+                shared, _ = decode_kv_transfer(meta, arrays)
+            elif kind == "page_query" and paged_rx is not None:
+                channel.write(paged_rx.handle_query(meta, arrays))
+            elif kind == "page_data" and paged_rx is not None:
+                shared, table, _, _ = paged_rx.handle_data(meta, arrays)
+                if pinned is not None:
+                    store.release(pinned)
+                pinned = table
+            elif kind == "health":
+                # liveness + state probe: answers even with no prefix
+                # installed, so clients (and circuit breakers) can tell a
+                # live-but-idle server from a dead one
+                pool = None
+                if store is not None:
+                    import dataclasses
+                    pool = dataclasses.asdict(store.stats())
+                channel.write(encode_frame(
+                    "health_ack",
+                    {"answered": answered,
+                     "prefix_installed": shared is not None,
+                     "pool": pool}, {}))
+            elif kind == "query":
+                if shared is None:
+                    # answering from no prefix would be confidently wrong,
+                    # not an error the client could see — refuse loudly
+                    raise RemoteProtocolError(
+                        "query frame before any shared_kv frame")
+                tokens = np.asarray(arrays["tokens"], np.int32)
+                max_new = int(meta.get("max_new", 1))
+                toks, _ = agent.generate(tokens, shared, max_new=max_new)
+                channel.write(encode_frame(
+                    "tokens", {}, {"tokens": np.asarray(toks, np.int32)}))
+                answered += 1
+            else:
                 raise RemoteProtocolError(
-                    "query frame before any shared_kv frame")
-            tokens = np.asarray(arrays["tokens"], np.int32)
-            max_new = int(meta.get("max_new", 1))
-            toks, _ = agent.generate(tokens, shared, max_new=max_new)
-            channel.write(encode_frame(
-                "tokens", {}, {"tokens": np.asarray(toks, np.int32)}))
-            answered += 1
-        else:
-            raise RemoteProtocolError(f"unexpected frame kind {kind!r}")
-    if pinned is not None:
-        store.release(pinned)
+                    f"unexpected frame kind {kind!r}")
+    finally:
+        # error paths (mid-frame disconnect, corrupt frame, a raising
+        # handler) must release the installed prefix too, or every dead
+        # connection leaks a pinned table into the pool
+        if pinned is not None:
+            store.release(pinned)
     return answered
 
 
@@ -137,7 +156,12 @@ class KVServer:
         The page pool outlives each connection, so a later client's
         ``page_query`` dedups against every earlier client's pages —
         this is what makes the paged server a cross-request cache.
-        Returns the total number of query frames answered."""
+
+        One client dying mid-frame must not take the server (and every
+        later client) down with it: protocol errors are logged and the
+        listener moves on to the next connection.  ``serve_once`` keeps
+        the strict single-connection semantics.  Returns the total number
+        of query frames answered."""
         self._listener.settimeout(timeout_s)
         answered = 0
         try:
@@ -147,6 +171,10 @@ class KVServer:
                     answered += serve_channel(self.agent,
                                               SocketChannel(sock),
                                               store=self.store)
+                except RemoteProtocolError as e:
+                    print(f"[server] connection died: "
+                          f"{type(e).__name__}: {e}",
+                          file=sys.stderr, flush=True)
                 finally:
                     sock.close()
         finally:
@@ -158,24 +186,75 @@ class KVServer:
 # client half (sender side)
 # ---------------------------------------------------------------------------
 class KVClient:
-    """The sender-side handle on a remote receiver."""
+    """The sender-side handle on a remote receiver.
 
-    def __init__(self, channel: RemoteChannel) -> None:
+    With a ``policy`` (``repro.comm.resilience.RetryPolicy``) attached,
+    every operation retries under it; when the client also knows HOW to
+    re-dial (``channel_factory``, set automatically by ``connect``), a
+    retry reconnects first, and operations that need the installed prefix
+    (``generate``) replay the last successful share before retrying — the
+    idempotent resend.  A replayed PAGED share re-runs the dedup handshake
+    against the server's pool, so a same-server reconnect ships ~zero
+    pages: retry bytes stay bounded by what the pool is actually
+    missing."""
+
+    def __init__(self, channel: RemoteChannel, *,
+                 channel_factory=None, policy=None) -> None:
         self.channel = channel
+        self.channel_factory = channel_factory
+        self.policy = policy
         self.sent_bytes = 0
         self._xid = 0
+        self._reshare = None   # replays the last successful share
 
     @classmethod
-    def connect(cls, host: str, port: int,
-                timeout_s: float = 30.0) -> "KVClient":
-        return cls(SocketChannel.connect(host, port, timeout_s=timeout_s))
+    def connect(cls, host: str, port: int, timeout_s: float = 30.0, *,
+                policy=None, io_timeout_s: Optional[float] = None
+                ) -> "KVClient":
+        def factory():
+            return SocketChannel.connect(host, port, timeout_s=timeout_s,
+                                         io_timeout_s=io_timeout_s)
+        return cls(factory(), channel_factory=factory, policy=policy)
 
+    # -- retry plumbing -----------------------------------------------------
+    def _reconnect(self, replay: bool) -> None:
+        try:
+            self.channel.close()
+        except (RemoteProtocolError, OSError):
+            pass
+        self.channel = self.channel_factory()
+        if replay and self._reshare is not None:
+            # a fresh connection (possibly a restarted server) holds no
+            # prefix — reinstall it before replaying the failed op
+            self._reshare()
+
+    def _with_retry(self, fn, describe: str, replay: bool):
+        if self.policy is None:
+            return fn()
+
+        def wrapped(attempt: int):
+            if attempt > 0 and self.channel_factory is not None:
+                self._reconnect(replay)
+            return fn()
+
+        return self.policy.run(wrapped, describe=describe)
+
+    # -- operations ---------------------------------------------------------
     def share(self, sender: Agent, context: np.ndarray,
               kvcfg: KVCommConfig, select, *, wire_dtype: str = "float16",
               packed: bool = True) -> int:
         """Export the sender's KV over ``context`` and ship the selected
         layers; the server installs the decoded view as the current prefix.
         Returns (and accumulates) the payload wire bytes."""
+        def once():
+            return self._share_once(sender, context, kvcfg, select,
+                                    wire_dtype, packed)
+        n = self._with_retry(once, "remote share", replay=False)
+        self._reshare = once
+        return n
+
+    def _share_once(self, sender, context, kvcfg, select, wire_dtype,
+                    packed) -> int:
         kv, states, _ = sender.export_kv(context)
         state_select = None
         if states is not None:
@@ -198,6 +277,15 @@ class KVClient:
         source of residency truth.  Returns ``(payload_bytes, pages_total,
         pages_sent)``; payload bytes (novel pages + int8 scales + states)
         accumulate on ``sent_bytes``."""
+        def once():
+            return self._share_paged_once(sender, context, kvcfg, select,
+                                          page_len, wire_dtype)
+        out = self._with_retry(once, "paged remote share", replay=False)
+        self._reshare = once
+        return out
+
+    def _share_paged_once(self, sender, context, kvcfg, select, page_len,
+                          wire_dtype) -> Tuple[int, int, int]:
         from repro import core
         from repro.core.protocol import gather_selected
         from repro.store.paging import split_payload
@@ -234,19 +322,35 @@ class KVClient:
     def generate(self, query: np.ndarray, max_new: int = 1) -> np.ndarray:
         """Ask the remote receiver to answer ``query`` (B, Sq) against the
         last shared prefix; returns the (B, max_new) generated tokens."""
-        self.channel.write(encode_frame(
-            "query", {"max_new": int(max_new)},
-            {"tokens": np.asarray(query, np.int32)}))
-        kind, _, arrays = read_frame(self.channel)
-        if kind != "tokens":
-            raise RemoteProtocolError(f"expected a tokens frame, "
-                                      f"got {kind!r}")
-        return np.asarray(arrays["tokens"], np.int32)
+        def once():
+            self.channel.write(encode_frame(
+                "query", {"max_new": int(max_new)},
+                {"tokens": np.asarray(query, np.int32)}))
+            kind, _, arrays = read_frame(self.channel)
+            if kind != "tokens":
+                raise RemoteProtocolError(f"expected a tokens frame, "
+                                          f"got {kind!r}")
+            return np.asarray(arrays["tokens"], np.int32)
+        return self._with_retry(once, "remote generate", replay=True)
+
+    def probe(self) -> dict:
+        """Health-check the server: one ``health`` frame round trip.
+        Returns the server's status meta ({"answered", "prefix_installed",
+        "pool"}); raises the usual typed errors when the peer is gone —
+        feed the outcome to a ``CircuitBreaker``."""
+        def once():
+            self.channel.write(encode_frame("health", {}, {}))
+            kind, meta, _ = read_frame(self.channel)
+            if kind != "health_ack":
+                raise RemoteProtocolError(f"expected a health_ack frame, "
+                                          f"got {kind!r}")
+            return meta
+        return self._with_retry(once, "health probe", replay=False)
 
     def close(self) -> None:
         try:
             self.channel.write(encode_frame("shutdown", {}, {}))
-        except RemoteProtocolError:
+        except (RemoteProtocolError, OSError):
             pass
         self.channel.close()
 
@@ -293,7 +397,12 @@ def run_client(args) -> None:
     kvcfg = KVCommConfig(ratio=args.ratio, selector="prior_only")
     from repro import core
     select = core.make_selection(sender.cfg, kvcfg)
-    client = KVClient.connect(args.host, args.port)
+    policy = None
+    if args.retries > 1:
+        from repro.comm.resilience import RetryPolicy
+        policy = RetryPolicy(max_attempts=args.retries)
+    client = KVClient.connect(args.host, args.port, policy=policy,
+                              io_timeout_s=args.io_timeout)
     try:
         if args.paged:
             n, total, sent = client.share_paged(
@@ -339,6 +448,15 @@ def main(argv=None) -> None:
                    help="ship via the dedup-aware paged wire (the server "
                         "must run with --pool-mb > 0)")
     c.add_argument("--page-len", type=int, default=16)
+    c.add_argument("--retries", type=int, default=1,
+                   help=">1 retries failed operations under a RetryPolicy "
+                        "with that many attempts, reconnecting (and "
+                        "replaying the share before a generate) between "
+                        "tries")
+    c.add_argument("--io-timeout", type=float, default=None,
+                   help="per-read/write socket timeout in seconds (raises "
+                        "the typed ChannelTimeoutError instead of hanging "
+                        "on a stalled peer)")
     args = ap.parse_args(argv)
     if args.role == "server":
         run_server(args)

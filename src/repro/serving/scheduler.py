@@ -44,7 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core
-from repro.comm.session import CommSession
+from repro.comm.resilience import DegradationEvent
+from repro.comm.session import CommSession, _LADDER_ERRORS
+from repro.core.channel import TransferRecord
 from repro.core.types import KVCommConfig, SharedKV
 from repro.models import transformer as tfm
 
@@ -68,6 +70,9 @@ class Completion:
     rid: int
     tokens: np.ndarray           # (max_new,) generated token ids
     ttft_s: float = 0.0          # submit -> first token materialized
+    # non-None when the request's KV transfer degraded (fallback transport
+    # or text-only baseline) instead of riding the primary path
+    degradation: Optional[DegradationEvent] = None
     @property
     def pred(self) -> int:
         return int(self.tokens[0])
@@ -187,19 +192,42 @@ class Scheduler:
         return core.build_shared(self.kvcfg, kv, self.select)
 
     # -- admission ----------------------------------------------------------
-    def _admit(self, req: Request, state: dict, slot: int):
+    def _admit(self, req: Request, state: dict, slot: int,
+               force_baseline: bool = False):
         """Enqueue the whole admission pipeline for one request — sender
         prefill, transport transfer (deferred stamp), bucketed receiver
-        prefill, donated slot insert — without any host sync."""
+        prefill, donated slot insert — without any host sync.
+
+        ``force_baseline`` skips the share entirely and admits the request
+        text-only (the quarantine path ``run`` takes when a share raised
+        through the session's ladder — or there is no ladder)."""
         sess, cfgd = self.session, self.config
-        shared, _ = sess.share(req.context[None, :], self.kvcfg,
-                               key=self.calib_key, sync=False)
-        if self.packed:
-            assert shared.layers == self.layers, \
-                "a scheduler serves ONE frozen selection; calibrate per " \
-                "task and run one scheduler per calib_key"
-        sc_real = shared.prefix_len
-        scb = min(_bucket(sc_real, cfgd.prefix_bucket), state["dst_prefix"])
+        degraded: Optional[DegradationEvent] = None
+        if force_baseline:
+            shared = None
+        else:
+            shared, _ = sess.share(req.context[None, :], self.kvcfg,
+                                   key=self.calib_key, sync=False,
+                                   rid=req.rid)
+            degraded = sess.last_degradation
+        if shared is None:
+            # baseline admission: a zero prefix that per-row prefix_lens=0
+            # masks out entirely (and zeroes the pos shift), so the row
+            # answers exactly like prefill(query, None) — through the SAME
+            # compiled prefill/insert the healthy path uses (the bucket
+            # matches what this request's real share would have used)
+            scb = min(_bucket(int(req.context.shape[0]) + 1,
+                              cfgd.prefix_bucket), state["dst_prefix"])
+            shared = self._zero_shared(scb, 1)
+            sc_real = 0
+        else:
+            if self.packed:
+                assert shared.layers == self.layers, \
+                    "a scheduler serves ONE frozen selection; calibrate " \
+                    "per task and run one scheduler per calib_key"
+            sc_real = shared.prefix_len
+            scb = min(_bucket(sc_real, cfgd.prefix_bucket),
+                      state["dst_prefix"])
         sq_real = int(req.query.shape[0])
         sqb = min(_bucket(sq_real, cfgd.query_bucket), state["query_max"])
         qry = np.full((1, sqb), self.pad_token, np.int32)
@@ -212,7 +240,11 @@ class Scheduler:
         if req.max_new > 1:
             store = getattr(sess.transport, "store", None)
             btab = getattr(sess.transport, "last_table", None)
-            if self.packed and store is not None and btab is not None:
+            # a degraded/baseline admission must NOT consume the store's
+            # last_table — it belongs to a previous request's (healthy)
+            # exchange, the wrong prefix for this row
+            if self.packed and store is not None and btab is not None \
+                    and degraded is None and not force_baseline:
                 # paged admission: rebuild the prefix from the store's
                 # content-addressed pages (bit-identical to the padded
                 # prefix the row was prefilled with) and let the donated
@@ -249,6 +281,7 @@ class Scheduler:
         if not requests:
             return [], {"iterations": 0, "occupancy": 0.0, "tokens": 0}
         sess, cfgd = self.session, self.config
+        n_deg0 = len(sess.degradations)   # events from THIS run only
         cap = cfgd.capacity
         budget = max(r.max_new for r in requests) - 1
         dst_prefix = _bucket(max(int(r.context.shape[0]) + 1
@@ -299,7 +332,26 @@ class Scheduler:
                     break
                 if slots[i] is None:
                     req = pending.popleft()
-                    tok1 = self._admit(req, state, i)
+                    try:
+                        tok1 = self._admit(req, state, i)
+                    except _LADDER_ERRORS as e:
+                        # quarantine, don't crash: the failing SENDER's
+                        # admission is downgraded to text-only and the slot
+                        # reused; in-flight rows never notice.  (With a
+                        # session ladder the share degrades internally and
+                        # this path only fires for ladder-less sessions or
+                        # a ladder whose every rung failed.)
+                        ev = DegradationEvent(
+                            stage="baseline",
+                            reason=f"{type(e).__name__}: {e}",
+                            attempts=getattr(e, "attempts", 1), rid=req.rid)
+                        sess.transport.log.append(TransferRecord(
+                            kind="kv", n_bytes=0, layers=0, context_len=0,
+                            wire_dtype="none", attempts=ev.attempts,
+                            degradation=ev))
+                        sess.degradations.append(ev)
+                        tok1 = self._admit(req, state, i,
+                                           force_baseline=True)
                     first_tok[req.rid] = tok1
                     fetch_q.append((it, tok1, req.rid))
                     if req.max_new > 1:
@@ -358,6 +410,10 @@ class Scheduler:
             ttft.setdefault(rid, now)
         sess.transport.flush_latency()
 
+        # per-request degradation events from this run (last per rid wins)
+        dmap: Dict[int, DegradationEvent] = {
+            ev.rid: ev for ev in sess.degradations[n_deg0:]
+            if ev.rid is not None}
         completions = []
         for rid in sorted(done):
             s = done[rid]
@@ -376,7 +432,7 @@ class Scheduler:
                 toks = toks[:toks.index(eos) + 1]
             completions.append(Completion(
                 rid=rid, tokens=np.asarray(toks, np.int32),
-                ttft_s=ttft.get(rid, now)))
+                ttft_s=ttft.get(rid, now), degradation=dmap.get(rid)))
         return completions, {
             "iterations": it,
             "occupancy": float(np.mean(occ)) if occ else 0.0,
@@ -403,7 +459,8 @@ def serve_serial(session: CommSession, requests: Sequence[Request],
     t0 = time.perf_counter()
     for req in sorted(requests, key=lambda r: r.rid):
         shared, _ = session.share(req.context[None, :], kvcfg,
-                                  key=calib_key, sync=True)
+                                  key=calib_key, sync=True, rid=req.rid)
+        degraded = session.last_degradation
         toks, ttft = [], 0.0
         for step_tok in session.stream(req.query[None, :], shared,
                                        max_new=req.max_new):
@@ -413,7 +470,8 @@ def serve_serial(session: CommSession, requests: Sequence[Request],
             if eos_token is not None and toks[-1] == eos_token:
                 break
         completions.append(Completion(
-            rid=req.rid, tokens=np.asarray(toks, np.int32), ttft_s=ttft))
+            rid=req.rid, tokens=np.asarray(toks, np.int32), ttft_s=ttft,
+            degradation=degraded))
     return completions, {
         "iterations": sum(len(c.tokens) for c in completions),
         # one request at a time: the single implicit slot is always busy

@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.types import SharedKV
 from repro.store.paging import (BlockTable, Page, rebuild_payload,
                                 rebuild_shared, split_payload)
-from repro.store.pool import PagePool
+from repro.store.pool import PagePool, PagePoolError
 
 
 @dataclass
@@ -91,19 +91,32 @@ class PageStore:
         dedups against included.  Returns the inserted byte count.
         Raises ``PagePoolError`` if the table references a page neither
         resident nor shipped (the sender lied, or an eviction raced the
-        exchange)."""
+        exchange) — after ROLLING BACK every pin this call took, so a
+        failed exchange leaves no refcount residue behind."""
         inserted = 0
         shipped = set()
-        for page in pages:
-            if self.pool.put(page, priority=priority, pin=True):
-                inserted += page.nbytes
-            shipped.add(page.page_id)
-        # pin the dedup'd remainder (shipped pages were pinned on insert).
-        # Table IDs are distinct by construction — the hash covers the
-        # (layer, span) pair, unique per slot/page — so per-ID pinning is
-        # per-reference pinning.
-        self.pool.pin(pid for pid in table.all_ids()
-                      if pid not in shipped)
+        pinned: List[str] = []
+        try:
+            for page in pages:
+                if self.pool.put(page, priority=priority, pin=True):
+                    inserted += page.nbytes
+                pinned.append(page.page_id)
+                shipped.add(page.page_id)
+            # pin the dedup'd remainder (shipped pages were pinned on
+            # insert).  Table IDs are distinct by construction — the hash
+            # covers the (layer, span) pair, unique per slot/page — so
+            # per-ID pinning is per-reference pinning.  pool.pin is
+            # all-or-nothing (absence check precedes any pin), so a raise
+            # there pinned nothing.
+            self.pool.pin(pid for pid in table.all_ids()
+                          if pid not in shipped)
+        except PagePoolError:
+            for pid in pinned:
+                try:
+                    self.pool.unpin([pid])
+                except PagePoolError:
+                    pass           # page evicted after our pin was dropped
+            raise
         return inserted
 
     def materialize(self, table: BlockTable, *, states=None,

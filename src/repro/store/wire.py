@@ -216,6 +216,17 @@ class PagedReceiver:
         self._pending[xid] = table
         return encode_page_need(xid, need)
 
+    def abort(self, xid: Optional[int] = None) -> None:
+        """Forget pending exchange state (a handshake that died between
+        ``page_query`` and ``page_data``).  Nothing is pinned at query
+        time, so this only drops the expected tables — retrying transports
+        call it between attempts so a stale xid can never match a fresh
+        exchange's data frame."""
+        if xid is None:
+            self._pending.clear()
+        else:
+            self._pending.pop(xid, None)
+
     def _verify(self, table: BlockTable, pages: Sequence[Page]) -> None:
         layer_to_slot = {lyr: m for m, lyr in enumerate(table.layers)}
         want_shape = (table.batch, table.page_len, table.kv_heads,
@@ -259,6 +270,12 @@ class PagedReceiver:
                 "(no matching page_query)")
         self._verify(table, pages)
         novel_bytes = self.store.insert_pages(table, pages)
-        shared = self.store.materialize(table, states=states,
-                                        state_select=state_select)
+        # the table is pinned from here on: a materialize failure must
+        # release it or a failed exchange leaks refcounts into the pool
+        try:
+            shared = self.store.materialize(table, states=states,
+                                            state_select=state_select)
+        except BaseException:
+            self.store.release(table)
+            raise
         return shared, table, novel_bytes, state_bytes

@@ -454,3 +454,120 @@ class TestPagedServerLoop:
         np.testing.assert_array_equal(toks2, np.asarray(ref))
         # nothing leaked a pin past the connection teardown
         assert store.stats().pinned_bytes == 0
+
+
+class TestRecoveryUnderPolicy:
+    """From "raises typed error" to "recovers under policy": connection
+    loss mid-session heals via reconnect + idempotent replay, and a
+    tolerant server outlives a poisoned client."""
+
+    def _pair(self, tiny_cfg, tiny_params, tok):
+        return (Agent("s", tiny_cfg, tiny_params, tok),
+                Agent("r", tiny_cfg, tiny_params, tok))
+
+    def test_connection_loss_reconnects_and_replays_dedup_bounded(
+            self, tiny_cfg, tiny_params, tok):
+        """The client's socket dies after a paged share; the next
+        ``generate`` reconnects (the server's listener persists across
+        connections), replays the share against the SAME pool — shipping
+        zero pages — and answers bit-identically."""
+        import threading
+        from repro.comm.resilience import RetryPolicy
+        from repro.launch.remote_serve import KVClient, KVServer
+        from repro.store import PageStore
+        agent_s, agent_r = self._pair(tiny_cfg, tiny_params, tok)
+        select = core.make_selection(tiny_cfg, KVCFG)
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 7),
+                                            4, tiny_cfg.vocab_size))
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 4),
+                                            4, tiny_cfg.vocab_size))
+        store = PageStore(page_len=4)
+        server = KVServer(agent_r, store=store)
+        served = {}
+        th = threading.Thread(target=lambda: served.update(
+            n=server.serve(conns=2, timeout_s=30.0)))
+        th.start()
+        client = KVClient.connect(
+            server.host, server.port, timeout_s=10.0,
+            policy=RetryPolicy(max_attempts=3, backoff_s=0.01, jitter=0.0))
+        try:
+            n1, total1, sent1 = client.share_paged(
+                agent_s, ctx, KVCFG, select, page_len=4,
+                wire_dtype="float32")
+            toks1 = client.generate(qry, max_new=2)
+            bytes_before = client.sent_bytes
+            client.channel.close()       # the connection dies under us
+            toks2 = client.generate(qry, max_new=2)
+        finally:
+            client.close()
+            th.join()
+        np.testing.assert_array_equal(toks1, toks2)
+        assert sent1 == total1 > 0
+        # the replayed share dedup'd against the surviving pool: the
+        # recovery moved ZERO payload bytes
+        assert client.sent_bytes == bytes_before
+        assert served["n"] == 2
+        assert store.stats().pinned_bytes == 0
+
+    def test_tolerant_serve_outlives_poisoned_connection(
+            self, tiny_cfg, tiny_params, tok):
+        """Connection 1 dies mid-frame (a truncated header); ``serve``
+        logs it and keeps listening — connection 2 gets full service."""
+        import threading
+        from repro.launch.remote_serve import KVClient, KVServer
+        agent_s, agent_r = self._pair(tiny_cfg, tiny_params, tok)
+        select = core.make_selection(tiny_cfg, KVCFG)
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 6),
+                                            4, tiny_cfg.vocab_size))
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 3),
+                                            4, tiny_cfg.vocab_size))
+        server = KVServer(agent_r)
+        served = {}
+        th = threading.Thread(target=lambda: served.update(
+            n=server.serve(conns=2, timeout_s=30.0)))
+        th.start()
+        poison = socket.create_connection((server.host, server.port))
+        poison.sendall(b"KVCM" + b"\x00" * 7)   # half a header, then death
+        poison.close()
+        client = KVClient.connect(server.host, server.port, timeout_s=10.0)
+        try:
+            client.share(agent_s, ctx, KVCFG, select, wire_dtype="float32")
+            toks = client.generate(qry, max_new=2)
+        finally:
+            client.close()
+            th.join()
+        assert served["n"] == 1
+        kv, _, _ = Agent("s", tiny_cfg, tiny_params, tok).export_kv(ctx)
+        ref, _ = agent_r.generate(qry, core.pack_shared(KVCFG, kv, select),
+                                  max_new=2)
+        np.testing.assert_array_equal(toks, np.asarray(ref))
+
+    def test_health_probe_round_trip(self, tiny_cfg, tiny_params, tok):
+        """``KVClient.probe`` <-> the server's ``health`` frame: liveness
+        plus pool stats, answered even before any prefix is installed."""
+        import threading
+        from repro.launch.remote_serve import KVClient, serve_channel
+        from repro.store import PageStore
+        agent_s, agent_r = self._pair(tiny_cfg, tiny_params, tok)
+        select = core.make_selection(tiny_cfg, KVCFG)
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 6),
+                                            4, tiny_cfg.vocab_size))
+        store = PageStore(page_len=4)
+        a, b = socket.socketpair()
+        th = threading.Thread(target=lambda: serve_channel(
+            agent_r, SocketChannel(b), store=store))
+        th.start()
+        client = KVClient(SocketChannel(a))
+        try:
+            meta0 = client.probe()
+            assert meta0["prefix_installed"] is False
+            assert meta0["pool"]["pages"] == 0
+            client.share_paged(agent_s, ctx, KVCFG, select, page_len=4,
+                               wire_dtype="float32")
+            meta1 = client.probe()
+            assert meta1["prefix_installed"] is True
+            assert meta1["pool"]["pages"] > 0
+            assert meta1["answered"] == 0      # probes aren't queries
+        finally:
+            client.close()
+            th.join()

@@ -1,0 +1,601 @@
+"""Fault-tolerant KV shipping: retry/recovery policies, sender quarantine,
+graceful degradation, and the deterministic chaos harness.
+
+The invariant chain under test:
+
+  1. **Recovery**: a transient channel fault (drop / truncate / corrupt /
+     disconnect at an exact frame boundary) plus a ``RetryPolicy`` yields
+     tokens BIT-IDENTICAL to the no-fault run — and on the paged wire the
+     retry ships only the pages the receiver's pool genuinely never got.
+  2. **Accounting**: no failure path leaks a pin into the page pool, and
+     every downgrade is recorded (``TransferRecord.attempts``,
+     ``DegradationEvent``) instead of silently absorbed.
+  3. **Degradation**: when retries are exhausted the session ladder serves
+     the request anyway (serialized-local, then text-only baseline) and
+     the scheduler quarantines the failing sender instead of crashing.
+
+Everything is seeded/scripted — a chaos run replays bit-for-bit.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import Agent, CommSession, SerializedTransport
+from repro.comm.remote import (ChannelClosedError, ChannelTimeoutError,
+                               FileChannel, FrameCorruptError,
+                               HeaderCorruptError, LoopbackChannel,
+                               PayloadMismatchError, RemoteProtocolError,
+                               RemoteTransport, SocketChannel, read_frame)
+from repro.comm.resilience import (CircuitBreaker, CircuitOpenError,
+                                   DegradationEvent, Fault, FaultSchedule,
+                                   FaultyChannel, Resilience,
+                                   RetriesExhaustedError, RetryPolicy)
+from repro.core.types import KVCommConfig
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+# a policy that never sleeps (backoff 0, no jitter) — recovery tests only
+# care about the attempt/reset sequencing, not the pacing
+FAST = RetryPolicy(max_attempts=3, backoff_s=0.0, jitter=0.0)
+
+
+def _ctx_qry(cfg, seed=1, B=2, Sc=7, Sq=4):
+    ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(seed),
+                                        (B, Sc), 4, cfg.vocab_size))
+    qry = np.asarray(jax.random.randint(jax.random.PRNGKey(seed + 100),
+                                        (B, Sq), 4, cfg.vocab_size))
+    return ctx, qry
+
+
+def _session(tiny_cfg, tiny_params, tok, transport, resilience=None):
+    return CommSession(Agent("s", tiny_cfg, tiny_params, tok),
+                       Agent("r", tiny_cfg, tiny_params, tok),
+                       transport, resilience=resilience)
+
+
+class _DeadChannel(LoopbackChannel):
+    """Every write fails: the peer is gone and stays gone."""
+
+    def __init__(self):
+        super().__init__()
+        self.write_attempts = 0
+
+    def write(self, data):
+        self.write_attempts += 1
+        raise ChannelClosedError("peer is gone")
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+class TestRetryPolicy:
+    def test_succeeds_after_transient_failures(self):
+        calls, retries = [], []
+
+        def fn(attempt):
+            calls.append(attempt)
+            if attempt < 2:
+                raise ChannelClosedError("transient")
+            return "ok"
+
+        out = RetryPolicy(max_attempts=3, backoff_s=0.0).run(
+            fn, on_retry=lambda a, e: retries.append(a),
+            sleep=lambda s: None)
+        assert out == "ok" and calls == [0, 1, 2] and retries == [0, 1]
+
+    def test_exhaustion_raises_typed_with_cause(self):
+        def fn(attempt):
+            raise FrameCorruptError("bit flip")
+
+        with pytest.raises(RetriesExhaustedError) as ei:
+            RetryPolicy(max_attempts=2, backoff_s=0.0).run(
+                fn, describe="test op", sleep=lambda s: None)
+        assert ei.value.attempts == 2
+        assert isinstance(ei.value.last, FrameCorruptError)
+        assert isinstance(ei.value.__cause__, FrameCorruptError)
+        # it's still a RemoteProtocolError: ladders catch it uniformly
+        assert isinstance(ei.value, RemoteProtocolError)
+
+    def test_non_retriable_passes_through_untouched(self):
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            raise PayloadMismatchError("the peer will always say this")
+
+        with pytest.raises(PayloadMismatchError):
+            RetryPolicy(max_attempts=5, backoff_s=0.0).run(
+                fn, sleep=lambda s: None)
+        assert calls == [0]            # permanent errors burn ONE attempt
+
+    def test_backoff_deterministic_per_seed(self):
+        import random
+        p = RetryPolicy(backoff_s=0.1, jitter=0.5, seed=7)
+        a = [p.backoff(i, random.Random(7)) for i in range(4)]
+        b = [p.backoff(i, random.Random(7)) for i in range(4)]
+        assert a == b
+        # exponential growth capped at max_backoff_s, jitter bounded
+        q = RetryPolicy(backoff_s=0.1, backoff_mult=2.0, max_backoff_s=0.3,
+                        jitter=0.0)
+        assert [q.backoff(i, random.Random(0)) for i in range(3)] \
+            == [pytest.approx(0.1), pytest.approx(0.2), pytest.approx(0.3)]
+
+    def test_sleeps_between_attempts(self):
+        slept = []
+
+        def fn(attempt):
+            if attempt == 0:
+                raise ChannelClosedError("x")
+            return attempt
+
+        RetryPolicy(max_attempts=2, backoff_s=0.05, jitter=0.0).run(
+            fn, sleep=slept.append)
+        assert slept == [pytest.approx(0.05)]
+
+    def test_deadline_cuts_retries_short(self):
+        now = [0.0]
+
+        def fn(attempt):
+            now[0] += 1.0              # each attempt burns fake wall clock
+            raise ChannelClosedError("slow failure")
+
+        with pytest.raises(RetriesExhaustedError) as ei:
+            RetryPolicy(max_attempts=10, backoff_s=0.0,
+                        deadline_s=2.5).run(
+                fn, sleep=lambda s: None, clock=lambda: now[0])
+        # 3 attempts land (0.0, 1.0, 2.0 starts); the 3rd failure is past
+        # the 2.5 deadline so it raises instead of sleeping toward a 4th
+        assert ei.value.attempts == 3
+
+    def test_invalid_max_attempts_rejected(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker
+# ---------------------------------------------------------------------------
+class TestCircuitBreaker:
+    def test_opens_after_threshold_consecutive_failures(self):
+        now = [0.0]
+        b = CircuitBreaker(failure_threshold=3, reset_timeout_s=10.0,
+                           clock=lambda: now[0])
+        for _ in range(2):
+            b.record_failure()
+        assert b.state == "closed" and b.allow()
+        b.record_failure()
+        assert b.state == "open" and not b.allow()
+
+    def test_success_resets_the_consecutive_count(self):
+        b = CircuitBreaker(failure_threshold=2)
+        b.record_failure()
+        b.record_success()
+        b.record_failure()
+        assert b.state == "closed"     # never 2 consecutive
+
+    def test_half_open_admits_one_probe_then_closes(self):
+        now = [0.0]
+        b = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                           clock=lambda: now[0])
+        b.record_failure()
+        assert not b.allow()
+        now[0] = 6.0
+        assert b.allow() and b.state == "half-open"
+        assert not b.allow()           # second caller blocked mid-probe
+        b.record_success()
+        assert b.state == "closed" and b.allow()
+
+    def test_half_open_failure_reopens_and_restarts_timer(self):
+        now = [0.0]
+        b = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                           clock=lambda: now[0])
+        b.record_failure()
+        now[0] = 6.0
+        assert b.allow()
+        b.record_failure()
+        assert b.state == "open" and not b.allow()
+        now[0] = 10.0                  # 4s after reopen: still quarantined
+        assert not b.allow()
+        now[0] = 12.0
+        assert b.allow()
+
+
+# ---------------------------------------------------------------------------
+# the chaos harness itself
+# ---------------------------------------------------------------------------
+class TestFaultSchedule:
+    def test_same_seed_same_schedule(self):
+        a = FaultSchedule.random(seed=42, n_ops=32, rate=0.4)
+        b = FaultSchedule.random(seed=42, n_ops=32, rate=0.4)
+        assert a._by_op == b._by_op and len(a) > 0
+
+    def test_different_seeds_differ(self):
+        a = FaultSchedule.random(seed=1, n_ops=64, rate=0.5)
+        b = FaultSchedule.random(seed=2, n_ops=64, rate=0.5)
+        assert a._by_op != b._by_op
+
+    def test_duplicate_op_rejected(self):
+        with pytest.raises(ValueError):
+            FaultSchedule([Fault(3, "drop"), Fault(3, "corrupt")])
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            Fault(0, "gremlins")
+
+    def test_pop_moves_to_fired(self):
+        fs = FaultSchedule([Fault(1, "drop")])
+        assert fs.pop(0) is None and len(fs) == 1
+        f = fs.pop(1)
+        assert f is not None and fs.fired == [f] and len(fs) == 0
+
+
+class TestFaultyChannel:
+    def _frame(self):
+        from repro.comm.remote import encode_frame
+        return encode_frame("blob", {"n": 1},
+                            {"x": np.arange(64, dtype=np.float32)})
+
+    def test_disconnect_raises_and_breaks(self):
+        ch = FaultyChannel(LoopbackChannel(),
+                           FaultSchedule([Fault(0, "disconnect")]))
+        with pytest.raises(ChannelClosedError):
+            ch.write(self._frame())
+        with pytest.raises(ChannelClosedError):
+            ch.write(self._frame())    # stays down until reset
+        assert ch.writes == 2 and ch.bytes_written == 0
+
+    def test_drop_vanishes_frame_reader_sees_closed(self):
+        ch = FaultyChannel(LoopbackChannel(),
+                           FaultSchedule([Fault(0, "drop")]))
+        ch.write(self._frame())        # silently dropped
+        with pytest.raises(ChannelClosedError):
+            read_frame(ch)
+
+    def test_truncate_is_the_mid_frame_kill(self):
+        frame = self._frame()
+        ch = FaultyChannel(LoopbackChannel(),
+                           FaultSchedule([Fault(0, "truncate", frac=0.5)]))
+        ch.write(frame)
+        assert 0 < ch.bytes_written < len(frame)
+        # broken channel reads as a dead stream from the next boundary
+        with pytest.raises(ChannelClosedError):
+            read_frame(ch)
+
+    def test_corrupt_fails_the_checksum(self):
+        ch = FaultyChannel(LoopbackChannel(),
+                           FaultSchedule([Fault(0, "corrupt", frac=0.5)]))
+        ch.write(self._frame())
+        with pytest.raises((FrameCorruptError, HeaderCorruptError)):
+            read_frame(ch)
+
+    def test_reset_heals_and_drains_residue(self):
+        frame = self._frame()
+        ch = FaultyChannel(LoopbackChannel(),
+                           FaultSchedule([Fault(0, "truncate", frac=0.3)]))
+        ch.write(frame)                # partial bytes stuck in the inner
+        ch.reset()
+        assert ch.resets == 1 and len(ch.inner) == 0
+        ch.write(frame)                # clean after the "reconnect"
+        kind, meta, _ = read_frame(ch)
+        assert kind == "blob" and meta["n"] == 1
+
+    def test_clean_channel_is_transparent(self):
+        frame = self._frame()
+        ch = FaultyChannel(LoopbackChannel())
+        ch.write(frame)
+        assert read_frame(ch)[0] == "blob"
+        assert ch.writes == 1 and ch.bytes_written == len(frame)
+
+
+# ---------------------------------------------------------------------------
+# recovery: unpaged exchange, every fault kind
+# ---------------------------------------------------------------------------
+class TestUnpagedRecovery:
+    @pytest.mark.parametrize("kind", ["drop", "truncate", "corrupt",
+                                      "disconnect"])
+    def test_recovers_bit_identical(self, tiny_cfg, tiny_params, tok, kind):
+        """A fault at the exchange's frame boundary + a RetryPolicy =
+        the exact tokens of the no-fault run, with attempts recorded."""
+        ctx, qry = _ctx_qry(tiny_cfg)
+
+        clean = _session(tiny_cfg, tiny_params, tok,
+                         RemoteTransport("float32"))
+        shared, _ = clean.share(ctx, KVCFG)
+        ref = clean.generate(qry, shared, max_new=3)
+
+        faulty = FaultyChannel(LoopbackChannel(),
+                               FaultSchedule([Fault(0, kind, frac=0.5)]))
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=faulty,
+                                        policy=FAST))
+        shared2, _ = sess.share(ctx, KVCFG)
+        got = sess.generate(qry, shared2, max_new=3)
+        np.testing.assert_array_equal(got, ref)
+        rec = sess.transport.log[-1]
+        assert rec.attempts == 2 and rec.degradation is None
+        assert len(faulty.schedule) == 0      # the fault actually fired
+        assert sess.last_degradation is None
+
+    def test_without_policy_the_typed_error_propagates(self, tiny_cfg,
+                                                       tiny_params, tok):
+        faulty = FaultyChannel(LoopbackChannel(),
+                               FaultSchedule([Fault(0, "disconnect")]))
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=faulty))
+        with pytest.raises(ChannelClosedError):
+            sess.share(_ctx_qry(tiny_cfg)[0], KVCFG)
+
+    def test_exhausted_policy_raises_retries_exhausted(self, tiny_cfg,
+                                                       tiny_params, tok):
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=_DeadChannel(),
+                                        policy=FAST))
+        with pytest.raises(RetriesExhaustedError) as ei:
+            sess.share(_ctx_qry(tiny_cfg)[0], KVCFG)
+        assert ei.value.attempts == FAST.max_attempts
+
+
+# ---------------------------------------------------------------------------
+# recovery: the paged three-frame handshake
+# ---------------------------------------------------------------------------
+class TestPagedRecovery:
+    def _paged_session(self, tiny_cfg, tiny_params, tok, schedule,
+                       policy=FAST, capacity=1 << 30):
+        from repro.store import PageStore
+        faulty = FaultyChannel(LoopbackChannel(), schedule)
+        store = PageStore(page_len=4, capacity_bytes=capacity)
+        tr = RemoteTransport("float32", channel=faulty, policy=policy,
+                             store=store)
+        return _session(tiny_cfg, tiny_params, tok, tr), faulty, store
+
+    @pytest.mark.parametrize("op", [0, 1, 2],
+                             ids=["page_query", "page_need", "page_data"])
+    def test_cold_share_recovers_at_every_frame(self, tiny_cfg, tiny_params,
+                                                tok, op):
+        """Kill each of the handshake's three frames in turn: the retried
+        exchange still lands the exact reference tokens and leaks no
+        pins."""
+        ctx, qry = _ctx_qry(tiny_cfg)
+        clean = _session(tiny_cfg, tiny_params, tok,
+                         RemoteTransport("float32"))
+        shared, _ = clean.share(ctx, KVCFG)
+        ref = clean.generate(qry, shared, max_new=3)
+
+        sess, faulty, store = self._paged_session(
+            tiny_cfg, tiny_params, tok,
+            FaultSchedule([Fault(op, "truncate", frac=0.5)]))
+        shared2, _ = sess.share(ctx, KVCFG)
+        got = sess.generate(qry, shared2, max_new=3)
+        np.testing.assert_array_equal(got, ref)
+        assert sess.transport.log[-1].attempts == 2
+        sess.transport.release_table()
+        assert store.stats().pinned_bytes == 0
+
+    @pytest.mark.parametrize("op", [3, 4, 5],
+                             ids=["page_query", "page_need", "page_data"])
+    def test_repeat_share_retry_ships_zero_pages(self, tiny_cfg,
+                                                 tiny_params, tok, op):
+        """The dedup-bounded resend: fault the SECOND share of the same
+        context (ops 3-5 — the first exchange consumed 0-2).  The retry
+        re-answers ``page_need`` from the pool, so zero pages cross."""
+        ctx, qry = _ctx_qry(tiny_cfg)
+        sess, faulty, store = self._paged_session(
+            tiny_cfg, tiny_params, tok,
+            FaultSchedule([Fault(op, "disconnect")]))
+        shared1, _ = sess.share(ctx, KVCFG)
+        ref = sess.generate(qry, shared1, max_new=3)
+        shared2, _ = sess.share(ctx, KVCFG)
+        got = sess.generate(qry, shared2, max_new=3)
+        np.testing.assert_array_equal(got, ref)
+        rec = sess.transport.log[-1]
+        assert rec.attempts == 2
+        assert rec.pages_sent == 0 and rec.pages_hit == rec.pages_total
+        assert rec.n_bytes == 0        # retry bytes == novel-page bytes
+        assert len(faulty.schedule) == 0
+        sess.transport.release_table()
+        assert store.stats().pinned_bytes == 0
+
+    def test_handshake_death_leaks_no_pins(self, tiny_cfg, tiny_params,
+                                           tok):
+        """No policy: the exchange dies between ``page_need`` and
+        ``page_data``; the pool must end with ZERO pinned pages (the
+        regression the rollback in ``insert_pages``/``handle_data``
+        guards)."""
+        ctx, _ = _ctx_qry(tiny_cfg)
+        sess, faulty, store = self._paged_session(
+            tiny_cfg, tiny_params, tok,
+            FaultSchedule([Fault(2, "truncate", frac=0.4)]), policy=None)
+        with pytest.raises(RemoteProtocolError):
+            sess.share(ctx, KVCFG)
+        assert store.stats().pinned_bytes == 0
+        # and the channel heals: a later share over the same transport
+        # (manual reset — no policy to do it for us) works end to end
+        faulty.reset()
+        shared, _ = sess.share(ctx, KVCFG)
+        assert shared is not None
+        sess.transport.release_table()
+        assert store.stats().pinned_bytes == 0
+
+    def test_pool_overflow_mid_insert_rolls_back_pins(self, tiny_cfg,
+                                                      tiny_params, tok):
+        """A ``page_data`` whose insertion overflows the pool while the
+        previous transfer's table is still pinned: the typed pool error
+        propagates AND every pin the failed insert took is rolled back."""
+        from repro.store.pool import PagePoolError
+        ctx1, _ = _ctx_qry(tiny_cfg, seed=1)
+        ctx2, _ = _ctx_qry(tiny_cfg, seed=2)
+        # capacity sized to ONE share's pages: the second (different)
+        # context cannot fit while the first table is pinned
+        sess, faulty, store = self._paged_session(
+            tiny_cfg, tiny_params, tok, FaultSchedule(), policy=None,
+            capacity=1 << 30)
+        sess.share(ctx1, KVCFG)
+        used = store.stats().used_bytes
+        sess2, _, store2 = self._paged_session(
+            tiny_cfg, tiny_params, tok, FaultSchedule(), policy=None,
+            capacity=used)
+        sess2.share(ctx1, KVCFG)
+        pinned_before = store2.stats().pinned_bytes
+        assert pinned_before == used   # first table fills + pins the pool
+        with pytest.raises(PagePoolError):
+            sess2.share(ctx2, KVCFG)
+        assert store2.stats().pinned_bytes == pinned_before
+        sess2.transport.release_table()
+        assert store2.stats().pinned_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder
+# ---------------------------------------------------------------------------
+class TestDegradationLadder:
+    def test_serialized_rung_serves_the_exact_fallback_tokens(
+            self, tiny_cfg, tiny_params, tok):
+        ctx, qry = _ctx_qry(tiny_cfg)
+        ref_sess = _session(tiny_cfg, tiny_params, tok,
+                            SerializedTransport("float32"))
+        ref_shared, _ = ref_sess.share(ctx, KVCFG)
+        ref = ref_sess.generate(qry, ref_shared, max_new=3)
+
+        res = Resilience(fallbacks=[
+            ("serialized", SerializedTransport("float32")),
+            ("baseline", None)])
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=_DeadChannel(),
+                                        policy=RetryPolicy(max_attempts=2,
+                                                           backoff_s=0.0,
+                                                           jitter=0.0)),
+                        resilience=res)
+        shared, _ = sess.share(ctx, KVCFG, rid=7)
+        assert shared is not None
+        np.testing.assert_array_equal(
+            sess.generate(qry, shared, max_new=3), ref)
+        ev = sess.last_degradation
+        assert ev is not None and ev.stage == "serialized"
+        assert ev.rid == 7 and ev.attempts == 2
+        assert "RetriesExhaustedError" in ev.reason
+        # byte accounting consolidated on the PRIMARY transport's log
+        rec = sess.transport.log[-1]
+        assert rec.degradation is ev and rec.n_bytes > 0
+        assert res.fallbacks[0][1].log == []   # record was moved, not copied
+        assert sess.degradations == [ev]
+
+    def test_baseline_rung_is_text_only_zero_bytes(self, tiny_cfg,
+                                                   tiny_params, tok):
+        ctx, qry = _ctx_qry(tiny_cfg)
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=_DeadChannel()),
+                        resilience=Resilience())   # baseline only
+        shared, _ = sess.share(ctx, KVCFG, rid=3)
+        assert shared is None
+        rec = sess.transport.log[-1]
+        assert rec.n_bytes == 0 and rec.wire_dtype == "none"
+        assert rec.degradation.stage == "baseline"
+        assert sess.last_degradation.rid == 3
+        # the degraded request still answers (text-only)
+        toks = sess.generate(qry, None, max_new=2)
+        assert toks.shape == (ctx.shape[0], 2)
+
+    def test_healthy_share_clears_last_degradation(self, tiny_cfg,
+                                                   tiny_params, tok):
+        ctx, _ = _ctx_qry(tiny_cfg)
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32"),
+                        resilience=Resilience())
+        sess.degradations.append(DegradationEvent(stage="baseline"))
+        sess.last_degradation = sess.degradations[-1]
+        shared, _ = sess.share(ctx, KVCFG)
+        assert shared is not None and sess.last_degradation is None
+
+    def test_breaker_quarantines_the_sender(self, tiny_cfg, tiny_params,
+                                            tok):
+        """After the breaker opens, the next share never touches the
+        channel: the doomed attempt is skipped and the ladder serves
+        immediately."""
+        ctx, _ = _ctx_qry(tiny_cfg)
+        now = [0.0]
+        breaker = CircuitBreaker(failure_threshold=1, reset_timeout_s=60.0,
+                                 clock=lambda: now[0])
+        dead = _DeadChannel()
+        sess = _session(tiny_cfg, tiny_params, tok,
+                        RemoteTransport("float32", channel=dead),
+                        resilience=Resilience(breaker=breaker))
+        sess.share(ctx, KVCFG)                       # fails, opens breaker
+        attempts_after_first = dead.write_attempts
+        assert attempts_after_first >= 1 and breaker.state == "open"
+        shared, _ = sess.share(ctx, KVCFG)           # quarantined
+        assert shared is None
+        assert dead.write_attempts == attempts_after_first
+        assert "circuit" in sess.last_degradation.reason
+        # after the reset window, one probe goes through again
+        now[0] = 120.0
+        sess.share(ctx, KVCFG)
+        assert dead.write_attempts == attempts_after_first + 1
+
+    def test_transport_level_breaker_short_circuits(self, tiny_cfg,
+                                                    tiny_params, tok):
+        """A breaker attached to the RemoteTransport itself raises
+        CircuitOpenError without touching the wire while open."""
+        now = [0.0]
+        breaker = CircuitBreaker(failure_threshold=1, reset_timeout_s=60.0,
+                                 clock=lambda: now[0])
+        dead = _DeadChannel()
+        tr = RemoteTransport("float32", channel=dead, breaker=breaker)
+        sess = _session(tiny_cfg, tiny_params, tok, tr)
+        ctx, _ = _ctx_qry(tiny_cfg)
+        with pytest.raises(ChannelClosedError):
+            sess.share(ctx, KVCFG)
+        with pytest.raises(CircuitOpenError):
+            sess.share(ctx, KVCFG)
+        assert dead.write_attempts == 1
+
+
+# ---------------------------------------------------------------------------
+# channel timeout semantics
+# ---------------------------------------------------------------------------
+class TestChannelTimeouts:
+    def test_file_channel_stall_is_typed_timeout(self, tmp_path):
+        """A live-but-stalled writer surfaces as ChannelTimeoutError —
+        distinguishable from the clean-close ChannelClosedError, while
+        still a subclass of it (existing handlers keep working)."""
+        from repro.comm.remote import encode_frame
+        tx = FileChannel(str(tmp_path), timeout_s=0.3)
+        rx = FileChannel(str(tmp_path), timeout_s=0.3)
+        tx.write(encode_frame("a", {}, {}))
+        assert read_frame(rx)[0] == "a"
+        with pytest.raises(ChannelTimeoutError):
+            read_frame(rx)             # writer alive but silent
+        assert issubclass(ChannelTimeoutError, ChannelClosedError)
+
+    def test_file_channel_writer_close_is_clean_close(self, tmp_path):
+        """An explicitly closed writer is a CLEAN close, detected fast —
+        not a timeout burned waiting for a peer that already said
+        goodbye."""
+        from repro.comm.remote import encode_frame
+        tx = FileChannel(str(tmp_path), timeout_s=10.0)
+        rx = FileChannel(str(tmp_path), timeout_s=10.0)
+        tx.write(encode_frame("a", {}, {}))
+        assert read_frame(rx)[0] == "a"
+        tx.close()
+        t0 = time.monotonic()
+        with pytest.raises(ChannelClosedError) as ei:
+            read_frame(rx)
+        assert not isinstance(ei.value, ChannelTimeoutError)
+        assert time.monotonic() - t0 < 5.0
+
+    def test_socket_connect_honors_small_deadline(self):
+        """The regression: connect's inner timeout used to be hardcoded at
+        60s regardless of the caller's deadline.  A refused/unreachable
+        dial must give up in ~timeout_s."""
+        import socket as _socket
+        probe = _socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+        probe.close()                  # nothing listens here now
+        t0 = time.monotonic()
+        with pytest.raises(ChannelClosedError):
+            SocketChannel.connect("127.0.0.1", port, timeout_s=0.3,
+                                  retry_s=0.05)
+        assert time.monotonic() - t0 < 5.0

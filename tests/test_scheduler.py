@@ -11,6 +11,7 @@ import pytest
 from repro import core
 from repro.comm import (Agent, CommSession, InMemoryTransport,
                         RemoteTransport, SerializedTransport)
+from repro.comm.resilience import RetryPolicy
 from repro.core.protocol import TRACE_COUNTS
 from repro.core.types import KVCommConfig
 from repro.data.synthetic import SyntheticTask, TaskConfig
@@ -451,3 +452,166 @@ class TestPagedAdmission:
             np.testing.assert_array_equal(a.tokens, b.tokens)
         for a, b in zip(ser, second):
             np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+class TestSchedulerResilience:
+    """Chaos + quarantine: the serving loop survives faulty and dead
+    senders — recovering bit-identically under a RetryPolicy, degrading
+    per-request (recorded on the Completion) when the transfer cannot be
+    served, and never crashing the loop or leaking pins."""
+
+    CFG_S = SchedulerConfig(capacity=3, prefix_bucket=8, query_bucket=4)
+
+    def _remote(self, tiny_cfg, tok, schedule, *, store=None,
+                resilience=None, policy=None):
+        from repro.comm.resilience import FaultyChannel, RetryPolicy
+        from repro.comm.remote import LoopbackChannel
+        if policy is None:
+            policy = RetryPolicy(max_attempts=3, backoff_s=0.0, jitter=0.0)
+        ch = FaultyChannel(LoopbackChannel(), schedule)
+        tr = RemoteTransport("float32", channel=ch, policy=policy,
+                             store=store)
+        sess, _, _ = _session(tiny_cfg, tok, tr)
+        sess.resilience = resilience
+        return sess, ch
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_chaos_recovery_token_identical(self, tiny_cfg, tok, seed):
+        """Seeded faults at admission frame boundaries (spaced so the
+        policy always has a clean retry window): the chaos run's
+        completions are bit-identical to the no-fault run, nothing
+        degrades, and the burned attempts land in the transfer log."""
+        import random
+        from repro.comm.resilience import Fault, FaultSchedule
+        rng = random.Random(seed)
+        kinds = [rng.choice(["drop", "truncate", "corrupt", "disconnect"])
+                 for _ in range(3)]
+        schedule = FaultSchedule(
+            [Fault(op, k, frac=rng.uniform(0.2, 0.8))
+             for op, k in zip((0, 3, 6), kinds)])
+        reqs = _stream(tok)
+        clean_sess, _ = self._remote(tiny_cfg, tok, FaultSchedule())
+        ref, _ = Scheduler(clean_sess, KVCFG, config=self.CFG_S).run(reqs)
+        sess, ch = self._remote(tiny_cfg, tok, schedule)
+        got, _ = Scheduler(sess, KVCFG, config=self.CFG_S).run(reqs)
+        assert [c.rid for c in got] == [c.rid for c in ref]
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert all(c.degradation is None for c in got)
+        assert len(schedule) == 0                   # every fault fired
+        retried = [r for r in sess.transport.log if r.attempts > 1]
+        assert len(retried) == 3
+        assert all(r.attempts == 2 for r in retried)
+
+    def test_chaos_paged_no_leaked_pins(self, tiny_cfg, tok):
+        """The paged admission path under faults: token parity with the
+        clean paged run AND zero pinned pool bytes once the last table is
+        released."""
+        from repro.comm.resilience import Fault, FaultSchedule
+        from repro.store import PageStore
+        reqs = _stream(tok, n=4, max_new=(3, 2))
+        clean_sess, _ = self._remote(tiny_cfg, tok, FaultSchedule(),
+                                     store=PageStore(page_len=4))
+        ref, _ = Scheduler(clean_sess, KVCFG, config=self.CFG_S).run(reqs)
+        store = PageStore(page_len=4)
+        # share = 3 writes; faults placed so no exchange eats two faults
+        schedule = FaultSchedule([Fault(0, "truncate", frac=0.5),
+                                  Fault(8, "disconnect")])
+        sess, ch = self._remote(tiny_cfg, tok, schedule, store=store)
+        got, _ = Scheduler(sess, KVCFG, config=self.CFG_S).run(reqs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert all(c.degradation is None for c in got)
+        assert len(schedule) == 0
+        sess.transport.release_table()
+        assert store.stats().pinned_bytes == 0
+
+    def test_dead_sender_degrades_every_request(self, tiny_cfg, tok):
+        """A permanently dead sender with a baseline-only ladder: the loop
+        finishes, every completion is served text-only with its
+        DegradationEvent attached, and the scheduler matches the serial
+        reference (which degrades identically)."""
+        from repro.comm.resilience import Resilience
+        reqs = _stream(tok, n=4, max_new=(3, 2))
+        ser_sess, _ = self._remote(
+            tiny_cfg, tok, None, resilience=Resilience(),
+            policy=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0))
+        ser_sess.transport.channel = _AlwaysDown()
+        ser, _ = serve_serial(ser_sess, reqs, KVCFG)
+        assert all(c.degradation is not None
+                   and c.degradation.stage == "baseline" for c in ser)
+        sess, _ = self._remote(
+            tiny_cfg, tok, None, resilience=Resilience(),
+            policy=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0))
+        sess.transport.channel = _AlwaysDown()
+        got, stats = Scheduler(sess, KVCFG, config=self.CFG_S).run(reqs)
+        assert [c.rid for c in got] == [c.rid for c in ser]
+        for a, b in zip(ser, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        for c in got:
+            assert c.degradation is not None
+            assert c.degradation.stage == "baseline"
+            assert c.degradation.rid == c.rid
+        # the degraded transfers are zero-byte rows in the log
+        assert all(r.n_bytes == 0 for r in sess.transport.log)
+
+    def test_quarantine_without_ladder_keeps_loop_alive(self, tiny_cfg,
+                                                        tok):
+        """No session ladder at all: the scheduler itself catches the
+        exhausted share, quarantines the admission to text-only, and keeps
+        serving — token-identical to the ladder path."""
+        from repro.comm.resilience import Resilience
+        reqs = _stream(tok, n=4, max_new=(3, 2))
+        ref_sess, _ = self._remote(
+            tiny_cfg, tok, None, resilience=Resilience(),
+            policy=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0))
+        ref_sess.transport.channel = _AlwaysDown()
+        ref, _ = Scheduler(ref_sess, KVCFG, config=self.CFG_S).run(reqs)
+        sess, _ = self._remote(
+            tiny_cfg, tok, None, resilience=None,
+            policy=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0))
+        sess.transport.channel = _AlwaysDown()
+        got, _ = Scheduler(sess, KVCFG, config=self.CFG_S).run(reqs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        for c in got:
+            assert c.degradation is not None
+            assert c.degradation.stage == "baseline"
+        assert all(r.n_bytes == 0 for r in sess.transport.log)
+
+    def test_degraded_admission_adds_no_new_traces(self, tiny_cfg, tok):
+        """The baseline rung reuses the healthy path's compiled prefill /
+        insert / ragged step (prefix_lens=0 masks the zero prefix at
+        runtime — no new shapes, no new compiles)."""
+        from repro.comm.resilience import Resilience
+        reqs = _stream(tok, n=4, max_new=(3, 2))
+        warm_sess, _ = self._remote(tiny_cfg, tok, None)
+        Scheduler(warm_sess, KVCFG, config=self.CFG_S).run(reqs)
+        base = dict(TRACE_COUNTS)
+        sess, _ = self._remote(
+            tiny_cfg, tok, None, resilience=Resilience(),
+            policy=RetryPolicy(max_attempts=2, backoff_s=0.0, jitter=0.0))
+        sess.transport.channel = _AlwaysDown()
+        got, _ = Scheduler(sess, KVCFG, config=self.CFG_S).run(reqs)
+        assert all(c.degradation is not None for c in got)
+        for key in ("ragged_decode_step", "receiver_prefill",
+                    "scheduler_insert"):
+            assert TRACE_COUNTS.get(key, 0) == base.get(key, 0), \
+                (key, dict(TRACE_COUNTS), base)
+
+
+class _AlwaysDown:
+    """A channel whose peer is gone and stays gone."""
+
+    def write(self, data):
+        from repro.comm.remote import ChannelClosedError
+        raise ChannelClosedError("peer is gone")
+
+    def read(self, n):
+        return b""
+
+    def close(self):
+        pass
+
+    def reset(self):
+        pass
