@@ -5,9 +5,13 @@ selection ratio the receiver prefills the query against the packed shared
 prefix, then decodes ``STEPS`` tokens twice —
 
   eager  : ``receiver_decode`` per token (dispatch-bound reference; also
-           what ``CommSession.stream`` did before this iteration), and
+           what ``CommSession.stream`` did before this iteration),
   jitted : ``core.decode_step`` — ONE compiled call per token with the KV
-           cache donated, so steady-state decode updates buffers in place.
+           cache donated, so steady-state decode updates buffers in place,
+  pallas : the same jitted loop with ``backend="pallas"`` — attention runs
+           in the fused ragged-decode kernel (interpret mode off-TPU).
+           Token parity with the reference loop is asserted before the
+           row is reported.
 
 Writes ``BENCH_decode.json`` at the repo root: prefill ms, steady-state
 tokens/s for both paths, speedup, per (ratio in {0.3, 0.5, 1.0}, batch in
@@ -74,21 +78,45 @@ def bench_ratio(session, cfg, tok, ratio: float, batch: int = BATCH) -> dict:
     cache, t = out.cache, tok0
     t, _, cache = rx.decode_step(t, cache, shared)   # compile
     _sync(t)
+    ref_toks = [np.asarray(t[:, 0])]
     t0 = time.perf_counter()
     for _ in range(STEPS):
         t, _, cache = rx.decode_step(t, cache, shared)
+        ref_toks.append(np.asarray(t[:, 0]))
     _sync(t)
     jit_s = time.perf_counter() - t0
 
+    # --- fused pallas ragged decode: same loop, kernel attention ---
+    out = rx.prefill(qry, shared, max_new=STEPS + 2)
+    cache, t = out.cache, tok0
+    t, _, cache = rx.decode_step(t, cache, shared,
+                                 backend="pallas")   # compile
+    _sync(t)
+    pal_toks = [np.asarray(t[:, 0])]
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        t, _, cache = rx.decode_step(t, cache, shared, backend="pallas")
+        pal_toks.append(np.asarray(t[:, 0]))
+    _sync(t)
+    pallas_s = time.perf_counter() - t0
+
+    # parity gate: the fused path must emit the reference token stream
+    assert all(np.array_equal(a, b) for a, b in zip(ref_toks, pal_toks)), \
+        "pallas decode diverged from the reference backend"
+
     eager_tps = STEPS * batch / eager_s
     jit_tps = STEPS * batch / jit_s
+    pallas_tps = STEPS * batch / pallas_s
     return {
         "M": int(np.asarray(select).sum()),
         "batch": batch,
         "prefill_ms": round(prefill_ms, 3),
         "eager_tokens_per_s": round(eager_tps, 1),
         "jitted_donated_tokens_per_s": round(jit_tps, 1),
+        "pallas_tokens_per_s": round(pallas_tps, 1),
         "speedup": round(jit_tps / eager_tps, 2),
+        "pallas_vs_reference": round(pallas_tps / jit_tps, 2),
+        "pallas_parity": True,
     }
 
 
@@ -104,11 +132,17 @@ def run(emit=common.emit) -> dict:
     for ratio in (0.3, 0.5, 1.0):
         per_batch = {}
         for batch in sorted({1, BATCH}):
+            # every (ratio, batch) compiles a fresh geometry; drop the
+            # previous executables (the interpret-mode pallas programs are
+            # mmap-heavy — accumulating them exhausts the map table long
+            # before RAM runs out)
+            jax.clear_caches()
             r = bench_ratio(session, cfg, tok, ratio, batch=batch)
             per_batch[str(batch)] = r
             emit(f"decode/ratio_{ratio}/b{batch}", 0.0,
                  f"eager={r['eager_tokens_per_s']}tok/s;"
                  f"jit={r['jitted_donated_tokens_per_s']}tok/s;"
+                 f"pallas={r['pallas_tokens_per_s']}tok/s;"
                  f"x{r['speedup']}")
         # keep the per-ratio top level pointing at the deployment batch
         out["ratios"][str(ratio)] = {**per_batch[str(BATCH)],

@@ -16,9 +16,13 @@ Token-for-token parity is asserted before timing (the speedup is only
 interesting if the outputs are the same). Both paths are fully warmed (one
 untimed pass) so the numbers are steady-state throughput, not compile time.
 
-Writes ``BENCH_serve.json`` at the repo root: tokens/s, TTFT p50, slot
-occupancy, speedup, per ratio in {0.3, 0.5} — the ratio axis shared with
-``BENCH_decode.json``.
+The scheduler is additionally run with ``decode_backend="pallas"`` (the
+fused ragged-decode kernel) at each ratio — token parity with the serial
+reference is asserted before its row is reported.
+
+Writes ``BENCH_serve.json`` at the repo root: tokens/s (serial, scheduled
+reference, scheduled pallas), TTFT p50, slot occupancy, speedup, per ratio
+in {0.3, 0.5} — the ratio axis shared with ``BENCH_decode.json``.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import json
 import os
 import time
 
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -58,13 +63,19 @@ def bench_ratio(session, tok, ratio: float) -> dict:
     reqs = build_stream(tok)
     cfg_s = SchedulerConfig(capacity=CAPACITY)
 
-    # --- warm + parity gate (compiles both paths end to end) ---
+    cfg_pal = SchedulerConfig(capacity=CAPACITY, decode_backend="pallas")
+
+    # --- warm + parity gates (compiles every path end to end) ---
     ser, _ = serve_serial(session, reqs, kvcfg)
     sched = Scheduler(session, kvcfg, config=cfg_s)
     got, _ = sched.run(reqs)
     assert all(np.array_equal(a.tokens, b.tokens)
                for a, b in zip(ser, got)), \
         "scheduled output diverged from the serial reference"
+    pal, _ = Scheduler(session, kvcfg, config=cfg_pal).run(reqs)
+    assert all(np.array_equal(a.tokens, b.tokens)
+               for a, b in zip(ser, pal)), \
+        "pallas backend diverged from the serial reference"
 
     # --- timed passes (steady state) ---
     t0 = time.perf_counter()
@@ -75,21 +86,29 @@ def bench_ratio(session, tok, ratio: float) -> dict:
     got, sch_stats = Scheduler(session, kvcfg, config=cfg_s).run(reqs)
     sched_s = time.perf_counter() - t0
 
+    t0 = time.perf_counter()
+    pal, pal_stats = Scheduler(session, kvcfg, config=cfg_pal).run(reqs)
+    pallas_s = time.perf_counter() - t0
+
     n_tok = ser_stats["tokens"]
     serial_tps = n_tok / serial_s
     sched_tps = n_tok / sched_s
+    pallas_tps = n_tok / pallas_s
     return {
         "requests": len(reqs),
         "tokens": n_tok,
         "serial_tokens_per_s": round(serial_tps, 1),
         "scheduled_tokens_per_s": round(sched_tps, 1),
+        "pallas_tokens_per_s": round(pallas_tps, 1),
         "speedup": round(sched_tps / serial_tps, 2),
+        "pallas_vs_reference": round(pallas_tps / sched_tps, 2),
         "serial_ttft_ms_p50": round(
             float(np.median([c.ttft_s for c in ser])) * 1e3, 1),
         "scheduled_ttft_ms_p50": round(
             float(np.median([c.ttft_s for c in got])) * 1e3, 1),
         "slot_occupancy": round(sch_stats["occupancy"], 3),
         "parity": True,
+        "pallas_parity": True,
     }
 
 
@@ -102,11 +121,16 @@ def run(emit=common.emit) -> dict:
         "ratios": {},
     }
     for ratio in (0.3, 0.5):
+        # each ratio freezes a new selection -> fresh compiles; drop the
+        # previous ratio's executables (interpret-mode pallas programs are
+        # mmap-heavy)
+        jax.clear_caches()
         r = bench_ratio(session, tok, ratio)
         out["ratios"][str(ratio)] = r
         emit(f"serve/ratio_{ratio}", 0.0,
              f"serial={r['serial_tokens_per_s']}tok/s;"
              f"sched={r['scheduled_tokens_per_s']}tok/s;"
+             f"pallas={r['pallas_tokens_per_s']}tok/s;"
              f"x{r['speedup']};occ={r['slot_occupancy']}")
     out["speedup_at_0.3"] = out["ratios"]["0.3"]["speedup"]
     with open(OUT_PATH, "w") as f:

@@ -99,21 +99,26 @@ class Agent:
         return core.receiver_decode(self.params, self.cfg, token, cache,
                                     shared)
 
-    def decode_step(self, token, cache, shared: Optional[SharedKV] = None):
+    def decode_step(self, token, cache, shared: Optional[SharedKV] = None,
+                    backend: str = "reference"):
         """One greedy decode step as a single jitted call with the cache
-        donated — the steady-state serving path. Returns
+        donated — the steady-state serving path. ``backend`` picks the
+        attention impl ("reference" masked-dense | "pallas" fused). Returns
         (next_token (B, 1), last_logits, new_cache); ``cache`` is consumed."""
-        return core.decode_step(self.params, self.cfg, token, cache, shared)
+        return core.decode_step(self.params, self.cfg, token, cache, shared,
+                                backend=backend)
 
     def ragged_step(self, tokens, cache, shared: Optional[SharedKV],
-                    prefix_lens, active):
+                    prefix_lens, active, backend: str = "reference"):
         """One continuous-batching iteration over a slot-table cache: one
         donated compiled call advances every live slot by a token (rows sit
         at different generation offsets; per-row lengths mask the ragged
-        tails). Returns (next_tokens, logits, new cache); ``cache`` is
-        consumed."""
+        tails). ``backend`` picks the attention impl ("reference"
+        masked-dense | "pallas" fused two-segment kernel). Returns
+        (next_tokens, logits, new cache); ``cache`` is consumed."""
         return core.ragged_decode_step(self.params, self.cfg, tokens, cache,
-                                       shared, prefix_lens, active)
+                                       shared, prefix_lens, active,
+                                       backend=backend)
 
     def generate(self, tokens, shared: Optional[SharedKV] = None,
                  max_new: int = 32, extra=None):

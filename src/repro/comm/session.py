@@ -427,13 +427,15 @@ class CommSession:
         return np.asarray(toks)
 
     def stream(self, query: np.ndarray, shared: Optional[SharedKV] = None,
-               max_new: int = 32) -> Iterator[np.ndarray]:
+               max_new: int = 32,
+               backend: str = "reference") -> Iterator[np.ndarray]:
         """Streaming greedy generation: yields one (B,) token per step (the
         serving path — first token after prefill, then step-wise decode).
 
         Each step is one compiled call with the cache donated
         (``core.decode_step``): steady-state decode updates the cache in
-        place instead of re-materializing it per token."""
+        place instead of re-materializing it per token. ``backend`` picks
+        the per-step attention impl ("reference" | "pallas")."""
         if max_new <= 0:
             return
         out = self.receiver.prefill(query, shared, max_new=max_new)
@@ -441,5 +443,6 @@ class CommSession:
         tok = jnp.argmax(out.logits[:, -1, :], axis=-1)[:, None]
         yield np.asarray(tok[:, 0])
         for _ in range(max_new - 1):
-            tok, _, cache = self.receiver.decode_step(tok, cache, shared)
+            tok, _, cache = self.receiver.decode_step(tok, cache, shared,
+                                                      backend=backend)
             yield np.asarray(tok[:, 0])

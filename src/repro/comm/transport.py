@@ -109,6 +109,24 @@ def decode_wire(wire, wire_dtype: str, dtype) -> jnp.ndarray:
     return jnp.asarray(wire[0]).astype(dtype)
 
 
+def device_wire_roundtrip(x, wire_dtype: str, dtype) -> jnp.ndarray:
+    """``decode_wire(encode_wire(x))`` without ever leaving the device: the
+    same cast/quantize math as the codec above, but no ``np.asarray`` host
+    sync.  The async paged path builds its receiver view with this while
+    the content hashing (which MUST read host bytes) is parked for later —
+    bit-parity with a pool-materialized view is asserted in tests, so the
+    two implementations cannot drift apart silently."""
+    x = jnp.asarray(x)
+    if wire_dtype == "int8":
+        absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
+                         keepdims=True)
+        scale = jnp.maximum(absmax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return (q.astype(jnp.float32)
+                * scale.astype(jnp.float32)).astype(dtype)
+    return x.astype(_WIRE_DTYPES[wire_dtype]).astype(dtype)
+
+
 def roundtrip_kv(payload, wire_dtype: str, dtype):
     """Wire-cast a gathered {"k","v"} payload and decode it back at the
     compute dtype; returns (receiver payload, counted bytes). The ONE
@@ -212,8 +230,36 @@ class Transport(abc.ABC):
         self.store = store
         # the last send's BlockTable, held PINNED in the store until the
         # next paged send (or release_table) — the serving scheduler
-        # gathers admission prefixes from it
-        self.last_table = None
+        # gathers admission prefixes from it (via the settling property
+        # below; _last_table is the raw slot)
+        self._last_table = None
+        # deferred paged ingests parked by async sends: (thunk, payload).
+        # The thunk runs split_payload's hashing + the pool ingest — the
+        # ONE host-syncing stage of a paged send — at flush/poll/first-use
+        # instead of inside send(); the payload rides along so poll can
+        # check device readiness without blocking.
+        self._pending_ingest: List[tuple] = []
+
+    @property
+    def last_table(self) -> Optional[Any]:
+        """The last paged send's (pinned) BlockTable.  Reading it settles
+        any deferred paged ingests first — "first use" of the table IS the
+        point an async ``send(sync=False)`` must land in the pool."""
+        self._settle_ingests()
+        return self._last_table
+
+    @last_table.setter
+    def last_table(self, table) -> None:
+        self._last_table = table
+
+    def _settle_ingests(self) -> int:
+        """Run every deferred paged ingest (in send order — pool dedup and
+        table swaps are order-sensitive). Returns the number settled."""
+        n = len(self._pending_ingest)
+        while self._pending_ingest:
+            thunk, _ = self._pending_ingest.pop(0)
+            thunk()
+        return n
 
     def attach_store(self, store) -> None:
         """Attach (or replace) the paged prefix store; subsequent sends
@@ -224,12 +270,13 @@ class Transport(abc.ABC):
     def release_table(self) -> None:
         """Unpin the last paged send's block table (its pages become
         evictable again)."""
-        if self.last_table is not None and self.store is not None:
-            self.store.release(self.last_table)
-        self.last_table = None
+        self._settle_ingests()
+        if self._last_table is not None and self.store is not None:
+            self.store.release(self._last_table)
+        self._last_table = None
 
     def _swap_table(self, table) -> None:
-        prev, self.last_table = self.last_table, table
+        prev, self._last_table = self._last_table, table
         if prev is not None:
             self.store.release(prev)
 
@@ -242,9 +289,11 @@ class Transport(abc.ABC):
         return self.log[-1]
 
     def flush_latency(self) -> int:
-        """Settle every deferred stamp: block on the parked views and write
-        each record's ``latency_s`` (enqueue->drain wall clock). Returns
-        the number of records stamped."""
+        """Settle every deferred stamp: run parked paged ingests, block on
+        the parked views, and write each record's ``latency_s``
+        (enqueue->drain wall clock). Returns the number of records
+        stamped."""
+        self._settle_ingests()
         n = len(self._pending)
         for rec, t0, shared in self._pending:
             jax.block_until_ready(shared)
@@ -252,18 +301,27 @@ class Transport(abc.ABC):
         self._pending.clear()
         return n
 
+    def _drained(self, tree) -> bool:
+        return all(x.is_ready() for x in jax.tree.leaves(tree)
+                   if hasattr(x, "is_ready"))
+
     def poll_latency(self) -> int:
         """Non-blocking ``flush_latency``: stamp (and release) only the
-        deferred records whose transfers have already drained. The serving
-        scheduler calls this once per iteration so the pending log — which
-        pins each transfer's receiver-side view on device — stays bounded
-        by the transfers genuinely in flight, not by the stream length.
-        Returns the number of records stamped."""
+        deferred records whose transfers have already drained, and run
+        deferred paged ingests whose payloads are already on host-readable
+        device memory (longest-ready prefix only — pool ordering). The
+        serving scheduler calls this once per iteration so the pending log
+        — which pins each transfer's receiver-side view on device — stays
+        bounded by the transfers genuinely in flight, not by the stream
+        length. Returns the number of records stamped."""
+        while self._pending_ingest \
+                and self._drained(self._pending_ingest[0][1]):
+            thunk, _ = self._pending_ingest.pop(0)
+            thunk()
         still = []
         n = 0
         for rec, t0, shared in self._pending:
-            if all(x.is_ready() for x in jax.tree.leaves(shared)
-                   if hasattr(x, "is_ready")):
+            if self._drained(shared):
                 rec.latency_s = time.perf_counter() - t0
                 n += 1
             else:
@@ -297,8 +355,17 @@ class Transport(abc.ABC):
             self.flush_latency()
         t0 = time.perf_counter()
         if self.store is not None and kv is not None:
-            shared = self._send_paged(cfg, kvcfg, kv, select, states,
-                                      state_select, assignment)
+            # async in-process paged sends defer the host-syncing hashing
+            # (true sync=False); the remote override and the states-carrying
+            # path keep the eager ingest (their wires/codecs read bytes
+            # inherently)
+            if (not do_sync and states is None
+                    and type(self)._send_paged is Transport._send_paged):
+                shared = self._send_paged_deferred(cfg, kvcfg, kv, select,
+                                                   assignment)
+            else:
+                shared = self._send_paged(cfg, kvcfg, kv, select, states,
+                                          state_select, assignment)
         elif assignment is not None:
             shared = self._send_mapped(cfg, kvcfg, kv, assignment,
                                        states, state_select)
@@ -367,6 +434,7 @@ class Transport(abc.ABC):
         states): the dedup win the record's pages_* fields break down.
         ``RemoteTransport`` overrides this with the framed
         page_query/page_need/page_data exchange."""
+        self._settle_ingests()   # older async ingests land first (ordering)
         if assignment is not None:
             payload = gather_mapped(kv, assignment)
             layers = tuple(assignment.dst)
@@ -403,6 +471,67 @@ class Transport(abc.ABC):
             wire_dtype=getattr(self, "wire_dtype", "model"),
             pages_total=table.num_pages, pages_sent=len(novel),
             pages_hit=table.num_pages - len(novel)))
+        return shared
+
+    def _send_paged_deferred(self, cfg: ModelConfig, kvcfg: KVCommConfig,
+                             kv, select,
+                             assignment: Optional[LayerAssignment] = None
+                             ) -> SharedKV:
+        """True ``sync=False`` paged send: nothing in here reads device
+        bytes on the host.  The receiver view is built from a device-only
+        codec roundtrip (``device_wire_roundtrip`` — bit-identical to what
+        ``PageStore.materialize`` would rebuild from the pool), while the
+        content hashing + pool ingest — the host-syncing stage — is parked
+        as a thunk that ``flush_latency()`` / ``poll_latency()`` / the
+        first read of ``last_table`` runs, mirroring deferred latency
+        stamping.  The TransferRecord is appended immediately with zeroed
+        page stats; the thunk fills them in when the ingest lands."""
+        self._settle_ingests()
+        if assignment is not None:
+            payload = gather_mapped(kv, assignment)
+            layers = tuple(assignment.dst)
+            src_layers = tuple(assignment.src)
+            sel_mask = np.asarray(assignment.dst_mask())
+            layer_count = assignment.num_pairs
+        else:
+            payload = gather_selected(kv, jnp.asarray(select))
+            layers = selected_layer_ids(select)
+            src_layers = None
+            sel_mask = np.asarray(select)
+            layer_count = selected_count(select)
+        wd = self._paged_wire_dtype(kv)
+        dtype = kv["k"].dtype
+        prefix_len = int(kv["k"].shape[2])
+        rx_payload = {part: device_wire_roundtrip(payload[part], wd, dtype)
+                      for part in ("k", "v")}
+        if assignment is not None:
+            shared = build_mapped(kvcfg, rx_payload, assignment, prefix_len)
+        else:
+            shared = build_packed(kvcfg, rx_payload, layers, prefix_len,
+                                  select=jnp.asarray(sel_mask))
+        if not self.packed:
+            shared = shared.to_dense()
+        rec = TransferRecord(
+            kind="kv", n_bytes=0, layers=layer_count,
+            context_len=prefix_len,
+            wire_dtype=getattr(self, "wire_dtype", "model"))
+        self.log.append(rec)
+
+        def ingest():
+            table, novel, novel_bytes = self.store.ingest(
+                payload, layers=layers, select=sel_mask, wire_dtype=wd,
+                pos_mode=kvcfg.pos_mode, src_layers=src_layers)
+            try:
+                self._swap_table(table)
+            except BaseException:
+                self.store.release(table)
+                raise
+            rec.n_bytes = novel_bytes + table.scale_nbytes
+            rec.pages_total = table.num_pages
+            rec.pages_sent = len(novel)
+            rec.pages_hit = table.num_pages - len(novel)
+
+        self._pending_ingest.append((ingest, payload))
         return shared
 
     def send_text(self, token_count: int, bytes_per_token: int = 2) -> int:

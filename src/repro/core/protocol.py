@@ -288,17 +288,35 @@ def receiver_decode(params, cfg: ModelConfig, token, cache,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
-def _decode_step_jit(params, cfg, token, cache, shared):
+# decode-step attention implementations selectable per call (static under
+# jit, so each backend compiles its own step and TRACE_COUNTS pins both the
+# aggregate and the per-backend key)
+DECODE_BACKENDS = ("reference", "pallas")
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in DECODE_BACKENDS:
+        raise ValueError(
+            f"unknown decode backend {backend!r}; expected one of "
+            f"{DECODE_BACKENDS}")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                   donate_argnums=(3,))
+def _decode_step_jit(params, cfg, token, cache, shared,
+                     backend="reference"):
     TRACE_COUNTS["decode_step"] += 1
+    TRACE_COUNTS[f"decode_step[{backend}]"] += 1
     out = tfm.apply_model(params, cfg, token, mode="cached", cache=cache,
-                          shared=shared, logits_mode="last")
+                          shared=shared, logits_mode="last",
+                          decode_backend=backend)
     next_tok = jnp.argmax(out.logits[:, -1, :], axis=-1)
     return next_tok, out.logits[:, -1, :], out.cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache,
-                shared: Optional[SharedKV] = None):
+                shared: Optional[SharedKV] = None,
+                backend: str = "reference"):
     """One greedy decode step as ONE compiled call with the cache donated
     (``donate_argnums``): steady-state decode re-uses the cache buffers
     in place instead of materializing a fresh KV stack every token (on
@@ -308,12 +326,17 @@ def decode_step(params, cfg: ModelConfig, token, cache,
     reduced to its payload-free ``meta()`` view — the prefix already lives
     in the cache — so per-step transfers are just the token.
 
+    ``backend`` picks the attention implementation of the step:
+    ``"reference"`` is the masked-dense oracle, ``"pallas"`` the fused
+    ragged kernel (``kernels.ragged_decode``).
+
     Returns (next_token (B, 1), last_logits (B, V), new_cache).
     """
+    _check_backend(backend)
     meta = shared.meta() if shared is not None else None
     next_tok, logits, cache = _decode_step_jit(params, cfg,
                                                jnp.asarray(token), cache,
-                                               meta)
+                                               meta, backend=backend)
     return next_tok[:, None], logits, cache
 
 
@@ -345,13 +368,15 @@ def pad_prefix(shared: SharedKV, prefix_len: int) -> SharedKV:
                     layers=shared.layers, src_layers=shared.src_layers)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(3,))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                   donate_argnums=(3,))
 def _ragged_decode_step_jit(params, cfg, tokens, cache, shared,
-                            prefix_lens, active):
+                            prefix_lens, active, backend="reference"):
     TRACE_COUNTS["ragged_decode_step"] += 1
+    TRACE_COUNTS[f"ragged_decode_step[{backend}]"] += 1
     out = tfm.apply_model(params, cfg, tokens, mode="cached", cache=cache,
                           shared=shared, logits_mode="last",
-                          prefix_lens=prefix_lens)
+                          prefix_lens=prefix_lens, decode_backend=backend)
     cache = out.cache
     # finished/empty rows do not advance: their length (and therefore their
     # write cursor) is frozen, so a dead slot rewrites its own masked
@@ -363,7 +388,8 @@ def _ragged_decode_step_jit(params, cfg, tokens, cache, shared,
 
 
 def ragged_decode_step(params, cfg: ModelConfig, tokens, cache,
-                       shared: Optional[SharedKV], prefix_lens, active):
+                       shared: Optional[SharedKV], prefix_lens, active,
+                       backend: str = "reference"):
     """One continuous-batching iteration over a slot-table cache.
 
     ``cache`` is a B==capacity serving cache whose per-row ``len`` tracks
@@ -371,14 +397,19 @@ def ragged_decode_step(params, cfg: ModelConfig, tokens, cache,
     offsets); ``prefix_lens`` (capacity,) carries per-row REAL prefix
     lengths inside the bucket and ``active`` (capacity,) masks live slots.
     ONE donated compiled call advances every live row by one token —
-    specialization is per (frozen selection, table geometry), never per
-    request. Returns (next_tokens (capacity,), logits, new cache);
-    ``cache`` is consumed.
+    specialization is per (frozen selection, table geometry, backend),
+    never per request. ``backend`` dispatches the step's attention:
+    ``"reference"`` keeps the masked-dense parity oracle, ``"pallas"``
+    runs the fused two-segment kernel (``kernels.ragged_decode``) that
+    consumes the table's per-row ``kv_len``/``prefix_lens`` directly.
+    Returns (next_tokens (capacity,), logits, new cache); ``cache`` is
+    consumed.
     """
+    _check_backend(backend)
     meta = shared.meta() if shared is not None else None
     return _ragged_decode_step_jit(params, cfg, jnp.asarray(tokens), cache,
                                    meta, jnp.asarray(prefix_lens),
-                                   jnp.asarray(active))
+                                   jnp.asarray(active), backend=backend)
 
 
 def generate(params, cfg: ModelConfig, query_tokens, shared=None,

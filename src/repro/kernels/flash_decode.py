@@ -77,8 +77,14 @@ def _decode_kernel(
     @pl.when(ik == nk - 1)
     def _finish():
         if normalize:
-            l = jnp.maximum(l_ref[...], 1e-30)
-            o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+            # fully-masked rows (kv_len == 0: dead/empty continuous-batching
+            # slots) accumulate l == 0; emit DEFINED zeros for them instead
+            # of whatever 0/eps garbage the floor division would produce —
+            # freed slots must never perturb anything downstream
+            l = l_ref[...]
+            o_ref[0, 0] = jnp.where(
+                l > 0.0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0
+            ).astype(o_ref.dtype)
         else:
             o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
         m_out_ref[0, 0] = m_ref[...]
@@ -89,8 +95,15 @@ def _call(q, k, v, kv_len, *, window, blk_k, scale, normalize, interpret):
     """q: (B, Hkv, G, d); k/v: (B, Hkv, Skv, d); kv_len: (B,) int32."""
     B, Hkv, G, D = q.shape
     Skv = k.shape[2]
-    assert Skv % blk_k == 0
-    nk = Skv // blk_k
+    blk_k = max(1, min(blk_k, Skv))
+    pad = (-Skv) % blk_k
+    if pad:
+        # tail blocks stay masked by rk < seq_kv (seq_kv is kept at the REAL
+        # length below), so zero-padding the block axis is purely structural —
+        # scheduler slot tables need not be block-multiples
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (Skv + pad) // blk_k
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     kernel = functools.partial(
         _decode_kernel, blk_k=blk_k, seq_kv=Skv, window=window, scale=scale,

@@ -96,6 +96,45 @@ def decode_reference(
     return out.reshape(B, Hq, Dh)
 
 
+def ragged_decode_reference(
+    q: jnp.ndarray,            # (B, Hq, D) single query token
+    k: jnp.ndarray,            # (B, S, Hkv, D)
+    v: jnp.ndarray,            # (B, S, Hkv, D)
+    *,
+    kv_len: jnp.ndarray | int,       # total valid entries (prefix + self)
+    prefix_lens: jnp.ndarray | int | None = None,  # real entries in bucket
+    prefix_len: int = 0,             # static bucket size
+) -> jnp.ndarray:
+    """Two-segment decode oracle for ``kernels.ragged_decode``.
+
+    Cache rows are ``[prefix bucket (prefix_len) | self | pad]``: positions
+    in ``[prefix_lens[b], prefix_len)`` are bucket padding and masked out;
+    the self segment is valid up to ``kv_len[b]``. Fully-masked rows return
+    zeros. Returns (B, Hq, D).
+    """
+    B, S, Hkv, Dh = k.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    if prefix_lens is None:
+        prefix_lens = prefix_len
+    pfx = jnp.broadcast_to(jnp.asarray(prefix_lens, jnp.int32), (B,))
+    idx = jnp.arange(S)
+    allow = jnp.where(idx[None, :] < prefix_len,
+                      idx[None, :] < pfx[:, None],
+                      idx[None, :] < kv_len[:, None])
+    s = jnp.where(allow[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(allow[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = jnp.where(l > 0.0, e / jnp.maximum(l, 1e-30), 0.0)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, Dh)
+
+
 def decode_partial_reference(q, k, v, *, kv_len, window=None, q_pos=None):
     """Flash-decode partials for cross-shard combination: returns
     (o_partial (B,Hq,D) float32 — UNNORMALIZED sum exp(s-m)·v,

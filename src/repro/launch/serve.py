@@ -64,6 +64,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=8,
                     help="slot-table rows (in-flight requests)")
+    ap.add_argument("--decode-backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="per-step decode attention: masked-dense "
+                         "reference or the fused Pallas ragged kernel "
+                         "(interpret-mode off-TPU)")
     args = ap.parse_args()
 
     cfg, tok, sender, receiver = load_pair()
@@ -85,13 +90,16 @@ def main() -> None:
     reqs = build_requests(tok, args.task, args.requests, args.max_new)
     t0 = time.perf_counter()
     if args.serial:
-        comps, stats = serve_serial(session, reqs, kvcfg, calib_key=args.task)
-        mode = "serial"
+        comps, stats = serve_serial(session, reqs, kvcfg, calib_key=args.task,
+                                    backend=args.decode_backend)
+        mode = f"serial[{args.decode_backend}]"
     else:
         sched = Scheduler(session, kvcfg, calib_key=args.task,
-                          config=SchedulerConfig(capacity=args.capacity))
+                          config=SchedulerConfig(
+                              capacity=args.capacity,
+                              decode_backend=args.decode_backend))
         comps, stats = sched.run(reqs)
-        mode = f"scheduler(cap={args.capacity})"
+        mode = f"scheduler(cap={args.capacity}, {args.decode_backend})"
     dt = time.perf_counter() - t0
 
     tps = stats["tokens"] / dt

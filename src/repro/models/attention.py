@@ -96,6 +96,9 @@ def self_attention(
                                             # (<= prefix_len); bucket pad
                                             # [real, prefix_len) is masked
     collect_mass: bool = False,
+    backend: str = "reference",             # decode-step attention impl:
+                                            # "reference" (masked dense) or
+                                            # "pallas" (fused ragged kernel)
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], Optional[jnp.ndarray]]:
     """Returns (out, (new_cache_k, new_cache_v) or (k, v), mass)."""
     B, S, _ = x.shape
@@ -184,6 +187,25 @@ def self_attention(
             cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(
             cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+
+    if backend == "pallas" and S == 1 and window is None and not collect_mass:
+        # Fused ragged decode: one two-segment kernel per layer, no dense
+        # (B, Smax) mask materialization. Positions are already baked in
+        # (RoPE applied above), so only the validity geometry ships:
+        # kv_len = total valid entries, pfx = real prefix entries (0 when
+        # ctx_valid masks the prefix at an unselected layer).
+        from repro.kernels.ragged_decode import ragged_decode
+        kvl = (jnp.broadcast_to(cache_len, (B,)) + S).astype(jnp.int32)
+        if prefix_len:
+            pfx = (prefix_lens if prefix_lens is not None
+                   else jnp.full((B,), prefix_len, jnp.int32))
+            if ctx_valid is not None:
+                pfx = jnp.where(ctx_valid, pfx, 0)
+        else:
+            pfx = None
+        o = ragged_decode(q[:, 0], ck, cv, kvl, pfx, prefix_len=prefix_len)
+        return o.reshape(B, S, -1) @ p["wo"], (ck, cv), None
+
     idx = jnp.arange(Smax)
     shift2 = (jnp.broadcast_to(pos_shift, (B,))[:, None]
               if ragged else None)                       # (B, 1)

@@ -403,7 +403,8 @@ def _seed_states(st, shared, ssm_i, n):
 # run bodies
 # ---------------------------------------------------------------------------
 def _attn_layer_body(cfg, spec, mode, prefix_len, collect_mass, enc_out,
-                     capture_hidden=False, inject_mode=None):
+                     capture_hidden=False, inject_mode=None,
+                     backend="reference"):
     """Returns f(x, per_layer) -> (x, ys) executing ONE attention layer."""
     mt = mlp_type(cfg)
     use_rope = cfg.arch_type != "audio"
@@ -433,6 +434,7 @@ def _attn_layer_body(cfg, spec, mode, prefix_len, collect_mass, enc_out,
             cache_len=per.get("cache_len"),
             prefix_lens=per.get("prefix_lens"),
             collect_mass=collect_mass,
+            backend=backend,
         )
         x = x + out
         ys = {}
@@ -494,7 +496,8 @@ def _ssm_layer_body(cfg, spec, mode):
 
 def _apply_packed_attn_run(run_p, cfg, spec, x, run_cache, *, shared,
                            attn_i, cache_len, prefix_len, collect_mass,
-                           capture_hidden, enc_out, prefix_lens=None):
+                           capture_hidden, enc_out, prefix_lens=None,
+                           backend="reference"):
     """Execute one attention run under the selection-specialized fast path.
 
     The run's stacked params are partitioned (static, host-gathered and
@@ -545,7 +548,8 @@ def _apply_packed_attn_run(run_p, cfg, spec, x, run_cache, *, shared,
             per["prefix_lens"] = jnp.broadcast_to(
                 prefix_lens[None], (ln,) + prefix_lens.shape)
         body = _attn_layer_body(cfg, spec, "cached", pfx, collect_mass,
-                                enc_out, capture_hidden=capture_hidden)
+                                enc_out, capture_hidden=capture_hidden,
+                                backend=backend)
         x, ys = _run_scan(body, x, per, remat=False, unroll=cfg.scan_unroll)
         aux = aux + jnp.sum(ys["aux"])
         if collect_mass:
@@ -629,6 +633,9 @@ def apply_model(
     prefix_lens: Optional[jnp.ndarray] = None,
     # (B,) real per-row prefix lengths when the shared prefix is bucket-
     # padded (ragged continuous batching); None = every row fills the bucket
+    decode_backend: str = "reference",
+    # decode-step (S==1) attention impl: "reference" masked-dense or
+    # "pallas" fused ragged kernel; prefill/train ignore it
 ) -> ModelOut:
     B, S = tokens.shape
     if shared is not None and shared.is_packed and mode != "cached":
@@ -682,7 +689,7 @@ def apply_model(
                     attn_i=attn_i, cache_len=cache_len,
                     prefix_len=prefix_len, collect_mass=collect_mass,
                     capture_hidden=capture_hidden, enc_out=eo,
-                    prefix_lens=prefix_lens)
+                    prefix_lens=prefix_lens, backend=decode_backend)
                 aux_total = aux_total + aux
                 masses.extend(m_list)
                 hiddens.extend(h_list)
@@ -724,7 +731,8 @@ def apply_model(
             body = _attn_layer_body(
                 cfg, spec, mode, prefix_len, collect_mass, eo,
                 capture_hidden=capture_hidden,
-                inject_mode=inject["mode"] if inject is not None else None)
+                inject_mode=inject["mode"] if inject is not None else None,
+                backend=decode_backend)
             remat = cfg.remat and mode == "train"
             x, ys = _run_scan(body, x, per, remat=remat,
                               unroll=cfg.scan_unroll)

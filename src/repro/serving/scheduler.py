@@ -90,6 +90,12 @@ class SchedulerConfig:
     # finishing request wastes at most two masked slot iterations — never
     # a host sync.  Completions are truncated at the EOS inclusive, which
     # keeps token-for-token parity with ``serve_serial(eos_token=...)``.
+    decode_backend: str = "reference"
+    # attention impl of the per-iteration ragged step: "reference" keeps
+    # the masked-dense parity oracle, "pallas" runs the fused two-segment
+    # kernel (kernels.ragged_decode).  Admission prefill/insert are
+    # backend-independent, so switching adds exactly one compiled step
+    # per (selection, table geometry).
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -364,7 +370,8 @@ class Scheduler:
             if any(slots):
                 ntok, _, state["table"] = sess.receiver.ragged_step(
                     state["cur_tok"], state["table"], self.meta,
-                    state["prefix_lens"], state["active"])
+                    state["prefix_lens"], state["active"],
+                    backend=cfgd.decode_backend)
                 state["cur_tok"] = ntok[:, None]
                 history.append(ntok)
                 live = sum(s is not None for s in slots)
@@ -447,14 +454,16 @@ class Scheduler:
 # ---------------------------------------------------------------------------
 def serve_serial(session: CommSession, requests: Sequence[Request],
                  kvcfg: KVCommConfig, *, calib_key: Optional[str] = None,
-                 eos_token: Optional[int] = None
+                 eos_token: Optional[int] = None,
+                 backend: str = "reference"
                  ) -> Tuple[List[Completion], Dict[str, float]]:
     """The pre-scheduler loop: one request at a time, every stage blocking
     (synced transport stamp, per-token streamed decode). This is the
     correctness reference the scheduler must match token-for-token, and
     the baseline ``benchmarks/serve_bench.py`` races.  ``eos_token`` stops
     a stream after emitting that token (the reference semantics for the
-    scheduler's EOS-based early exit)."""
+    scheduler's EOS-based early exit); ``backend`` picks the per-step
+    decode attention impl ("reference" | "pallas")."""
     completions = []
     t0 = time.perf_counter()
     for req in sorted(requests, key=lambda r: r.rid):
@@ -463,7 +472,8 @@ def serve_serial(session: CommSession, requests: Sequence[Request],
         degraded = session.last_degradation
         toks, ttft = [], 0.0
         for step_tok in session.stream(req.query[None, :], shared,
-                                       max_new=req.max_new):
+                                       max_new=req.max_new,
+                                       backend=backend):
             if not toks:
                 ttft = time.perf_counter() - t0
             toks.append(int(step_tok[0]))

@@ -117,6 +117,41 @@ class TestFlashDecode:
         np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
                                    atol=2e-5, rtol=2e-5)
 
+    @pytest.mark.parametrize("S,blk_k", [
+        (40, 16),    # S not a multiple of blk_k — tail block padded
+        (8, 256),    # S < blk_k — block clamped to S
+        (23, 7),     # odd block over odd length
+        (1, 8),      # single-position cache
+    ])
+    def test_unaligned_lengths(self, S, blk_k):
+        """Regression: _call used to assert Skv % blk_k == 0; now the tail
+        is padded and masked instead, so ANY (cache length, block) pair is
+        legal."""
+        ks = jax.random.split(KEY, 4)
+        q = _rand(ks[0], (2, 4, 16))
+        k = _rand(ks[1], (2, S, 2, 16))
+        v = _rand(ks[2], (2, S, 2, 16))
+        kv_len = jax.random.randint(ks[3], (2,), 1, S + 1)
+        out = ops.decode_attention(q, k, v, kv_len, blk_k=blk_k)
+        rout = ref.decode_reference(q, k, v, kv_len=kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_zero_length_rows_return_zeros(self):
+        """Regression: rows with kv_len == 0 (dead serving slots) return
+        defined zeros instead of 0/0 NaNs."""
+        ks = jax.random.split(KEY, 3)
+        q = _rand(ks[0], (3, 4, 16))
+        k = _rand(ks[1], (3, 16, 2, 16))
+        v = _rand(ks[2], (3, 16, 2, 16))
+        kv_len = jnp.array([0, 9, 0], jnp.int32)
+        out = np.asarray(ops.decode_attention(q, k, v, kv_len, blk_k=8))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_array_equal(out[[0, 2]], 0.0)
+        rout = ref.decode_reference(q, k, v, kv_len=kv_len)
+        np.testing.assert_allclose(out[1], np.asarray(rout)[1],
+                                   atol=2e-5, rtol=2e-5)
+
     @given(st.integers(1, 4), st.integers(2, 6))
     @settings(max_examples=10, deadline=None)
     def test_sharded_combine_equals_full(self, n_shards, blocks):

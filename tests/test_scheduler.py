@@ -454,6 +454,112 @@ class TestPagedAdmission:
             np.testing.assert_array_equal(a.tokens, b.tokens)
 
 
+class TestPagedAsyncShare:
+    """True ``sync=False`` for store-routed sends: the content hashing +
+    pool ingest (the host-syncing stage) is deferred past the send, the
+    same way latency stamping is — nothing blocks while an in-flight step
+    is still decoding."""
+
+    def _kv(self, tiny_cfg, tiny_params):
+        ctx = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4,
+                                 tiny_cfg.vocab_size)
+        kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+        return kv, jnp.array([True, False, True, False])
+
+    def _spy(self, monkeypatch):
+        """Count PageStore.ingest calls AND jax.block_until_ready calls —
+        ingest is the transitive host sync (hashing reads device bytes),
+        block_until_ready the explicit one."""
+        from repro.store import PageStore
+        calls = {"ingest": 0, "block": 0}
+        real_ingest = PageStore.ingest
+        real_block = jax.block_until_ready
+
+        def spy_ingest(store, *a, **k):
+            calls["ingest"] += 1
+            return real_ingest(store, *a, **k)
+
+        def spy_block(x):
+            calls["block"] += 1
+            return real_block(x)
+
+        monkeypatch.setattr(PageStore, "ingest", spy_ingest)
+        monkeypatch.setattr(jax, "block_until_ready", spy_block)
+        return calls
+
+    @pytest.mark.parametrize("make", [
+        lambda store: InMemoryTransport(store=store),
+        lambda store: SerializedTransport("int8", store=store),
+    ], ids=["mem_model_dtype", "ser_int8"])
+    def test_async_send_defers_ingest(self, tiny_cfg, tiny_params,
+                                      monkeypatch, make):
+        from repro.store import PageStore
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        calls = self._spy(monkeypatch)
+        tr = make(PageStore(page_len=4))
+        shared = tr.send(tiny_cfg, KVCommConfig(), kv, select, sync=False)
+        # before the in-flight step retires: no hashing, no host block,
+        # no table, unstamped zero-byte record
+        assert calls == {"ingest": 0, "block": 0}
+        assert tr._last_table is None
+        assert tr.last.n_bytes == 0 and tr.last.pages_total == 0
+        # flush settles the parked ingest and fills the record in place
+        assert tr.flush_latency() >= 1
+        assert calls["ingest"] == 1
+        assert tr.last_table is not None
+        assert tr.last.n_bytes > 0 and tr.last.pages_total > 0
+        assert tr.last.pages_sent + tr.last.pages_hit \
+            == tr.last.pages_total
+        # the deferred receiver view is BIT-identical to a sync send's
+        # pool-materialized view on a fresh store
+        sync_tr = make(PageStore(page_len=4))
+        ref = sync_tr.send(tiny_cfg, KVCommConfig(), kv, select, sync=True)
+        for a, b in zip(jax.tree.leaves(shared.kv),
+                        jax.tree.leaves(ref.kv)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_last_table_read_settles(self, tiny_cfg, tiny_params,
+                                     monkeypatch):
+        """First use of the table (the scheduler's paged insert) lands the
+        ingest without an explicit flush."""
+        from repro.store import PageStore
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        calls = self._spy(monkeypatch)
+        tr = InMemoryTransport(store=PageStore(page_len=4))
+        tr.send(tiny_cfg, KVCommConfig(), kv, select, sync=False)
+        assert calls["ingest"] == 0
+        assert tr.last_table is not None      # property read settles
+        assert calls["ingest"] == 1
+
+    def test_sync_send_behind_async_preserves_order(self, tiny_cfg,
+                                                    tiny_params,
+                                                    monkeypatch):
+        """A later synced paged send settles the parked ingest FIRST, so
+        pool dedup and last_table keep send order."""
+        from repro.store import PageStore
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        calls = self._spy(monkeypatch)
+        tr = InMemoryTransport(store=PageStore(page_len=4))
+        tr.send(tiny_cfg, KVCommConfig(), kv, select, sync=False)
+        tr.send(tiny_cfg, KVCommConfig(), kv, select, sync=True)
+        assert calls["ingest"] == 2
+        assert not tr._pending_ingest
+        # the repeat send fully dedups against the first's pages
+        assert tr.log[-1].pages_hit == tr.log[-1].pages_total > 0
+
+    def test_states_force_sync_path(self, tiny_cfg, tiny_params):
+        """SSM states ride alongside the pages with no deferred variant —
+        a send carrying states ingests eagerly (correctness first)."""
+        from repro.store import PageStore
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        states = {"s": jnp.ones((2, 2, 4))}
+        tr = InMemoryTransport(store=PageStore(page_len=4))
+        tr.send(tiny_cfg, KVCommConfig(), kv, select, states=states,
+                state_select=jnp.array([True, True]), sync=False)
+        assert not tr._pending_ingest
+        assert tr._last_table is not None
+
+
 class TestSchedulerResilience:
     """Chaos + quarantine: the serving loop survives faulty and dead
     senders — recovering bit-identically under a RetryPolicy, degrading
