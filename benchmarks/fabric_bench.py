@@ -1,0 +1,212 @@
+"""Serving-fabric benchmarks: what the fleet costs and what routing buys.
+
+Three sweeps over real ``KVServer`` fleets (every replica a live
+threaded server on a loopback socket, the router a real ``KVClient``
+per replica):
+
+  failover    — kill the serving replica at scripted mid-stream
+                boundaries; rows report the failover request's latency
+                vs the clean-floor request latency, the hop count, and
+                the replayed share's bytes (dedup-bounded: pages shipped
+                <= pages referenced; repeats after the hop ship zero).
+  affinity    — the SAME repeated-prefix stream routed by the affinity
+                scorer vs blind round-robin at fan-out N in {2, 4}: the
+                fleet-level page hit-rate is the dedup win KV-aware
+                routing exists for.
+  occupancy   — per-replica served-request counts for the affinity runs
+                (spread = max - min): affinity concentrates repeats by
+                design; the row quantifies what that skew costs.
+
+Writes ``BENCH_fabric.json`` at the repo root (CI uploads it as an
+artifact); env knobs: REPRO_FABRIC_REQS (distinct contexts, default 4),
+REPRO_FABRIC_REPEATS (repeats per context, default 3),
+REPRO_FABRIC_MAXNEW (tokens per request, default 2), REPRO_FABRIC_WIRE
+(default float16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.comm import Agent
+from repro.core.types import KVCommConfig
+from repro.launch.remote_serve import KVServer
+from repro.serving.fabric import (FleetEvent, FleetHarness, FleetSchedule,
+                                  Replica, ReplicaSet, Router, RouterConfig)
+from repro.serving.scheduler import Request
+from repro.store import PageStore
+
+N_CTX = int(os.environ.get("REPRO_FABRIC_REQS", "4"))
+REPEATS = int(os.environ.get("REPRO_FABRIC_REPEATS", "3"))
+MAX_NEW = int(os.environ.get("REPRO_FABRIC_MAXNEW", "2"))
+WIRE = os.environ.get("REPRO_FABRIC_WIRE", "float16")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fabric.json")
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+PAGE_LEN = 16
+
+
+def _requests(tok) -> list:
+    """A repeated-prefix stream: N_CTX distinct contexts, each asked
+    REPEATS times (distinct queries) — the traffic shape affinity
+    routing monetizes."""
+    batch = common.eval_batch(tok, "countries", N_CTX * REPEATS)
+    reqs = []
+    for i in range(N_CTX * REPEATS):
+        ctx = batch["context"][(i // REPEATS) * REPEATS]
+        reqs.append(Request(rid=i, context=np.asarray(ctx, np.int32),
+                            query=np.asarray(batch["query"][i], np.int32),
+                            max_new=MAX_NEW))
+    return reqs
+
+
+class _Fleet:
+    def __init__(self, cfg, tok, receiver_params, sender_params, *, n,
+                 schedule=None, policy="affinity"):
+        self.cfg, self.tok, self.params = cfg, tok, receiver_params
+
+        def build(rid, port=0):
+            return KVServer(Agent(f"recv-{rid}", cfg, receiver_params,
+                                  tok),
+                            port=port, store=PageStore(page_len=PAGE_LEN))
+
+        servers, self.replicas = {}, ReplicaSet()
+        for i in range(n):
+            rid = f"r{i}"
+            servers[rid] = build(rid)
+            self.replicas.add(Replica(rid, servers[rid].host,
+                                      servers[rid].port,
+                                      connect_timeout_s=0.25))
+        self.harness = FleetHarness(self.replicas, servers, build,
+                                    schedule or FleetSchedule())
+        self.harness.start()
+        self.router = Router(
+            Agent("sender", cfg, sender_params, tok), KVCFG,
+            self.replicas,
+            config=RouterConfig(wire_dtype=WIRE, page_len=PAGE_LEN,
+                                policy=policy))
+
+    def close(self):
+        self.router.close()
+        self.harness.stop()
+
+
+def bench_failover(cfg, tok, rparams, sparams, reqs) -> list:
+    """Clean floor first, then one kill schedule per boundary: the
+    failover request's latency against the floor, and the replay's
+    dedup accounting."""
+    rows = []
+    fleet = _Fleet(cfg, tok, rparams, sparams, n=2)
+    try:
+        lat = []
+        for req in reqs:
+            t0 = time.perf_counter()
+            fleet.router.submit(req)
+            lat.append(time.perf_counter() - t0)
+        floor_ms = float(np.mean(lat[1:])) * 1e3    # [0] pays compiles
+        rows.append({"sweep": "failover", "schedule": "clean",
+                     "floor_ms": floor_ms,
+                     "metrics": fleet.router.metrics()})
+        print(f"clean floor: {floor_ms:.1f} ms/request")
+    finally:
+        fleet.close()
+    for kill_at in (2, len(reqs) // 2):
+        schedule = FleetSchedule([FleetEvent(kill_at, "kill", "r0")])
+        fleet = _Fleet(cfg, tok, rparams, sparams, n=2,
+                       schedule=schedule)
+        try:
+            lat = []
+
+            def timed(i, req):
+                fleet.harness.before(i)
+                t0 = time.perf_counter()
+                fleet.router.submit(req)
+                lat.append(time.perf_counter() - t0)
+
+            for i, req in enumerate(reqs):
+                timed(i, req)
+            routes = {r.rid: r for r in fleet.router.routes}
+            hops = [r.rid for r in fleet.router.routes if r.hops]
+            hop = min(hops) if hops else None
+            row = {
+                "sweep": "failover", "schedule": f"kill@{kill_at}",
+                "floor_ms": floor_ms,
+                "failover_ms": (float(lat[hop]) * 1e3
+                                if hop is not None else None),
+                "failovers": len(hops),
+                "degradations": len(fleet.router.degradations),
+                "replay_pages_sent": (routes[hop].pages_sent
+                                      if hop is not None else None),
+                "replay_pages_total": (routes[hop].pages_total
+                                       if hop is not None else None),
+                "post_hop_pages_sent": sum(
+                    r.pages_sent for r in fleet.router.routes
+                    if hop is not None and r.rid > hop),
+                "metrics": fleet.router.metrics(),
+            }
+            rows.append(row)
+            if hop is not None:
+                print(f"kill@{kill_at}: failover {row['failover_ms']:.1f} "
+                      f"ms (floor {floor_ms:.1f}), replay shipped "
+                      f"{row['replay_pages_sent']}/"
+                      f"{row['replay_pages_total']} pages")
+        finally:
+            fleet.close()
+    return rows
+
+
+def bench_affinity(cfg, tok, rparams, sparams, reqs) -> list:
+    """Affinity vs round-robin page hit-rate at fan-out N in {2, 4},
+    plus the per-replica occupancy spread of the affinity run."""
+    rows = []
+    for n in (2, 4):
+        rates = {}
+        for policy in ("affinity", "round_robin"):
+            fleet = _Fleet(cfg, tok, rparams, sparams, n=n,
+                           policy=policy)
+            try:
+                comps, metrics = fleet.router.run(reqs)
+                assert len(comps) == len(reqs)
+                rates[policy] = metrics
+            finally:
+                fleet.close()
+        served = rates["affinity"]["served"]
+        counts = [served[r] for r in sorted(served)]
+        row = {
+            "sweep": "affinity", "fanout": n,
+            "affinity_hit_rate": rates["affinity"]["page_hit_rate"],
+            "round_robin_hit_rate":
+                rates["round_robin"]["page_hit_rate"],
+            "affinity_bytes": rates["affinity"]["bytes"],
+            "round_robin_bytes": rates["round_robin"]["bytes"],
+            "served_per_replica": counts,
+            "occupancy_spread": max(counts) - min(counts),
+        }
+        rows.append(row)
+        print(f"fanout {n}: affinity hit-rate "
+              f"{row['affinity_hit_rate']:.3f} vs round-robin "
+              f"{row['round_robin_hit_rate']:.3f}; served {counts} "
+              f"(spread {row['occupancy_spread']})")
+    return rows
+
+
+def main() -> None:
+    cfg, tok, sender, receiver = common.load_pair()
+    reqs = _requests(tok)
+    rows = []
+    rows += bench_failover(cfg, tok, receiver, sender, reqs)
+    rows += bench_affinity(cfg, tok, receiver, sender, reqs)
+    out = {"wire_dtype": WIRE, "contexts": N_CTX, "repeats": REPEATS,
+           "max_new": MAX_NEW, "page_len": PAGE_LEN, "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

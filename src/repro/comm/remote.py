@@ -486,6 +486,81 @@ def read_frame(channel: RemoteChannel
     return kind, meta, arrays
 
 
+# ---------------------------------------------------------------------------
+# the health payload (liveness + routing signals)
+# ---------------------------------------------------------------------------
+# Version 1 carried {"answered", "prefix_installed", "pool"}; version 2 adds
+# the routing signals the serving fabric scores replicas by: the pool's
+# resident page IDs (prefix-affinity overlap), scheduler queue depth, and
+# slot occupancy.  The meta rides an ordinary "health_ack" frame, so the
+# FRAME protocol version is untouched — mixed-version fleets never raise
+# ``VersionSkew`` over a health probe; ``parse_health_meta`` fills whatever
+# keys an older peer omitted with inert defaults.
+HEALTH_META_VERSION = 2
+
+HEALTH_DEFAULTS: Dict[str, Any] = {
+    "health_version": 1,           # a payload without the field IS v1
+    "answered": 0,
+    "prefix_installed": False,
+    "pool": None,                  # dict of StoreStats fields, or None
+    "page_ids": [],                # resident page ids (affinity signal)
+    "queue_depth": 0,              # connections + queries waiting/served
+    "slots": {"capacity": 0, "occupied": 0},
+}
+
+
+def build_health_meta(*, answered: int, prefix_installed: bool,
+                      pool: Optional[Dict[str, Any]] = None,
+                      page_ids: Optional[list] = None,
+                      queue_depth: int = 0,
+                      slots_capacity: int = 0,
+                      slots_occupied: int = 0) -> Dict[str, Any]:
+    """The v2 health_ack meta a server answers a ``health`` frame with."""
+    return {
+        "health_version": HEALTH_META_VERSION,
+        "answered": int(answered),
+        "prefix_installed": bool(prefix_installed),
+        "pool": pool,
+        "page_ids": list(page_ids) if page_ids is not None else [],
+        "queue_depth": int(queue_depth),
+        "slots": {"capacity": int(slots_capacity),
+                  "occupied": int(slots_occupied)},
+    }
+
+
+def parse_health_meta(meta: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalize a health_ack meta of ANY version into the v2 shape.
+
+    Version-tolerant by construction: every key an older (or newer) peer
+    does not send falls back to ``HEALTH_DEFAULTS``, and malformed nested
+    values degrade to the defaults rather than raising — a router must be
+    able to score a mixed-version fleet, not crash on its oldest member."""
+    if not isinstance(meta, dict):
+        raise PayloadMismatchError(
+            f"health_ack meta must be a dict, got {type(meta).__name__}")
+    out = dict(HEALTH_DEFAULTS)
+    out["slots"] = dict(HEALTH_DEFAULTS["slots"])
+    for key in ("health_version", "answered", "queue_depth"):
+        try:
+            out[key] = int(meta.get(key, out[key]))
+        except (TypeError, ValueError):
+            pass
+    out["prefix_installed"] = bool(meta.get("prefix_installed", False))
+    pool = meta.get("pool")
+    out["pool"] = pool if isinstance(pool, dict) else None
+    page_ids = meta.get("page_ids")
+    if isinstance(page_ids, (list, tuple)):
+        out["page_ids"] = [str(p) for p in page_ids]
+    slots = meta.get("slots")
+    if isinstance(slots, dict):
+        for key in ("capacity", "occupied"):
+            try:
+                out["slots"][key] = int(slots.get(key, 0))
+            except (TypeError, ValueError):
+                pass
+    return out
+
+
 def decode_frame(buf: bytes
                  ) -> Tuple[str, Dict[str, Any], Dict[str, np.ndarray]]:
     """Decode one frame from a contiguous byte string (a convenience over

@@ -176,6 +176,19 @@ class CircuitBreaker:
             self._probing = True
         return True
 
+    def peek(self) -> str:
+        """The breaker's CURRENT state ("closed" | "open" | "half-open"),
+        applying the open -> half-open timeout transition but NOT
+        consuming the half-open single-probe slot — ``allow()`` with no
+        side effect beyond the time-driven transition.  The fabric's
+        affinity scorer ranks replicas by this without stealing the
+        trial slot from the call that will actually probe the peer."""
+        if self.state == "open" and \
+                self._clock() - self._opened_at >= self.reset_timeout_s:
+            self.state = "half-open"
+            self._probing = False
+        return self.state
+
     def record_success(self) -> None:
         self.state = "closed"
         self.failures = 0

@@ -31,24 +31,33 @@ predictions bit-for-bit against an in-process ``InMemoryTransport`` run.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import socket
 import sys
-from typing import Optional, Tuple
+import threading
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.comm.agent import Agent
 from repro.comm.remote import (ChannelClosedError, RemoteChannel,
                                RemoteProtocolError, SocketChannel,
-                               encode_frame, read_frame, send_shared)
+                               build_health_meta, encode_frame, read_frame,
+                               send_shared)
 from repro.core.types import KVCommConfig, SharedKV
+
+# how many resident page IDs a health_ack ships as the affinity signal
+# (newest-touched first to go; see ``PageStore.resident_ids``) — bounds the
+# probe frame even against a huge pool
+HEALTH_PAGE_IDS_LIMIT = 4096
 
 
 # ---------------------------------------------------------------------------
 # server half (receiver side)
 # ---------------------------------------------------------------------------
-def serve_channel(agent: Agent, channel: RemoteChannel,
-                  store=None) -> int:
+def serve_channel(agent: Agent, channel: RemoteChannel, store=None, *,
+                  lock=None,
+                  health_extra: Optional[Callable[[], Dict]] = None) -> int:
     """The receiver-side protocol loop, channel-agnostic (tests drive it
     over a loopback).  A clean peer close ends the loop; a *mid-frame*
     disconnect or corrupt frame propagates as the typed
@@ -61,12 +70,21 @@ def serve_channel(agent: Agent, channel: RemoteChannel,
     the materialized prefix — the content-addressed cache server.  The
     installed prefix's block table stays pinned (its pages cannot be
     evicted out from under in-flight queries) until the next paged
-    transfer replaces it."""
+    transfer replaces it.
+
+    ``lock`` (any context manager) serializes FRAME HANDLING, not frame
+    reads: a concurrent server hands every connection its shared lock, so
+    two clients' model/store work never interleaves, while a stalled
+    client blocks only its own read — never the fleet (the head-of-line
+    fix ``KVServer.serve`` relies on).  ``health_extra`` supplies the
+    server-level routing signals (queue depth, slot occupancy) folded
+    into the v2 ``health_ack`` payload."""
     from repro.comm.remote import decode_kv_transfer
     paged_rx = pinned = None
     if store is not None:
         from repro.store.wire import PagedReceiver
         paged_rx = PagedReceiver(store)
+    guard = lock if lock is not None else contextlib.nullcontext()
     shared: Optional[SharedKV] = None
     answered = 0
     try:
@@ -77,68 +95,173 @@ def serve_channel(agent: Agent, channel: RemoteChannel,
                 break              # peer hung up between frames: clean end
             if kind == "shutdown":
                 break
-            if kind == "shared_kv":
-                shared, _ = decode_kv_transfer(meta, arrays)
-            elif kind == "page_query" and paged_rx is not None:
-                channel.write(paged_rx.handle_query(meta, arrays))
-            elif kind == "page_data" and paged_rx is not None:
-                shared, table, _, _ = paged_rx.handle_data(meta, arrays)
-                if pinned is not None:
-                    store.release(pinned)
-                pinned = table
-            elif kind == "health":
-                # liveness + state probe: answers even with no prefix
-                # installed, so clients (and circuit breakers) can tell a
-                # live-but-idle server from a dead one
-                pool = None
-                if store is not None:
-                    import dataclasses
-                    pool = dataclasses.asdict(store.stats())
-                channel.write(encode_frame(
-                    "health_ack",
-                    {"answered": answered,
-                     "prefix_installed": shared is not None,
-                     "pool": pool}, {}))
-            elif kind == "query":
-                if shared is None:
-                    # answering from no prefix would be confidently wrong,
-                    # not an error the client could see — refuse loudly
+            with guard:
+                if kind == "shared_kv":
+                    shared, _ = decode_kv_transfer(meta, arrays)
+                elif kind == "page_query" and paged_rx is not None:
+                    channel.write(paged_rx.handle_query(meta, arrays))
+                elif kind == "page_data" and paged_rx is not None:
+                    shared, table, _, _ = paged_rx.handle_data(meta, arrays)
+                    if pinned is not None:
+                        store.release(pinned)
+                    pinned = table
+                elif kind == "health":
+                    # liveness + state probe: answers even with no prefix
+                    # installed, so clients (and circuit breakers) can tell
+                    # a live-but-idle server from a dead one.  The v2
+                    # payload carries the routing signals the fabric's
+                    # affinity scorer consumes; old clients simply ignore
+                    # the extra keys (and old servers' v1 payloads parse
+                    # fine — see ``remote.parse_health_meta``).
+                    pool = page_ids = None
+                    if store is not None:
+                        import dataclasses
+                        pool = dataclasses.asdict(store.stats())
+                        page_ids = store.resident_ids(
+                            limit=HEALTH_PAGE_IDS_LIMIT)
+                    extra = health_extra() if health_extra is not None \
+                        else {}
+                    channel.write(encode_frame(
+                        "health_ack",
+                        build_health_meta(
+                            answered=answered,
+                            prefix_installed=shared is not None,
+                            pool=pool, page_ids=page_ids, **extra), {}))
+                elif kind == "query":
+                    if shared is None:
+                        # answering from no prefix would be confidently
+                        # wrong, not an error the client could see —
+                        # refuse loudly
+                        raise RemoteProtocolError(
+                            "query frame before any shared_kv frame")
+                    tokens = np.asarray(arrays["tokens"], np.int32)
+                    max_new = int(meta.get("max_new", 1))
+                    toks, _ = agent.generate(tokens, shared,
+                                             max_new=max_new)
+                    channel.write(encode_frame(
+                        "tokens", {},
+                        {"tokens": np.asarray(toks, np.int32)}))
+                    answered += 1
+                else:
                     raise RemoteProtocolError(
-                        "query frame before any shared_kv frame")
-                tokens = np.asarray(arrays["tokens"], np.int32)
-                max_new = int(meta.get("max_new", 1))
-                toks, _ = agent.generate(tokens, shared, max_new=max_new)
-                channel.write(encode_frame(
-                    "tokens", {}, {"tokens": np.asarray(toks, np.int32)}))
-                answered += 1
-            else:
-                raise RemoteProtocolError(
-                    f"unexpected frame kind {kind!r}")
+                        f"unexpected frame kind {kind!r}")
     finally:
         # error paths (mid-frame disconnect, corrupt frame, a raising
         # handler) must release the installed prefix too, or every dead
         # connection leaks a pinned table into the pool
         if pinned is not None:
-            store.release(pinned)
+            with guard:
+                store.release(pinned)
     return answered
+
+
+class _CountingLock:
+    """An RLock that counts current DEMAND (holders + waiters).  The
+    server's health probe reports it as queue depth: how many connection
+    handlers want the serve lock right now — the work the server has not
+    gotten to yet (minus the probing handler itself)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._guard = threading.Lock()
+        self._demand = 0
+
+    @property
+    def demand(self) -> int:
+        with self._guard:
+            return self._demand
+
+    def __enter__(self) -> "_CountingLock":
+        with self._guard:
+            self._demand += 1
+        self._lock.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._lock.release()
+        with self._guard:
+            self._demand -= 1
 
 
 class KVServer:
     """Serves ONE receiver agent over the frame protocol.  The listener is
     bound at construction (so ``port`` is known before the client dials);
-    ``serve_once`` accepts a single connection and serves it to shutdown."""
+    ``serve_once`` accepts a single connection and serves it to shutdown.
+
+    ``serve``/``start`` run a CONCURRENT accept loop: every accepted
+    connection gets its own handler thread, with frame HANDLING (model +
+    store work) serialized under one shared lock while frame READS stay
+    per-thread — a slow or stalled client holds nothing, so it can never
+    head-of-line-block the other connections (the fleet requirement the
+    serving fabric routes over).  ``start``/``stop`` are the fabric's
+    replica lifecycle: a background accept loop that keeps admitting
+    clients until stopped (kill) and can be rebuilt on the same port
+    (restart)."""
 
     def __init__(self, agent: Agent, host: str = "127.0.0.1",
-                 port: int = 0, store=None) -> None:
+                 port: int = 0, store=None, max_conns: int = 8) -> None:
         self.agent = agent
         self.store = store   # repro.store.PageStore: the evicting pool the
                              # paged wire dedups against across connections
+        self.max_conns = max_conns
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
-        self._listener.listen(1)
+        self._listener.listen(max_conns)
         self.host, self.port = self._listener.getsockname()[:2]
+        self._lock = _CountingLock()        # serializes frame handling
+        self._guard = threading.Lock()      # guards the bookkeeping below
+        self._conns: Set[socket.socket] = set()
+        self._threads: List[threading.Thread] = []
+        self._accept_thread: Optional[threading.Thread] = None
+        self._stopping = False
+        self.answered_total = 0             # query frames across all conns
 
+    # -- health signals ------------------------------------------------------
+    def _health_extra(self) -> Dict:
+        """The server-level routing signals a v2 health_ack carries:
+        queue depth (handlers wanting the serve lock, the probing one
+        excluded) and slot occupancy (live connections / max)."""
+        with self._guard:
+            occupied = len(self._conns)
+        return {"queue_depth": max(0, self._lock.demand - 1),
+                "slots_capacity": self.max_conns,
+                "slots_occupied": occupied}
+
+    # -- connection handling -------------------------------------------------
+    def _handle(self, sock: socket.socket) -> int:
+        try:
+            n = serve_channel(self.agent, SocketChannel(sock),
+                              store=self.store, lock=self._lock,
+                              health_extra=self._health_extra)
+            with self._guard:
+                self.answered_total += n
+            return n
+        except RemoteProtocolError as e:
+            # one client dying mid-frame must not take the server (and
+            # every other client) down with it
+            if not self._stopping:
+                print(f"[server] connection died: "
+                      f"{type(e).__name__}: {e}",
+                      file=sys.stderr, flush=True)
+            return 0
+        finally:
+            with self._guard:
+                self._conns.discard(sock)
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _spawn(self, sock: socket.socket) -> threading.Thread:
+        with self._guard:
+            self._conns.add(sock)
+        th = threading.Thread(target=self._handle, args=(sock,),
+                              daemon=True)
+        th.start()
+        return th
+
+    # -- serving modes -------------------------------------------------------
     def serve_once(self, timeout_s: float = 120.0) -> int:
         """Accept one client and serve until it shuts down / disconnects.
         Returns the number of query frames answered."""
@@ -152,39 +275,111 @@ class KVServer:
             self._listener.close()
 
     def serve(self, conns: int, timeout_s: float = 120.0) -> int:
-        """Accept ``conns`` sequential clients over the same listener.
-        The page pool outlives each connection, so a later client's
-        ``page_query`` dedups against every earlier client's pages —
-        this is what makes the paged server a cross-request cache.
+        """Accept ``conns`` clients over the same listener, each served on
+        its OWN thread — connections interleave, so a slow client never
+        blocks the others; the page pool is shared (a later client's
+        ``page_query`` dedups against every earlier client's pages — the
+        cross-request cache) and its mutation is serialized under the
+        frame-handling lock.
 
-        One client dying mid-frame must not take the server (and every
-        later client) down with it: protocol errors are logged and the
-        listener moves on to the next connection.  ``serve_once`` keeps
-        the strict single-connection semantics.  Returns the total number
-        of query frames answered."""
+        Protocol errors poison only their own connection (logged, the
+        rest keep going); ``serve_once`` keeps the strict
+        single-connection semantics.  Returns the total number of query
+        frames answered once every accepted connection completes."""
         self._listener.settimeout(timeout_s)
-        answered = 0
+        threads = []
         try:
             for _ in range(conns):
                 sock, _ = self._listener.accept()
-                try:
-                    answered += serve_channel(self.agent,
-                                              SocketChannel(sock),
-                                              store=self.store)
-                except RemoteProtocolError as e:
-                    print(f"[server] connection died: "
-                          f"{type(e).__name__}: {e}",
-                          file=sys.stderr, flush=True)
-                finally:
-                    sock.close()
+                threads.append(self._spawn(sock))
         finally:
+            for th in threads:
+                th.join()
             self._listener.close()
-        return answered
+        return self.answered_total
+
+    def start(self, poll_s: float = 0.05) -> None:
+        """Run the accept loop in a background thread until ``stop`` —
+        the fabric's replica lifecycle (a ``serve`` with no connection
+        quota)."""
+        if self._accept_thread is not None:
+            raise RuntimeError("server already started")
+        self._stopping = False
+        self._listener.settimeout(poll_s)
+
+        def loop() -> None:
+            while not self._stopping:
+                try:
+                    sock, _ = self._listener.accept()
+                except socket.timeout:
+                    continue
+                except OSError:
+                    break          # listener closed under us: stop()
+                self._threads.append(self._spawn(sock))
+
+        self._accept_thread = threading.Thread(target=loop, daemon=True)
+        self._accept_thread.start()
+
+    def stop(self, timeout_s: float = 5.0) -> None:
+        """Kill the replica: stop accepting, sever every live connection
+        (their handlers release any pinned block table on the way out —
+        no pin outlives a dead connection), and join the handler
+        threads.  Idempotent; a stopped server's port can be re-bound by
+        a fresh ``KVServer`` (the restart half of a chaos schedule)."""
+        self._stopping = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._guard:
+            conns = list(self._conns)
+        for sock in conns:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=timeout_s)
+            self._accept_thread = None
+        for th in self._threads:
+            th.join(timeout=timeout_s)
+        self._threads.clear()
 
 
 # ---------------------------------------------------------------------------
 # client half (sender side)
 # ---------------------------------------------------------------------------
+def export_pages(sender: Agent, context: np.ndarray, kvcfg: KVCommConfig,
+                 select, *, page_len: int = 16,
+                 wire_dtype: str = "float16"):
+    """Export the sender's selected KV over ``context`` and split it into
+    content-addressed pages — the sender-side half of a paged share,
+    WITHOUT any wire exchange.  Returns ``(table, pages, states,
+    state_select)``.  The serving fabric calls this once per request so
+    the router can score replicas by page-id overlap before a single
+    byte ships; ``KVClient.share_pages`` then ships the result."""
+    from repro import core
+    from repro.core.protocol import gather_selected
+    from repro.store.paging import split_payload
+    import jax.numpy as jnp
+    kv, states, _ = sender.export_kv(context)
+    state_select = None
+    if states is not None:
+        import jax
+        n_ssm = jax.tree.leaves(states)[0].shape[0]
+        state_select = np.ones((n_ssm,), bool)
+    payload = gather_selected(kv, jnp.asarray(select))
+    table, pages = split_payload(
+        payload, layers=core.selected_layer_ids(select),
+        select=np.asarray(select), page_len=page_len,
+        wire_dtype=wire_dtype, pos_mode=kvcfg.pos_mode)
+    return table, pages, states, state_select
+
+
 class KVClient:
     """The sender-side handle on a remote receiver.
 
@@ -286,23 +481,30 @@ class KVClient:
 
     def _share_paged_once(self, sender, context, kvcfg, select, page_len,
                           wire_dtype) -> Tuple[int, int, int]:
-        from repro import core
-        from repro.core.protocol import gather_selected
-        from repro.store.paging import split_payload
+        table, pages, states, state_select = export_pages(
+            sender, context, kvcfg, select, page_len=page_len,
+            wire_dtype=wire_dtype)
+        return self._share_pages_once(table, pages, wire_dtype, states,
+                                      state_select)
+
+    def share_pages(self, table, pages, *, wire_dtype: str = "float16",
+                    states=None, state_select=None) -> Tuple[int, int, int]:
+        """Ship an ALREADY-SPLIT page set (``repro.store.split_payload`` /
+        ``export_pages``) through the dedup handshake — the serving
+        fabric's entry point: the router splits once to score replicas by
+        page-id overlap, then ships the same table/pages to whichever
+        replica won.  Same retry/replay semantics as ``share_paged``."""
+        def once():
+            return self._share_pages_once(table, pages, wire_dtype,
+                                          states, state_select)
+        out = self._with_retry(once, "paged remote share", replay=False)
+        self._reshare = once
+        return out
+
+    def _share_pages_once(self, table, pages, wire_dtype, states,
+                          state_select) -> Tuple[int, int, int]:
         from repro.store.wire import (decode_page_need, encode_page_data,
                                       encode_page_query)
-        import jax.numpy as jnp
-        kv, states, _ = sender.export_kv(context)
-        state_select = None
-        if states is not None:
-            import jax
-            n_ssm = jax.tree.leaves(states)[0].shape[0]
-            state_select = np.ones((n_ssm,), bool)
-        payload = gather_selected(kv, jnp.asarray(select))
-        table, pages = split_payload(
-            payload, layers=core.selected_layer_ids(select),
-            select=np.asarray(select), page_len=page_len,
-            wire_dtype=wire_dtype, pos_mode=kvcfg.pos_mode)
         xid, self._xid = self._xid, self._xid + 1
         self.channel.write(encode_page_query(xid, table))
         kind, meta, _ = read_frame(self.channel)

@@ -1,0 +1,25 @@
+"""The multi-replica KV serving fabric.
+
+Assembles the PR-7 resilience primitives (health frame, breakers,
+degradation events) and the PR-6 paged dedup wire into a fleet:
+``Replica``/``ReplicaSet`` wrap kv_server endpoints, ``AffinityScorer``/
+``Router`` route each request to the replica that already holds its
+pages (failing over dedup-bounded when one dies), ``SchedulerPool``
+routes a mixed-``calib_key`` stream to per-selection schedulers, and
+``FleetSchedule``/``FleetHarness`` replay scripted kill/restart/
+partition chaos against the real servers.
+"""
+from repro.serving.fabric.chaos import (FLEET_ACTIONS, FleetEvent,
+                                        FleetHarness, FleetSchedule)
+from repro.serving.fabric.pools import SchedulerPool
+from repro.serving.fabric.replica import (HealthSnapshot, Replica,
+                                          ReplicaSet)
+from repro.serving.fabric.router import (AffinityScorer,
+                                         FleetExhaustedError, RouteRecord,
+                                         Router, RouterConfig)
+
+__all__ = [
+    "AffinityScorer", "FLEET_ACTIONS", "FleetEvent", "FleetExhaustedError",
+    "FleetHarness", "FleetSchedule", "HealthSnapshot", "Replica",
+    "ReplicaSet", "RouteRecord", "Router", "RouterConfig", "SchedulerPool",
+]

@@ -160,6 +160,18 @@ class PageStore:
     def _resident(self, table: BlockTable) -> Dict[str, Page]:
         return {pid: self.pool.get(pid) for pid in set(table.all_ids())}
 
+    def resident_ids(self, limit: Optional[int] = None) -> List[str]:
+        """Resident page IDs, most recently touched LAST (the pool's LRU
+        order).  ``limit`` keeps only the newest that many — the compact
+        affinity signal a health frame ships to the serving fabric's
+        router (recently touched pages are exactly the ones a prefix-
+        affinity score should credit, and the ones eviction spares
+        longest)."""
+        ids = self.pool.ids()
+        if limit is not None and len(ids) > limit:
+            ids = ids[-limit:]
+        return ids
+
     def stats(self) -> StoreStats:
         p = self.pool.stats()
         return StoreStats(

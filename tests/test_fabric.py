@@ -1,0 +1,483 @@
+"""The serving fabric under test: affinity scoring laws, health-signal
+versioning, calib_key scheduler pools, and the fleet chaos conformance
+suite.
+
+The conformance invariant mirrors PR-7's, one level up: under EVERY
+scripted kill/restart/partition schedule the routed output is
+token-parity with single-replica ``serve_serial``, replayed shares stay
+dedup-bounded, no pin outlives a connection, and every downgrade is a
+``DegradationEvent`` — chaos degrades requests, never correctness."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import core
+from repro.comm import Agent
+from repro.comm.remote import (HEALTH_META_VERSION, build_health_meta,
+                               parse_health_meta)
+from repro.comm.session import CommSession
+from repro.core.types import KVCommConfig
+from repro.launch.remote_serve import KVServer
+from repro.serving.fabric import (FleetEvent, FleetExhaustedError,
+                                  FleetHarness, FleetSchedule,
+                                  HealthSnapshot, Replica, ReplicaSet,
+                                  Router, RouterConfig, SchedulerPool)
+from repro.serving.fabric.router import AffinityScorer
+from repro.serving.scheduler import Request, serve_serial
+from repro.store import PageStore
+
+KVCFG = KVCommConfig(ratio=0.5, selector="prior_only")
+
+
+# ---------------------------------------------------------------------------
+# fleet plumbing
+# ---------------------------------------------------------------------------
+def _agent(name, tiny_cfg, tiny_params, tok):
+    return Agent(name, tiny_cfg, tiny_params, tok)
+
+
+def _requests(rng, n, *, ctx_len=7, q_len=4, max_new=3, vocab=None,
+              repeats=1):
+    """A request stream; ``repeats`` > 1 reuses each context that many
+    times (the repeated-prefix traffic affinity routing exists for)."""
+    reqs = []
+    for i in range(n):
+        if i % repeats == 0 or not reqs:
+            ctx = rng.integers(4, vocab, (ctx_len,)).astype(np.int32)
+        else:
+            ctx = reqs[-1].context
+        reqs.append(Request(
+            rid=i, context=ctx,
+            query=rng.integers(4, vocab, (q_len,)).astype(np.int32),
+            max_new=max_new))
+    return reqs
+
+
+class _Fleet:
+    """N live replicas + harness + router, torn down leak-checked."""
+
+    def __init__(self, tiny_cfg, tiny_params, tok, *, n=2, schedule=None,
+                 fallback=True, policy="affinity"):
+        self.all_servers = []        # every server ever built (restarts too)
+
+        def build(rid, port=0):
+            srv = KVServer(
+                _agent(f"recv-{rid}", tiny_cfg, tiny_params, tok),
+                port=port, store=PageStore(page_len=4))
+            self.all_servers.append(srv)
+            return srv
+
+        servers = {}
+        self.replicas = ReplicaSet()
+        for i in range(n):
+            rid = f"r{i}"
+            servers[rid] = build(rid)
+            self.replicas.add(Replica(
+                rid, servers[rid].host, servers[rid].port,
+                connect_timeout_s=0.25, io_timeout_s=10.0))
+        self.harness = FleetHarness(self.replicas, servers, build,
+                                    schedule or FleetSchedule())
+        self.harness.start()
+        fb = CommSession(_agent("s-fb", tiny_cfg, tiny_params, tok),
+                         _agent("r-fb", tiny_cfg, tiny_params, tok)) \
+            if fallback else None
+        self.router = Router(
+            _agent("sender", tiny_cfg, tiny_params, tok), KVCFG,
+            self.replicas,
+            config=RouterConfig(wire_dtype="float32", page_len=4,
+                                probe_ttl_s=0.0, policy=policy),
+            fallback=fb)
+
+    def close(self):
+        self.router.close()
+        self.harness.stop()
+
+    def assert_no_leaked_pins(self):
+        """EVERY server ever built — killed, restarted, or surviving —
+        must end with zero pinned bytes once its connections are gone."""
+        for srv in self.all_servers:
+            if srv.store is not None:
+                assert srv.store.stats().pinned_bytes == 0, \
+                    f"leaked pins on {srv.host}:{srv.port}"
+
+
+def _reference(requests, tiny_cfg, tiny_params, tok):
+    sess = CommSession(_agent("s-ref", tiny_cfg, tiny_params, tok),
+                       _agent("r-ref", tiny_cfg, tiny_params, tok))
+    comps, _ = serve_serial(sess, requests, KVCFG)
+    return comps
+
+
+def _assert_parity(comps, ref):
+    assert [c.rid for c in comps] == [r.rid for r in ref]
+    for c, r in zip(comps, ref):
+        np.testing.assert_array_equal(c.tokens, r.tokens)
+
+
+# ---------------------------------------------------------------------------
+# affinity scorer laws (hypothesis)
+# ---------------------------------------------------------------------------
+def _fake_replica(rid, *, page_ids=(), queue=0, occupied=0, capacity=8,
+                  state="closed", at=0.0):
+    r = Replica(rid, "127.0.0.1", 1)     # never dialed: scoring is pure
+    r.snapshot = HealthSnapshot(
+        replica_id=rid, at=at, page_ids=frozenset(page_ids),
+        queue_depth=queue, slots_occupied=occupied,
+        slots_capacity=capacity)
+    if state == "open":
+        r.breaker.state = "open"
+        r.breaker._opened_at = 1e18      # never half-opens in-test
+    elif state == "half-open":
+        r.breaker.state = "half-open"
+    return r
+
+
+@st.composite
+def _fleet_specs(draw):
+    n = draw(st.integers(2, 5))
+    specs = []
+    for i in range(n):
+        specs.append({
+            "rid": f"r{i}",
+            "page_ids": draw(st.sets(st.sampled_from(
+                [f"p{j}" for j in range(8)]), max_size=8)),
+            "queue": draw(st.integers(0, 5)),
+            "occupied": draw(st.integers(0, 8)),
+            "state": draw(st.sampled_from(
+                ["closed", "open", "half-open"])),
+        })
+    want = draw(st.sets(st.sampled_from(
+        [f"p{j}" for j in range(8)]), min_size=1, max_size=8))
+    return specs, frozenset(want)
+
+
+class TestAffinityScorerLaws:
+    def test_monotone_in_overlap_exact(self):
+        """More of the request's pages resident => never a lower score,
+        all else equal."""
+        sc = AffinityScorer()
+        want = frozenset(f"p{i}" for i in range(6))
+        prev = -1e9
+        for k in range(7):
+            snap = HealthSnapshot(replica_id="r", at=0.0,
+                                  page_ids=frozenset(list(want)[:k]))
+            s = sc.score(want, snap, "closed", now=0.0)
+            assert s >= prev
+            prev = s
+
+    @given(_fleet_specs())
+    @settings(max_examples=40, deadline=None)
+    def test_rank_is_deterministic(self, spec):
+        specs, want = spec
+        sc = AffinityScorer()
+        fleets = [[_fake_replica(**s) for s in specs] for _ in range(2)]
+        orders = [[r.replica_id for r in sc.rank(f, want, now=10.0)]
+                  for f in fleets]
+        assert orders[0] == orders[1]
+
+    @given(_fleet_specs())
+    @settings(max_examples=40, deadline=None)
+    def test_open_breaker_never_beats_a_healthy_replica(self, spec):
+        specs, want = spec
+        sc = AffinityScorer()
+        fleet = [_fake_replica(**s) for s in specs]
+        order = sc.rank(fleet, want, now=10.0)
+        states = {s["rid"]: s["state"] for s in specs}
+        seen_open = False
+        for r in order:
+            if states[r.replica_id] == "open":
+                seen_open = True
+            else:
+                assert not seen_open, \
+                    "a non-open replica ranked below an open one"
+
+    @given(st.integers(2, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_ties_break_by_replica_id(self, n):
+        sc = AffinityScorer()
+        fleet = [_fake_replica(f"r{i}", page_ids={"p0"}) for i in range(n)]
+        order = [r.replica_id for r in sc.rank(
+            fleet, frozenset({"p0"}), now=10.0)]
+        assert order == sorted(order)
+
+    @given(_fleet_specs(), st.integers(0, 7))
+    @settings(max_examples=40, deadline=None)
+    def test_adding_overlap_never_demotes(self, spec, extra):
+        """Granting one replica an extra wanted page can only move it UP
+        the ranking relative to untouched peers."""
+        specs, want = spec
+        page = f"p{extra}"
+        if page not in want:
+            want = want | {page}
+        sc = AffinityScorer()
+        base = [_fake_replica(**s) for s in specs]
+        before = [r.replica_id for r in sc.rank(base, want, now=10.0)]
+        boosted = [_fake_replica(**{
+            **s, "page_ids": set(s["page_ids"]) | {page}
+            if s["rid"] == specs[0]["rid"] else s["page_ids"]})
+            for s in specs]
+        after = [r.replica_id for r in sc.rank(boosted, want, now=10.0)]
+        assert after.index(specs[0]["rid"]) <= before.index(specs[0]["rid"])
+
+
+# ---------------------------------------------------------------------------
+# health-signal versioning
+# ---------------------------------------------------------------------------
+class TestHealthVersioning:
+    def test_v1_payload_parses_with_defaults(self):
+        """What a PR-7 server sends (no version field, no routing keys)
+        must keep parsing in a mixed-version fleet."""
+        v1 = {"answered": 3, "prefix_installed": True,
+              "pool": {"pages": 2, "hit_rate": 0.5}}
+        h = parse_health_meta(v1)
+        assert h["health_version"] == 1
+        assert h["answered"] == 3 and h["prefix_installed"] is True
+        assert h["page_ids"] == [] and h["queue_depth"] == 0
+        assert h["slots"] == {"capacity": 0, "occupied": 0}
+        snap = HealthSnapshot.from_meta("r0", v1, at=1.0)
+        assert snap.pages == 2 and snap.occupancy == 0.0
+
+    def test_future_payload_keys_are_ignored(self):
+        meta = build_health_meta(answered=1, prefix_installed=False)
+        meta["health_version"] = HEALTH_META_VERSION + 1
+        meta["wholly_new_signal"] = {"x": 1}
+        h = parse_health_meta(meta)
+        assert h["answered"] == 1
+        assert "wholly_new_signal" not in h
+
+    def test_malformed_nested_values_degrade_not_raise(self):
+        h = parse_health_meta({"answered": "nan?", "slots": "broken",
+                               "page_ids": 7, "pool": ["not", "a", "dict"]})
+        assert h["answered"] == 0 and h["pool"] is None
+        assert h["page_ids"] == []
+        with pytest.raises(Exception):
+            parse_health_meta(["not", "a", "dict"])
+
+    def test_live_probe_carries_routing_signals(self, tiny_cfg,
+                                                tiny_params, tok):
+        """A live v2 server reports pool stats, resident page ids, queue
+        depth, and slot occupancy through ``Replica.probe``."""
+        srv = KVServer(_agent("r", tiny_cfg, tiny_params, tok),
+                       store=PageStore(page_len=4), max_conns=4)
+        srv.start()
+        rep = Replica("r0", srv.host, srv.port, connect_timeout_s=2.0)
+        try:
+            snap = rep.probe()
+            assert snap.slots_capacity == 4 and snap.slots_occupied == 1
+            assert snap.queue_depth == 0 and snap.pages == 0
+            sender = _agent("s", tiny_cfg, tiny_params, tok)
+            select = core.make_selection(tiny_cfg, KVCFG)
+            ctx = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1), (2, 7), 4, tiny_cfg.vocab_size))
+            rep.client.share_paged(sender, ctx, KVCFG, select,
+                                   page_len=4, wire_dtype="float32")
+            snap = rep.probe()
+            assert snap.pages > 0
+            assert len(snap.page_ids) == snap.pages
+            assert snap.prefix_installed
+            assert rep.breaker.state == "closed"
+        finally:
+            rep.close()
+            srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# concurrent server + fleet chaos conformance
+# ---------------------------------------------------------------------------
+class TestFleetConformance:
+    def test_clean_fleet_parity_and_affinity_dedup(self, tiny_cfg,
+                                                   tiny_params, tok):
+        """No chaos: routed == serial token-for-token, and repeated
+        contexts route back to the replica holding their pages (pages
+        shipped < pages referenced)."""
+        rng = np.random.default_rng(0)
+        reqs = _requests(rng, 6, vocab=tiny_cfg.vocab_size, repeats=3)
+        fleet = _Fleet(tiny_cfg, tiny_params, tok, n=2)
+        try:
+            comps, metrics = fleet.router.run(reqs)
+            _assert_parity(comps, _reference(reqs, tiny_cfg, tiny_params,
+                                             tok))
+            assert metrics["failovers"] == 0 and metrics["local"] == 0
+            assert metrics["pages_sent"] < metrics["pages_total"]
+            assert fleet.router.degradations == []
+        finally:
+            fleet.close()
+        fleet.assert_no_leaked_pins()
+
+    def test_kill_midstream_fails_over_dedup_bounded(self, tiny_cfg,
+                                                     tiny_params, tok):
+        """The CI smoke in test form: kill the serving replica
+        mid-stream — the re-route replays the share on the survivor, the
+        replay ships at most one full table, repeats after it ship
+        nothing, and the hop is a DegradationEvent."""
+        rng = np.random.default_rng(1)
+        reqs = _requests(rng, 5, vocab=tiny_cfg.vocab_size, repeats=5)
+        schedule = FleetSchedule([FleetEvent(2, "kill", "r0")])
+        fleet = _Fleet(tiny_cfg, tiny_params, tok, n=2,
+                       schedule=schedule)
+        try:
+            comps, metrics = fleet.router.run(
+                reqs, before=fleet.harness.before)
+            _assert_parity(comps, _reference(reqs, tiny_cfg, tiny_params,
+                                             tok))
+            assert metrics["failovers"] >= 1 and metrics["local"] == 0
+            events = fleet.router.degradations
+            assert len(events) >= 1
+            assert all(e.from_stage.startswith("replica:")
+                       for e in events)
+            routes = {r.rid: r for r in fleet.router.routes}
+            # the failover request replays dedup-bounded: it ships at
+            # most its own table...
+            hop = min(r.rid for r in fleet.router.routes if r.hops)
+            assert routes[hop].pages_sent <= routes[hop].pages_total
+            # ...and later repeats of the same context on the new
+            # replica ship ZERO pages (the pool now holds them)
+            later = [r for r in fleet.router.routes if r.rid > hop]
+            assert later and all(r.pages_sent == 0 for r in later)
+        finally:
+            fleet.close()
+        fleet.assert_no_leaked_pins()
+
+    def test_partition_reroutes_and_heals(self, tiny_cfg, tiny_params,
+                                          tok):
+        """A partitioned replica is unreachable (requests re-route) but
+        its server stays healthy; healing restores it to the fleet."""
+        rng = np.random.default_rng(2)
+        reqs = _requests(rng, 5, vocab=tiny_cfg.vocab_size, repeats=2)
+        schedule = FleetSchedule([FleetEvent(1, "partition", "r0"),
+                                  FleetEvent(3, "heal", "r0")])
+        fleet = _Fleet(tiny_cfg, tiny_params, tok, n=2,
+                       schedule=schedule)
+        try:
+            comps, metrics = fleet.router.run(
+                reqs, before=fleet.harness.before)
+            _assert_parity(comps, _reference(reqs, tiny_cfg, tiny_params,
+                                             tok))
+            assert metrics["local"] == 0
+            assert metrics["served"]["r1"] >= 2
+        finally:
+            fleet.close()
+        fleet.assert_no_leaked_pins()
+
+    def test_whole_fleet_down_degrades_to_local_ladder(self, tiny_cfg,
+                                                       tiny_params, tok):
+        """Every replica dead: the request lands on the local fallback
+        session (stage 'local'), parity intact — and with no fallback
+        configured the router raises the typed FleetExhaustedError."""
+        rng = np.random.default_rng(3)
+        reqs = _requests(rng, 3, vocab=tiny_cfg.vocab_size)
+        schedule = FleetSchedule([FleetEvent(1, "kill", "r0"),
+                                  FleetEvent(1, "kill", "r1")])
+        fleet = _Fleet(tiny_cfg, tiny_params, tok, n=2,
+                       schedule=schedule)
+        try:
+            comps, metrics = fleet.router.run(
+                reqs, before=fleet.harness.before)
+            _assert_parity(comps, _reference(reqs, tiny_cfg, tiny_params,
+                                             tok))
+            assert metrics["local"] == 2
+            assert any(e.stage == "local"
+                       for e in fleet.router.degradations)
+            by_rid = {c.rid: c for c in comps}
+            assert by_rid[1].degradation is not None
+            assert by_rid[0].degradation is None
+        finally:
+            fleet.close()
+        fleet.assert_no_leaked_pins()
+
+        fleet2 = _Fleet(tiny_cfg, tiny_params, tok, n=1,
+                        fallback=False)
+        try:
+            fleet2.harness.apply(FleetEvent(0, "kill", "r0"))
+            with pytest.raises(FleetExhaustedError):
+                fleet2.router.submit(reqs[0])
+        finally:
+            fleet2.close()
+
+    @pytest.mark.parametrize("seed", [7, 11, 23])
+    def test_seeded_chaos_schedules_keep_parity(self, seed, tiny_cfg,
+                                                tiny_params, tok):
+        """The sweep: seeded random kill/restart/partition/heal schedules
+        replay deterministically and NEVER break token parity, leak a
+        pin, or stall the loop."""
+        assert FleetSchedule.random(seed, 6, ["r0", "r1"]).events \
+            == FleetSchedule.random(seed, 6, ["r0", "r1"]).events
+        rng = np.random.default_rng(seed)
+        reqs = _requests(rng, 6, vocab=tiny_cfg.vocab_size, repeats=2,
+                         max_new=2)
+        schedule = FleetSchedule.random(seed, 6, ["r0", "r1"], rate=0.5)
+        fleet = _Fleet(tiny_cfg, tiny_params, tok, n=2,
+                       schedule=schedule)
+        try:
+            comps, metrics = fleet.router.run(
+                reqs, before=fleet.harness.before)
+            _assert_parity(comps, _reference(reqs, tiny_cfg, tiny_params,
+                                             tok))
+            # every failover hop and every local downgrade left an event
+            assert len(fleet.router.degradations) >= \
+                sum(1 for r in fleet.router.routes
+                    if r.hops or r.replica_id is None)
+            assert len(schedule.fired) == len(schedule)
+        finally:
+            fleet.close()
+        fleet.assert_no_leaked_pins()
+
+
+# ---------------------------------------------------------------------------
+# calib_key scheduler pools
+# ---------------------------------------------------------------------------
+class TestSchedulerPool:
+    def test_two_selections_one_stream(self, tiny_cfg, tiny_params, tok):
+        """Two calib_keys with DIFFERENT frozen selections serve one
+        mixed stream — the per-scheduler single-selection assert never
+        fires, completions merge in rid order, parity per key."""
+        import jax.numpy as jnp
+        sess = CommSession(_agent("s", tiny_cfg, tiny_params, tok),
+                           _agent("r", tiny_cfg, tiny_params, tok))
+        # freeze two DIFFERENT selections under two task keys (what two
+        # calibration rounds with different samples would leave behind)
+        sess._sel_cache[("front", KVCFG)] = jnp.array(
+            [True, True, False, False])
+        sess._sel_cache[("back", KVCFG)] = jnp.array(
+            [False, False, True, True])
+        sf = sess.selection(KVCFG, key="front")
+        sb = sess.selection(KVCFG, key="back")
+        assert not np.array_equal(np.asarray(sf), np.asarray(sb))
+
+        rng = np.random.default_rng(4)
+        reqs = _requests(rng, 6, vocab=tiny_cfg.vocab_size, max_new=3)
+        pool = SchedulerPool(sess, KVCFG)
+        for i, r in enumerate(reqs):
+            pool.submit(r, calib_key="front" if i % 2 == 0 else "back")
+        comps, metrics = pool.run()
+        assert metrics["pools"] == 2
+        assert [c.rid for c in comps] == [r.rid for r in reqs]
+        for key, pick in (("front", 0), ("back", 1)):
+            ref_sess = CommSession(
+                _agent("s2", tiny_cfg, tiny_params, tok),
+                _agent("r2", tiny_cfg, tiny_params, tok))
+            ref_sess._sel_cache[(key, KVCFG)] = sess.selection(
+                KVCFG, key=key)
+            sub = [r for i, r in enumerate(reqs) if i % 2 == pick]
+            ref, _ = serve_serial(ref_sess, sub, KVCFG, calib_key=key)
+            got = {c.rid: c for c in comps}
+            for rc in ref:
+                np.testing.assert_array_equal(got[rc.rid].tokens,
+                                              rc.tokens)
+
+    def test_schedulers_persist_across_runs(self, tiny_cfg, tiny_params,
+                                            tok):
+        sess = CommSession(_agent("s", tiny_cfg, tiny_params, tok),
+                           _agent("r", tiny_cfg, tiny_params, tok))
+        pool = SchedulerPool(sess, KVCFG)
+        rng = np.random.default_rng(5)
+        for batch in range(2):
+            r = _requests(rng, 2, vocab=tiny_cfg.vocab_size, max_new=2)
+            for i, req in enumerate(r):
+                req.rid += batch * 2
+                pool.submit(req, calib_key=None)
+            comps, _ = pool.run()
+            assert len(comps) == 2
+        assert len(pool._schedulers) == 1     # reused, not rebuilt

@@ -571,3 +571,54 @@ class TestRecoveryUnderPolicy:
         finally:
             client.close()
             th.join()
+
+    def test_slow_client_does_not_head_of_line_block(self, tiny_cfg,
+                                                     tiny_params, tok):
+        """Two interleaved clients on one concurrent server: the client
+        that connected FIRST stalls silently, and the one that connected
+        second still gets full service (share + generate, answered
+        bit-identically) — frame reads are per-connection, only frame
+        HANDLING serializes.  The stalled client then completes too;
+        nothing was lost to the wait."""
+        import threading
+        from repro.launch.remote_serve import KVClient, KVServer
+        from repro.store import PageStore
+        agent_s, agent_r = self._pair(tiny_cfg, tiny_params, tok)
+        select = core.make_selection(tiny_cfg, KVCFG)
+        ctx = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 7),
+                                            4, tiny_cfg.vocab_size))
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 4),
+                                            4, tiny_cfg.vocab_size))
+        server = KVServer(agent_r, store=PageStore(page_len=4))
+        served = {}
+        th = threading.Thread(target=lambda: served.update(
+            n=server.serve(conns=2, timeout_s=30.0)))
+        th.start()
+        # slow connects first and goes silent; a serial accept loop
+        # would now head-of-line-block everyone behind it
+        slow = KVClient.connect(server.host, server.port, timeout_s=10.0)
+        # io timeout: if fast's exchange ever queued behind slow, this
+        # test fails in 10s instead of deadlocking
+        fast = KVClient.connect(server.host, server.port, timeout_s=10.0,
+                                io_timeout_s=10.0)
+        try:
+            fast.share_paged(agent_s, ctx, KVCFG, select, page_len=4,
+                             wire_dtype="float32")
+            toks_fast = fast.generate(qry, max_new=2)
+            # only now does the stalled client speak — and dedups against
+            # the pages the fast one already installed
+            _, total, sent = slow.share_paged(agent_s, ctx, KVCFG, select,
+                                              page_len=4,
+                                              wire_dtype="float32")
+            toks_slow = slow.generate(qry, max_new=2)
+            assert sent == 0 and total > 0     # shared pool across conns
+        finally:
+            fast.close()
+            slow.close()
+            th.join()
+        assert served["n"] == 2
+        kv, _, _ = agent_s.export_kv(ctx)
+        ref, _ = agent_r.generate(qry, core.pack_shared(KVCFG, kv, select),
+                                  max_new=2)
+        np.testing.assert_array_equal(toks_fast, np.asarray(ref))
+        np.testing.assert_array_equal(toks_slow, np.asarray(ref))
