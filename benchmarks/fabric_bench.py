@@ -160,9 +160,31 @@ def bench_failover(cfg, tok, rparams, sparams, reqs) -> list:
     return rows
 
 
+def _metrics_delta(after: dict, before: dict) -> dict:
+    """Per-pass metrics from two cumulative ``Router.metrics()``
+    snapshots (the router log is append-only, so a pass's own numbers
+    are the difference)."""
+    total = after["pages_total"] - before["pages_total"]
+    sent = after["pages_sent"] - before["pages_sent"]
+    return {
+        "requests": after["requests"] - before["requests"],
+        "bytes": after["bytes"] - before["bytes"],
+        "pages_total": total,
+        "pages_sent": sent,
+        "page_hit_rate": ((total - sent) / total) if total else 0.0,
+    }
+
+
 def bench_affinity(cfg, tok, rparams, sparams, reqs) -> list:
     """Affinity vs round-robin page hit-rate at fan-out N in {2, 4},
-    plus the per-replica occupancy spread of the affinity run."""
+    plus the per-replica occupancy spread of the affinity run.
+
+    Each fleet serves the stream TWICE: the cold pass starts from empty
+    pools (round-robin at fan-out > REPEATS can look like 0.0 there
+    simply because no replica sees the same context twice), the warm
+    pass re-runs the identical stream against the now-populated pools —
+    the steady-state hit-rate, where the affinity-vs-round-robin gap is
+    the routing win rather than a pool-warming artifact."""
     rows = []
     for n in (2, 4):
         rates = {}
@@ -170,27 +192,40 @@ def bench_affinity(cfg, tok, rparams, sparams, reqs) -> list:
             fleet = _Fleet(cfg, tok, rparams, sparams, n=n,
                            policy=policy)
             try:
-                comps, metrics = fleet.router.run(reqs)
+                comps, cold = fleet.router.run(reqs)
                 assert len(comps) == len(reqs)
-                rates[policy] = metrics
+                comps, cumulative = fleet.router.run(reqs)
+                assert len(comps) == len(reqs)
+                rates[policy] = {"cold": cold,
+                                 "warm": _metrics_delta(cumulative, cold),
+                                 "cumulative": cumulative}
             finally:
                 fleet.close()
-        served = rates["affinity"]["served"]
+        served = rates["affinity"]["cumulative"]["served"]
         counts = [served[r] for r in sorted(served)]
         row = {
             "sweep": "affinity", "fanout": n,
-            "affinity_hit_rate": rates["affinity"]["page_hit_rate"],
+            "affinity_hit_rate": rates["affinity"]["cold"]["page_hit_rate"],
             "round_robin_hit_rate":
-                rates["round_robin"]["page_hit_rate"],
-            "affinity_bytes": rates["affinity"]["bytes"],
-            "round_robin_bytes": rates["round_robin"]["bytes"],
+                rates["round_robin"]["cold"]["page_hit_rate"],
+            "affinity_warm_hit_rate":
+                rates["affinity"]["warm"]["page_hit_rate"],
+            "round_robin_warm_hit_rate":
+                rates["round_robin"]["warm"]["page_hit_rate"],
+            "affinity_bytes": rates["affinity"]["cold"]["bytes"],
+            "round_robin_bytes": rates["round_robin"]["cold"]["bytes"],
+            "affinity_warm_bytes": rates["affinity"]["warm"]["bytes"],
+            "round_robin_warm_bytes":
+                rates["round_robin"]["warm"]["bytes"],
             "served_per_replica": counts,
             "occupancy_spread": max(counts) - min(counts),
         }
         rows.append(row)
-        print(f"fanout {n}: affinity hit-rate "
+        print(f"fanout {n}: cold hit-rate affinity "
               f"{row['affinity_hit_rate']:.3f} vs round-robin "
-              f"{row['round_robin_hit_rate']:.3f}; served {counts} "
+              f"{row['round_robin_hit_rate']:.3f}; warm "
+              f"{row['affinity_warm_hit_rate']:.3f} vs "
+              f"{row['round_robin_warm_hit_rate']:.3f}; served {counts} "
               f"(spread {row['occupancy_spread']})")
     return rows
 

@@ -41,13 +41,15 @@ over this stack; new code should use ``CommSession`` directly::
 from repro.comm.agent import Agent
 from repro.comm.methods import (METHODS, CommMethod, CommRequest,
                                 MethodResult, get_method, register)
-from repro.comm.remote import (ChannelClosedError, ChannelTimeoutError,
-                               FileChannel, FrameCorruptError,
-                               FrameTruncatedError, HeaderCorruptError,
-                               LoopbackChannel, PayloadMismatchError,
-                               RemoteChannel, RemoteProtocolError,
-                               RemoteTransport, SocketChannel,
-                               VersionSkewError, recv_shared, send_shared)
+from repro.comm.remote import (DEFAULT_CHUNK_BYTES, ChannelClosedError,
+                               ChannelTimeoutError, FileChannel,
+                               FrameCorruptError, FrameTruncatedError,
+                               HeaderCorruptError, KVStreamAssembler,
+                               KVStreamSender, LoopbackChannel,
+                               PayloadMismatchError, RemoteChannel,
+                               RemoteProtocolError, RemoteTransport,
+                               SocketChannel, VersionSkewError,
+                               recv_shared, send_shared)
 from repro.comm.resilience import (RETRIABLE_ERRORS, CircuitBreaker,
                                    CircuitOpenError, DegradationEvent,
                                    Fault, FaultSchedule, FaultyChannel,
@@ -55,22 +57,25 @@ from repro.comm.resilience import (RETRIABLE_ERRORS, CircuitBreaker,
                                    RetryPolicy, default_resilience)
 from repro.comm.session import CommSession, SenderHandle
 from repro.comm.transport import (InMemoryTransport, SerializedTransport,
-                                  TransferRecord, Transport)
+                                  TransferRecord, Transport, WirePlan,
+                                  as_wire_plan, resolve_wire_dtype,
+                                  wire_spec)
 from repro.core.layermap import (LAYER_MAPS, LayerAssignment, LayerMap,
                                  get_layer_map, register_layer_map)
 
 __all__ = [
     "Agent", "ChannelClosedError", "ChannelTimeoutError", "CircuitBreaker",
     "CircuitOpenError", "CommMethod", "CommRequest", "CommSession",
-    "DegradationEvent", "Fault", "FaultSchedule", "FaultyChannel",
-    "FileChannel", "FrameCorruptError", "FrameTruncatedError",
-    "HeaderCorruptError", "InMemoryTransport", "LAYER_MAPS",
-    "LayerAssignment", "LayerMap", "LoopbackChannel", "METHODS",
-    "MethodResult", "PayloadMismatchError", "RETRIABLE_ERRORS",
-    "RemoteChannel", "RemoteProtocolError", "RemoteTransport", "Resilience",
+    "DEFAULT_CHUNK_BYTES", "DegradationEvent", "Fault", "FaultSchedule",
+    "FaultyChannel", "FileChannel", "FrameCorruptError",
+    "FrameTruncatedError", "HeaderCorruptError", "InMemoryTransport",
+    "KVStreamAssembler", "KVStreamSender", "LAYER_MAPS", "LayerAssignment",
+    "LayerMap", "LoopbackChannel", "METHODS", "MethodResult",
+    "PayloadMismatchError", "RETRIABLE_ERRORS", "RemoteChannel",
+    "RemoteProtocolError", "RemoteTransport", "Resilience",
     "RetriesExhaustedError", "RetryPolicy", "SenderHandle",
     "SerializedTransport", "SocketChannel", "TransferRecord", "Transport",
-    "VersionSkewError", "default_resilience", "get_layer_map",
-    "get_method", "recv_shared", "register", "register_layer_map",
-    "send_shared",
+    "VersionSkewError", "WirePlan", "as_wire_plan", "default_resilience",
+    "get_layer_map", "get_method", "recv_shared", "register",
+    "register_layer_map", "resolve_wire_dtype", "send_shared", "wire_spec",
 ]

@@ -61,8 +61,12 @@ from repro.core.layermap import LayerAssignment
 from repro.core.protocol import (gather_mapped, gather_selected,
                                  selected_layer_ids)
 from repro.core.types import KVCommConfig, SharedKV
-from repro.comm.transport import (Transport, _WIRE_DTYPES, decode_wire,
-                                  encode_wire, selected_count)
+from repro.comm.transport import (Transport, WirePlan, as_wire_plan,
+                                  decode_wire, encode_wire, np_decode_wire,
+                                  np_encode_wire,
+                                  resolve_wire_dtype, selected_count,
+                                  state_wire_dtype, wire_has_scales,
+                                  wire_spec)
 
 PROTOCOL_VERSION = 1
 MAGIC = b"KVCM"
@@ -131,6 +135,18 @@ class RemoteChannel(abc.ABC):
     def close(self) -> None:
         pass
 
+    # Whole-frame deadline hooks: the framing layer calls ``begin_frame``
+    # once a frame's first bytes have arrived and ``end_frame`` when the
+    # frame is fully read (or failed).  Default is a no-op; channels with a
+    # wall-clock budget (SocketChannel) arm a deadline here so a peer
+    # trickling one byte per io-timeout window cannot hold a read open
+    # forever.
+    def begin_frame(self) -> None:
+        pass
+
+    def end_frame(self) -> None:
+        pass
+
 
 class LoopbackChannel(RemoteChannel):
     """In-process byte buffer: writes append, reads consume from the front.
@@ -163,8 +179,19 @@ class SocketChannel(RemoteChannel):
     or dial with ``SocketChannel.connect`` (retries until the server's
     listener is up — the two-process launch race)."""
 
-    def __init__(self, sock: socket.socket) -> None:
+    def __init__(self, sock: socket.socket,
+                 frame_timeout_s: Optional[float] = None) -> None:
         self.sock = sock
+        # per-recv socket timeout as configured at connect/accept time
+        self.io_timeout_s = sock.gettimeout()
+        # whole-frame budget: from a frame's FIRST byte, the rest must
+        # arrive within this window — a trickling peer (1 byte per
+        # io-timeout) can no longer hold a frame read open forever.
+        # Defaults to the io timeout; None (blocking socket, no override)
+        # keeps the legacy unbounded behavior.
+        self.frame_timeout_s = (frame_timeout_s if frame_timeout_s
+                                is not None else self.io_timeout_s)
+        self._deadline: Optional[float] = None
 
     @classmethod
     def connect(cls, host: str, port: int, timeout_s: float = 30.0,
@@ -202,7 +229,34 @@ class SocketChannel(RemoteChannel):
         except OSError as e:
             raise ChannelClosedError(f"socket send failed: {e}") from e
 
+    def begin_frame(self) -> None:
+        if self.frame_timeout_s is not None:
+            self._deadline = time.monotonic() + self.frame_timeout_s
+
+    def end_frame(self) -> None:
+        self._deadline = None
+        try:
+            self.sock.settimeout(self.io_timeout_s)
+        except OSError:
+            pass
+
     def read(self, n: int) -> bytes:
+        if self._deadline is not None:
+            remaining = self._deadline - time.monotonic()
+            if remaining <= 0:
+                raise ChannelTimeoutError(
+                    f"frame not complete within the {self.frame_timeout_s}s"
+                    " whole-frame deadline (peer trickling or stalled)")
+            # cap THIS recv's wait by the remaining frame budget, so slow
+            # drips make progress against the deadline instead of each
+            # enjoying a fresh io timeout
+            try:
+                self.sock.settimeout(
+                    remaining if self.io_timeout_s is None
+                    else min(self.io_timeout_s, remaining))
+            except OSError as e:
+                raise ChannelClosedError(
+                    f"socket settimeout failed: {e}") from e
         try:
             return self.sock.recv(min(n, 1 << 20))
         except socket.timeout as e:
@@ -438,18 +492,27 @@ def read_frame(channel: RemoteChannel
     first = channel.read(_PREFIX.size)
     if not first:
         raise ChannelClosedError("channel closed at frame boundary")
-    prefix = _read_exactly(channel, _PREFIX.size, "frame prefix", got=first)
-    magic, version, hlen, blen, crc = _PREFIX.unpack(prefix)
-    if magic != MAGIC:
-        raise HeaderCorruptError(f"bad frame magic {magic!r}")
-    if version != PROTOCOL_VERSION:
-        raise VersionSkewError(
-            f"peer speaks protocol v{version}, this side v{PROTOCOL_VERSION}")
-    if hlen > MAX_HEADER_BYTES or blen > MAX_BODY_BYTES:
-        raise HeaderCorruptError(
-            f"implausible frame lengths (header {hlen}, payload {blen})")
-    header = _read_exactly(channel, hlen, "header")
-    body = _read_exactly(channel, blen, "payload")
+    # the frame has started: arm the channel's whole-frame deadline (a
+    # no-op on channels without one) — waiting BETWEEN frames stays
+    # unbounded, a frame in flight must complete within the budget
+    channel.begin_frame()
+    try:
+        prefix = _read_exactly(channel, _PREFIX.size, "frame prefix",
+                               got=first)
+        magic, version, hlen, blen, crc = _PREFIX.unpack(prefix)
+        if magic != MAGIC:
+            raise HeaderCorruptError(f"bad frame magic {magic!r}")
+        if version != PROTOCOL_VERSION:
+            raise VersionSkewError(
+                f"peer speaks protocol v{version}, this side "
+                f"v{PROTOCOL_VERSION}")
+        if hlen > MAX_HEADER_BYTES or blen > MAX_BODY_BYTES:
+            raise HeaderCorruptError(
+                f"implausible frame lengths (header {hlen}, payload {blen})")
+        header = _read_exactly(channel, hlen, "header")
+        body = _read_exactly(channel, blen, "payload")
+    finally:
+        channel.end_frame()
     if zlib.crc32(body, zlib.crc32(header)) != crc:
         raise FrameCorruptError("frame checksum mismatch")
     try:
@@ -610,20 +673,34 @@ def _tree_build(skel, leaves):
 # SharedKV transfers: the sender and receiver halves
 # ---------------------------------------------------------------------------
 def _put_wire(arrays: Dict[str, np.ndarray], name: str, x,
-              wire_dtype: str) -> int:
+              wire_dtype) -> int:
+    """Encode ``x`` into the frame's array dict.  Uniform wires keep the
+    legacy ``name`` / ``name@scale`` layout; a ``WirePlan`` emits the
+    group-ordered tuple as ``name@p0``, ``name@p1``, ... so the receiver
+    can re-thread the exact arity the plan spec implies."""
     wire, n = encode_wire(x, wire_dtype)
+    if as_wire_plan(wire_dtype) is not None:
+        for i, arr in enumerate(wire):
+            arrays[f"{name}@p{i}"] = arr
+        return n
     arrays[name] = wire[0]
     if len(wire) > 1:
         arrays[name + "@scale"] = wire[1]
     return n
 
 
-def _take_wire(arrays: Dict[str, np.ndarray], name: str, wire_dtype: str,
+def _take_wire(arrays: Dict[str, np.ndarray], name: str, wire_dtype,
                dtype) -> jnp.ndarray:
     try:
-        wire = (arrays[name],)
-        if wire_dtype == "int8":
-            wire = (arrays[name], arrays[name + "@scale"])
+        plan = as_wire_plan(wire_dtype)
+        if plan is not None:
+            from repro.comm.transport import wire_array_count
+            wire = tuple(arrays[f"{name}@p{i}"]
+                         for i in range(wire_array_count(plan)))
+        else:
+            wire = (arrays[name],)
+            if wire_has_scales(wire_dtype):
+                wire = (arrays[name], arrays[name + "@scale"])
     except KeyError as e:
         raise PayloadMismatchError(f"frame lacks array {e.args[0]!r}") \
             from None
@@ -641,9 +718,7 @@ def encode_kv_transfer(kvcfg: KVCommConfig, kv, select=None, states=None,
     Returns ``(frame bytes, payload wire bytes, layer count, prefix_len)``
     — payload bytes are exactly what ``SerializedTransport`` would count
     for the same transfer (the shared codec guarantees it)."""
-    if wire_dtype not in _WIRE_DTYPES:
-        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
-                         f"one of {sorted(_WIRE_DTYPES)}")
+    wire_dtype = resolve_wire_dtype(wire_dtype)
     arrays: Dict[str, np.ndarray] = {}
     n_bytes = 0
     prefix_len = 0
@@ -679,19 +754,52 @@ def encode_kv_transfer(kvcfg: KVCommConfig, kv, select=None, states=None,
     if states is not None and state_select is not None:
         skel, leaves = _tree_parts(states)
         sel = np.nonzero(np.asarray(state_select))[0]
+        # a per-selected-slot plan cannot index full-depth state stacks:
+        # state leaves ship at the plan's finest tier (uniform wires pass
+        # through unchanged)
+        state_wd = state_wire_dtype(wire_dtype)
         shapes, dtypes = [], []
         for i, leaf in enumerate(leaves):
             leaf = jnp.asarray(leaf)
             shapes.append(list(leaf.shape))
             dtypes.append(np.dtype(leaf.dtype).name)
-            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], wire_dtype)
+            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], state_wd)
         state_meta = {"skeleton": skel, "shapes": shapes, "dtypes": dtypes,
                       "select": [bool(b) for b in np.asarray(state_select)]}
-    meta = {"wire_dtype": wire_dtype, "kv": kv_meta, "states": state_meta,
-            "pos_mode": kvcfg.pos_mode,
+    meta = {"wire_dtype": wire_spec(wire_dtype), "kv": kv_meta,
+            "states": state_meta, "pos_mode": kvcfg.pos_mode,
             "sel_mask": sel_mask if kv is None else None}
     return (encode_frame("shared_kv", meta, arrays), n_bytes, layer_count,
             prefix_len)
+
+
+def _decode_states(state_meta, arrays: Dict[str, np.ndarray], wire_dtype):
+    """Rebuild the dense state pytree (+ its select mask) from a frame's
+    ``s{i}`` arrays; the one states decoder the monolithic and streaming
+    receive paths share.  Returns ``(states, state_select)`` — both None
+    when the transfer carried no states."""
+    if state_meta is None:
+        return None, None
+    try:
+        sel = np.asarray(state_meta["select"], bool)
+        shapes = state_meta["shapes"]
+        dtypes = state_meta["dtypes"]
+        skel = state_meta["skeleton"]
+    except (KeyError, TypeError) as e:
+        raise PayloadMismatchError(f"state meta lacks {e}") from None
+    idx = np.nonzero(sel)[0]
+    leaves = []
+    state_wd = state_wire_dtype(wire_dtype)
+    for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
+        part = _take_wire(arrays, f"s{i}", state_wd, _np_dtype(dname))
+        want = (len(idx),) + tuple(shape[1:])
+        if tuple(part.shape) != want:
+            raise PayloadMismatchError(
+                f"state leaf {i} shape {tuple(part.shape)} != "
+                f"expected {want}")
+        dense = jnp.zeros(tuple(shape), _np_dtype(dname))
+        leaves.append(dense.at[idx].set(part) if len(idx) else dense)
+    return _tree_build(skel, leaves), jnp.asarray(sel)
 
 
 def decode_kv_transfer(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
@@ -705,8 +813,11 @@ def decode_kv_transfer(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
     except (KeyError, TypeError) as e:
         raise PayloadMismatchError(f"shared_kv frame meta lacks {e}") \
             from None
-    if wire_dtype not in _WIRE_DTYPES:
-        raise PayloadMismatchError(f"unknown wire dtype {wire_dtype!r}")
+    try:
+        wire_dtype = resolve_wire_dtype(wire_dtype)
+    except ValueError:
+        raise PayloadMismatchError(f"unknown wire dtype {wire_dtype!r}") \
+            from None
     n_bytes = int(sum(a.nbytes for a in arrays.values()))
     payload = None
     if kv_meta is not None:
@@ -730,28 +841,7 @@ def decode_kv_transfer(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
             raise PayloadMismatchError(
                 f"header prefix_len {kv_meta['prefix_len']} != payload "
                 f"Sc {payload['k'].shape[2]}")
-    states = state_select = None
-    if state_meta is not None:
-        try:
-            sel = np.asarray(state_meta["select"], bool)
-            shapes = state_meta["shapes"]
-            dtypes = state_meta["dtypes"]
-            skel = state_meta["skeleton"]
-        except (KeyError, TypeError) as e:
-            raise PayloadMismatchError(f"state meta lacks {e}") from None
-        idx = np.nonzero(sel)[0]
-        leaves = []
-        for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
-            part = _take_wire(arrays, f"s{i}", wire_dtype, _np_dtype(dname))
-            want = (len(idx),) + tuple(shape[1:])
-            if tuple(part.shape) != want:
-                raise PayloadMismatchError(
-                    f"state leaf {i} shape {tuple(part.shape)} != "
-                    f"expected {want}")
-            dense = jnp.zeros(tuple(shape), _np_dtype(dname))
-            leaves.append(dense.at[idx].set(part) if len(idx) else dense)
-        states = _tree_build(skel, leaves)
-        state_select = jnp.asarray(sel)
+    states, state_select = _decode_states(state_meta, arrays, wire_dtype)
     if kv_meta is None:
         sel_mask = meta.get("sel_mask")
         shared = SharedKV(
@@ -769,27 +859,434 @@ def decode_kv_transfer(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
     return shared, n_bytes
 
 
+# ---------------------------------------------------------------------------
+# streaming chunked transfers: kv_stream_begin / kv_stream_chunk /
+# kv_stream_end
+# ---------------------------------------------------------------------------
+# The monolithic shared_kv frame serializes the WHOLE selected stack before
+# the first byte moves — on long contexts that makes serialize ~90% of the
+# remote wall clock.  The streaming framing splits the same payload into
+# per-slot, sequence-sliced chunks of roughly DEFAULT_CHUNK_BYTES so the
+# sender's encode of chunk i+1 overlaps the channel write and the
+# receiver's decode of chunk i.  The chunk codec is the SAME encode_wire
+# per layer slot (per-layer scales are slice-invariant), so the streamed
+# bytes and the rebuilt view are bit-identical to the monolithic frame.
+# The receiver installs NOTHING until the end frame arrives and every slot
+# is fully covered — a retried/replayed stream (fresh sid) is idempotent
+# per-chunk by construction.
+DEFAULT_CHUNK_BYTES = 1 << 20
+
+
+class KVStreamSender:
+    """Sender half of a chunked KV transfer: same selection/meta plumbing
+    as ``encode_kv_transfer``, but ``frames()`` lazily yields
+    ``(frame_bytes, payload_bytes)`` one bounded chunk at a time — each
+    ``next()`` does that chunk's wire-cast, so a driver interleaves encode
+    with channel writes."""
+
+    def __init__(self, kvcfg: KVCommConfig, kv, select=None, states=None,
+                 state_select=None,
+                 assignment: Optional[LayerAssignment] = None,
+                 wire_dtype="float16", packed: bool = True,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 sid: int = 0) -> None:
+        from repro.comm.transport import _WIRE_BITS
+        self.wire_dtype = resolve_wire_dtype(wire_dtype)
+        self.chunk_bytes = max(int(chunk_bytes), 1)
+        self.sid = int(sid)
+        self.kvcfg = kvcfg
+        self.states, self.state_select = states, state_select
+        if assignment is not None:
+            self.layer_count = assignment.num_pairs
+            sel_mask = [bool(b) for b in assignment.dst_mask()]
+            layers = list(assignment.dst)
+            src_layers = list(assignment.src)
+            src_idx = np.asarray(assignment.src, np.int32)
+        else:
+            self.layer_count = selected_count(select)
+            sel_mask = (None if select is None
+                        else [bool(b) for b in np.asarray(select)])
+            layers = (None if select is None
+                      else list(selected_layer_ids(select)))
+            src_layers = None
+            src_idx = (None if layers is None
+                       else np.asarray(layers, np.int32))
+        self._sel_mask = sel_mask
+        self.prefix_len = 0
+        self._payload = None
+        self._host = None
+        self._kv_meta = None
+        self._kv_shape = None
+        self._slot_dtypes: list = []
+        if kv is not None:
+            if src_idx is None:
+                raise ValueError("a remote KV transfer needs a selection "
+                                 "mask or a LayerAssignment")
+            self.prefix_len = int(kv["k"].shape[2])
+            compute_dtype = np.dtype(kv["k"].dtype).name
+            # float32 payloads gather AND encode slot-by-slot in pure
+            # numpy: np.asarray of a host-backend jax array is
+            # (near-)zero-copy, so one numpy take replaces the device
+            # gather plus a full-payload host materialization, and no
+            # jnp dispatch runs per slot (per-slot device round-trips
+            # cost as much as the whole monolithic encode).  Other
+            # compute dtypes keep the jnp codec, whose scale math
+            # np_encode_wire only mirrors for float32.
+            if compute_dtype == "float32":
+                idx = np.asarray(src_idx)
+                self._host = {part: np.asarray(kv[part])[idx]
+                              for part in ("k", "v")}
+                stack = self._host["k"]
+            else:
+                self._payload = {part: jnp.asarray(kv[part])[src_idx]
+                                 for part in ("k", "v")}
+                stack = self._payload["k"]
+            self._kv_shape = [int(d) for d in stack.shape]
+            m_slots = self._kv_shape[0]
+            plan = as_wire_plan(self.wire_dtype)
+            if plan is not None:
+                if len(plan) != m_slots:
+                    raise ValueError(f"wire plan covers {len(plan)} slots "
+                                     f"but the transfer has {m_slots}")
+                self._slot_dtypes = list(plan.dtypes)
+            else:
+                self._slot_dtypes = [self.wire_dtype] * m_slots
+            self._kv_meta = {"prefix_len": self.prefix_len,
+                             "pos_mode": kvcfg.pos_mode, "packed": packed,
+                             "layers": layers, "src_layers": src_layers,
+                             "select": sel_mask,
+                             "compute_dtype": compute_dtype}
+        # chunk plan: slot-major, each slot sequence-sliced so one chunk's
+        # k+v wire stays within ~chunk_bytes
+        self._chunks: list = []
+        if self._kv_shape is not None:
+            _, b, sc, h, d = self._kv_shape
+            for m, dt in enumerate(self._slot_dtypes):
+                bits = _WIRE_BITS[dt]
+                bytes_per_pos = max((2 * b * h * d * bits) // 8, 1)
+                step = max(self.chunk_bytes // bytes_per_pos, 1)
+                start = 0
+                while start < sc:
+                    length = min(step, sc - start)
+                    self._chunks.append((m, start, length))
+                    start += length
+        self.n_frames = 2 + len(self._chunks)
+
+    def _encode_slots(self):
+        """Wire-encode the payload one dtype GROUP at a time and hand back
+        per-slot views: per-layer scales live on the leading axis, so a
+        group encode is bit-equal to slot-by-slot encodes, and one
+        vectorized cast beats M small ones (numpy has no SIMD fp16 cast
+        here — float wires go through the jnp codec, scaled wires through
+        the numpy quantizer, both one call per group)."""
+        from repro.comm.transport import _SCALED_WIRES, _WIRE_DTYPES
+        slot_wire: Dict[str, Dict[int, tuple]] = {"k": {}, "v": {}}
+        if self._kv_shape is None:
+            return slot_wire
+        groups: Dict[str, list] = {}
+        for i, dt in enumerate(self._slot_dtypes):
+            groups.setdefault(dt, []).append(i)
+        for dt, slots in groups.items():
+            whole = len(slots) == len(self._slot_dtypes)
+            for part in ("k", "v"):
+                if self._host is not None:
+                    sub = (self._host[part] if whole
+                           else self._host[part][np.asarray(slots)])
+                    if dt in _SCALED_WIRES:
+                        wire = np_encode_wire(sub, dt)[0]
+                    else:
+                        wire = (np.asarray(jnp.asarray(sub).astype(
+                            _WIRE_DTYPES[dt])),)
+                else:
+                    stack = self._payload[part]
+                    sub = stack if whole else stack[np.asarray(slots)]
+                    wire = encode_wire(sub, dt)[0]
+                for j, m in enumerate(slots):
+                    slot_wire[part][m] = tuple(a[j:j + 1] for a in wire)
+        return slot_wire
+
+    def frames(self):
+        meta = {"sid": self.sid, "wire_dtype": wire_spec(self.wire_dtype),
+                "kv": self._kv_meta, "kv_shape": self._kv_shape,
+                "pos_mode": self.kvcfg.pos_mode,
+                "sel_mask": self._sel_mask if self._kv_meta is None
+                else None,
+                "chunks": len(self._chunks)}
+        yield encode_frame("kv_stream_begin", meta, {}), 0
+        slot_wire = self._encode_slots()
+        seq = 0
+        for (m, start, length) in self._chunks:
+            arrays: Dict[str, np.ndarray] = {}
+            nb = 0
+            for part in ("k", "v"):
+                wire = slot_wire[part][m]
+                piece = wire[0][:, :, start:start + length]
+                arrays[part] = piece
+                nb += piece.nbytes
+                if len(wire) > 1:
+                    # the scale rides EVERY chunk (self-decodable) but is
+                    # counted once per slot, so streamed n_bytes matches
+                    # the monolithic/analytic accounting
+                    arrays[part + "@scale"] = wire[1]
+                    if start == 0:
+                        nb += wire[1].nbytes
+            meta = {"sid": self.sid, "seq": seq, "slot": m,
+                    "start": start, "length": length}
+            yield encode_frame("kv_stream_chunk", meta, arrays), nb
+            seq += 1
+        arrays = {}
+        nb = 0
+        state_meta = None
+        if self.states is not None and self.state_select is not None:
+            skel, leaves = _tree_parts(self.states)
+            sel = np.nonzero(np.asarray(self.state_select))[0]
+            state_wd = state_wire_dtype(self.wire_dtype)
+            shapes, dtypes = [], []
+            for i, leaf in enumerate(leaves):
+                leaf = jnp.asarray(leaf)
+                shapes.append(list(leaf.shape))
+                dtypes.append(np.dtype(leaf.dtype).name)
+                nb += _put_wire(arrays, f"s{i}", leaf[sel], state_wd)
+            state_meta = {
+                "skeleton": skel, "shapes": shapes, "dtypes": dtypes,
+                "select": [bool(b)
+                           for b in np.asarray(self.state_select)]}
+        meta = {"sid": self.sid, "seq": seq,
+                "chunks": len(self._chunks), "states": state_meta}
+        yield encode_frame("kv_stream_end", meta, arrays), nb
+
+
+class KVStreamAssembler:
+    """Receiver half: feed it stream frames in order; returns
+    ``(SharedKV, payload_bytes)`` on the end frame, ``None`` before.  A
+    fresh ``kv_stream_begin`` replaces any in-progress stream (replayed
+    transfers restart under a new sid — nothing was installed, so the
+    retry is idempotent); every inconsistency raises a typed
+    ``PayloadMismatchError``."""
+
+    def __init__(self) -> None:
+        self._s: Optional[Dict[str, Any]] = None
+
+    @property
+    def active(self) -> bool:
+        return self._s is not None
+
+    def abort(self) -> None:
+        self._s = None
+
+    def feed(self, kind: str, meta: Dict[str, Any],
+             arrays: Dict[str, np.ndarray]
+             ) -> Optional[Tuple[SharedKV, int]]:
+        # any protocol violation aborts the in-progress stream: a broken
+        # frame sequence cannot be resumed (frames arrive in order on a
+        # serial channel), and the sender's retry restarts with a fresh
+        # begin regardless — nothing partial may linger as "active"
+        try:
+            if kind == "kv_stream_begin":
+                return self._begin(meta)
+            st = self._s
+            if st is None:
+                raise PayloadMismatchError(
+                    f"{kind!r} frame without an active stream begin")
+            if meta.get("sid") != st["sid"]:
+                raise PayloadMismatchError(
+                    f"stream sid mismatch: frame {meta.get('sid')!r} vs "
+                    f"active {st['sid']!r}")
+            if kind == "kv_stream_chunk":
+                return self._chunk(meta, arrays)
+            if kind == "kv_stream_end":
+                return self._end(meta, arrays)
+            raise PayloadMismatchError(
+                f"unexpected frame kind {kind!r} mid-stream")
+        except RemoteProtocolError:
+            self._s = None
+            raise
+
+    def _begin(self, meta: Dict[str, Any]) -> None:
+        try:
+            sid = int(meta["sid"])
+            wire_dtype = resolve_wire_dtype(meta["wire_dtype"])
+            kv_meta = meta["kv"]
+            chunks = int(meta["chunks"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise PayloadMismatchError(
+                f"kv_stream_begin meta invalid: {e}") from None
+        bufs = shape = None
+        slot_dtypes: list = []
+        if kv_meta is not None:
+            shape = meta.get("kv_shape")
+            if (not isinstance(shape, (list, tuple)) or len(shape) != 5
+                    or any(int(d) < 0 for d in shape)):
+                raise PayloadMismatchError(
+                    f"kv_stream_begin kv_shape invalid: {shape!r}")
+            shape = tuple(int(d) for d in shape)
+            if shape[2] != int(kv_meta.get("prefix_len", -1)):
+                raise PayloadMismatchError(
+                    f"kv_shape Sc {shape[2]} != header prefix_len "
+                    f"{kv_meta.get('prefix_len')!r}")
+            layers = kv_meta.get("layers")
+            if layers is not None and len(layers) != shape[0]:
+                raise PayloadMismatchError(
+                    f"layer map names {len(layers)} layers but the "
+                    f"stream ships {shape[0]}")
+            plan = as_wire_plan(wire_dtype)
+            if plan is not None and len(plan) != shape[0]:
+                raise PayloadMismatchError(
+                    f"wire plan covers {len(plan)} slots but the stream "
+                    f"ships {shape[0]}")
+            dtype = _np_dtype(kv_meta.get("compute_dtype", "float32"))
+            bufs = {part: np.zeros(shape, dtype) for part in ("k", "v")}
+            slot_dtypes = (list(plan.dtypes) if plan is not None
+                           else [wire_dtype] * shape[0])
+        elif chunks:
+            raise PayloadMismatchError(
+                f"stream claims {chunks} chunks but carries no KV")
+        self._s = {"sid": sid, "wire_dtype": wire_dtype,
+                   "kv_meta": kv_meta, "begin": meta, "chunks": chunks,
+                   "seq": 0, "bufs": bufs, "shape": shape,
+                   "slot_dtypes": slot_dtypes,
+                   "next": [0] * (shape[0] if shape else 0),
+                   "n_bytes": 0}
+        return None
+
+    def _chunk(self, meta: Dict[str, Any],
+               arrays: Dict[str, np.ndarray]) -> None:
+        st = self._s
+        try:
+            seq = int(meta["seq"])
+            slot = int(meta["slot"])
+            start = int(meta["start"])
+            length = int(meta["length"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise PayloadMismatchError(
+                f"kv_stream_chunk meta invalid: {e}") from None
+        if st["bufs"] is None:
+            raise PayloadMismatchError("chunk for a KV-less stream")
+        if seq != st["seq"]:
+            raise PayloadMismatchError(
+                f"stream chunk out of order: seq {seq}, "
+                f"expected {st['seq']}")
+        m_slots, b, sc, h, d = st["shape"]
+        if not 0 <= slot < m_slots:
+            raise PayloadMismatchError(
+                f"chunk slot {slot} outside [0, {m_slots})")
+        if start != st["next"][slot]:
+            raise PayloadMismatchError(
+                f"non-contiguous chunk for slot {slot}: start {start}, "
+                f"expected {st['next'][slot]}")
+        if length <= 0 or start + length > sc:
+            raise PayloadMismatchError(
+                f"chunk range [{start}, {start + length}) outside the "
+                f"{sc}-position prefix")
+        dt = st["slot_dtypes"][slot]
+        dtype = st["bufs"]["k"].dtype
+        for part in ("k", "v"):
+            try:
+                wire = (arrays[part],)
+                if wire_has_scales(dt):
+                    wire = (arrays[part], arrays[part + "@scale"])
+            except KeyError as e:
+                raise PayloadMismatchError(
+                    f"stream chunk lacks array {e.args[0]!r}") from None
+            # pure-numpy decode: a jnp dispatch per bounded chunk would
+            # stall the pipeline (the receiver, not the channel, becomes
+            # the bottleneck and backpressure blocks the sender)
+            dec = np_decode_wire(wire, dt, dtype)
+            if tuple(dec.shape) != (1, b, length, h, d):
+                raise PayloadMismatchError(
+                    f"chunk decodes to {tuple(dec.shape)}, expected "
+                    f"{(1, b, length, h, d)}")
+            st["bufs"][part][slot, :, start:start + length] = dec[0]
+            st["n_bytes"] += arrays[part].nbytes
+            if wire_has_scales(dt) and start == 0:
+                st["n_bytes"] += arrays[part + "@scale"].nbytes
+        st["seq"] += 1
+        st["next"][slot] = start + length
+        return None
+
+    def _end(self, meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
+             ) -> Tuple[SharedKV, int]:
+        st = self._s
+        if st["seq"] != st["chunks"] \
+                or int(meta.get("chunks", -1)) != st["chunks"]:
+            raise PayloadMismatchError(
+                f"stream ended after {st['seq']}/{st['chunks']} chunks")
+        if st["bufs"] is not None:
+            _, _, sc, _, _ = st["shape"]
+            for m, covered in enumerate(st["next"]):
+                if covered != sc:
+                    raise PayloadMismatchError(
+                        f"stream slot {m} covered {covered}/{sc} "
+                        "positions at end")
+        states, state_select = _decode_states(meta.get("states"), arrays,
+                                              st["wire_dtype"])
+        n_bytes = st["n_bytes"] + int(sum(a.nbytes
+                                          for a in arrays.values()))
+        if st["kv_meta"] is None:
+            begin = st["begin"]
+            sel_mask = begin.get("sel_mask")
+            shared = SharedKV(
+                kv=None,
+                select=(None if sel_mask is None
+                        else jnp.asarray(sel_mask, bool)),
+                states=states, state_select=state_select,
+                prefix_len=0, pos_mode=begin.get("pos_mode", "shift"))
+        else:
+            payload = {part: jnp.asarray(st["bufs"][part])
+                       for part in ("k", "v")}
+            try:
+                shared = SharedKV.from_wire(st["kv_meta"], payload,
+                                            states=states,
+                                            state_select=state_select)
+            except (KeyError, TypeError, ValueError) as e:
+                raise PayloadMismatchError(
+                    f"cannot rebuild SharedKV: {e}") from None
+        self._s = None
+        return shared, n_bytes
+
+
 def send_shared(channel: RemoteChannel, kvcfg: KVCommConfig, kv, select=None,
                 *, states=None, state_select=None,
                 assignment: Optional[LayerAssignment] = None,
-                wire_dtype: str = "float16", packed: bool = True) -> int:
+                wire_dtype="float16", packed: bool = True,
+                chunk_bytes: Optional[int] = None, sid: int = 0) -> int:
     """Sender-process entry: frame one KV transfer onto the channel.
-    Returns the payload wire bytes (what the analytics predict)."""
-    frame, n_bytes, _, _ = encode_kv_transfer(
-        kvcfg, kv, select, states, state_select, assignment,
-        wire_dtype, packed)
-    channel.write(frame)
+    ``chunk_bytes=None`` writes the single monolithic ``shared_kv`` frame;
+    an int streams begin/chunk/end frames bounded by roughly that size.
+    Returns the payload wire bytes (what the analytics predict) either
+    way."""
+    if chunk_bytes is None:
+        frame, n_bytes, _, _ = encode_kv_transfer(
+            kvcfg, kv, select, states, state_select, assignment,
+            wire_dtype, packed)
+        channel.write(frame)
+        return n_bytes
+    sender = KVStreamSender(kvcfg, kv, select, states, state_select,
+                            assignment, wire_dtype, packed,
+                            chunk_bytes=chunk_bytes, sid=sid)
+    n_bytes = 0
+    for frame, nb in sender.frames():
+        channel.write(frame)
+        n_bytes += nb
     return n_bytes
 
 
 def recv_shared(channel: RemoteChannel) -> Tuple[SharedKV, int]:
-    """Receiver-process entry: read one ``shared_kv`` frame and rebuild the
-    receiver-side view.  Returns (SharedKV, payload wire bytes)."""
+    """Receiver-process entry: read one KV transfer — a monolithic
+    ``shared_kv`` frame or a complete ``kv_stream_*`` sequence — and
+    rebuild the receiver-side view.  Returns (SharedKV, payload wire
+    bytes)."""
     kind, meta, arrays = read_frame(channel)
-    if kind != "shared_kv":
-        raise PayloadMismatchError(
-            f"expected a shared_kv frame, got {kind!r}")
-    return decode_kv_transfer(meta, arrays)
+    if kind == "shared_kv":
+        return decode_kv_transfer(meta, arrays)
+    if kind == "kv_stream_begin":
+        asm = KVStreamAssembler()
+        out = asm.feed(kind, meta, arrays)
+        while out is None:
+            out = asm.feed(*read_frame(channel))
+        return out
+    raise PayloadMismatchError(
+        f"expected a shared_kv or kv_stream_begin frame, got {kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -826,16 +1323,17 @@ class RemoteTransport(Transport):
     transfer burned.
     """
 
-    def __init__(self, wire_dtype: str = "float16",
+    def __init__(self, wire_dtype="float16",
                  channel: Optional[RemoteChannel] = None,
                  packed: bool = True, sync: bool = True,
                  store=None, policy=None, channel_factory=None,
-                 breaker=None) -> None:
+                 breaker=None,
+                 chunk_bytes: Optional[int] = DEFAULT_CHUNK_BYTES) -> None:
         super().__init__(packed=packed, sync=sync, store=store)
-        if wire_dtype not in _WIRE_DTYPES:
-            raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
-                             f"one of {sorted(_WIRE_DTYPES)}")
-        self.wire_dtype = wire_dtype
+        self.wire_dtype = resolve_wire_dtype(wire_dtype)
+        # unpaged transfers stream in ~chunk_bytes pieces (the default);
+        # None falls back to the single monolithic shared_kv frame
+        self.chunk_bytes = chunk_bytes
         self.policy = policy                    # resilience.RetryPolicy
         self.channel_factory = channel_factory  # () -> RemoteChannel
         self.breaker = breaker                  # resilience.CircuitBreaker
@@ -845,6 +1343,7 @@ class RemoteTransport(Transport):
         self.channel = channel
         self._paged_rx = None          # lazy PagedReceiver over self.store
         self._xid = 0                  # paged exchange counter
+        self._sid = 0                  # stream id counter (fresh per try)
 
     # -- retry plumbing ----------------------------------------------------
     def _reset_channel(self) -> None:
@@ -901,6 +1400,9 @@ class RemoteTransport(Transport):
     def _ship_once(self, kvcfg: KVCommConfig, kv, select, states,
                    state_select,
                    assignment: Optional[LayerAssignment]) -> SharedKV:
+        if self.chunk_bytes is not None:
+            return self._ship_streamed(kvcfg, kv, select, states,
+                                       state_select, assignment)
         t0 = time.perf_counter()
         frame, n_bytes, layer_count, prefix_len = encode_kv_transfer(
             kvcfg, kv, select, states, state_select, assignment,
@@ -916,9 +1418,54 @@ class RemoteTransport(Transport):
         t3 = time.perf_counter()
         self.log.append(TransferRecord(
             kind="kv", n_bytes=n_decoded, layers=layer_count,
-            context_len=prefix_len, wire_dtype=self.wire_dtype,
+            context_len=prefix_len,
+            wire_dtype=wire_spec(self.wire_dtype),
             serialize_s=t1 - t0, channel_s=t2 - t1, deserialize_s=t3 - t2,
             frame_bytes=len(frame)))
+        return shared
+
+    def _ship_streamed(self, kvcfg: KVCommConfig, kv, select, states,
+                       state_select,
+                       assignment: Optional[LayerAssignment]) -> SharedKV:
+        """Chunked exchange over the loopback/echo channel: each stream
+        frame is encoded (serialize_s), written + echoed back (channel_s)
+        and fed to the assembler (deserialize_s) before the NEXT chunk is
+        encoded — the chunked cost structure a cross-process driver
+        overlaps.  A retry restarts under a fresh sid; the assembler
+        installs nothing until the end frame, so replay is idempotent."""
+        sid, self._sid = self._sid, self._sid + 1
+        sender = KVStreamSender(kvcfg, kv, select, states, state_select,
+                                assignment, self.wire_dtype, self.packed,
+                                chunk_bytes=self.chunk_bytes, sid=sid)
+        asm = KVStreamAssembler()
+        frames = sender.frames()
+        ser_s = chan_s = deser_s = 0.0
+        frame_bytes = 0
+        out = None
+        while out is None:
+            t0 = time.perf_counter()
+            try:
+                frame, _ = next(frames)
+            except StopIteration:   # pragma: no cover - assembler ends 1st
+                raise PayloadMismatchError(
+                    "KV stream exhausted before the end frame resolved")
+            t1 = time.perf_counter()
+            frame_bytes += len(frame)
+            self.channel.write(frame)
+            kind, meta, arrays = read_frame(self.channel)
+            t2 = time.perf_counter()
+            out = asm.feed(kind, meta, arrays)
+            t3 = time.perf_counter()
+            ser_s += t1 - t0
+            chan_s += t2 - t1
+            deser_s += t3 - t2
+        shared, n_bytes = out
+        self.log.append(TransferRecord(
+            kind="kv", n_bytes=n_bytes, layers=sender.layer_count,
+            context_len=sender.prefix_len,
+            wire_dtype=wire_spec(self.wire_dtype),
+            serialize_s=ser_s, channel_s=chan_s, deserialize_s=deser_s,
+            frame_bytes=frame_bytes))
         return shared
 
     def _send(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv, select,
@@ -1025,7 +1572,7 @@ class RemoteTransport(Transport):
             kind="kv",
             n_bytes=novel_bytes + table_rx.scale_nbytes + state_bytes,
             layers=layer_count, context_len=table.prefix_len,
-            wire_dtype=self.wire_dtype,
+            wire_dtype=wire_spec(self.wire_dtype),
             serialize_s=(t1 - t0) + (t4 - t3),
             channel_s=(t2 - t1) + (t5 - t4),
             deserialize_s=(t3 - t2) + (t6 - t5),

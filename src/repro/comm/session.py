@@ -200,6 +200,33 @@ class CommSession:
             self._sel_cache[cache_key] = select
         return select
 
+    def wire_plan(self, kvcfg: KVCommConfig,
+                  scores: Optional[jnp.ndarray] = None,
+                  key: Optional[str] = None,
+                  top_frac: float = 0.25,
+                  low_frac: float = 0.5) -> "WirePlan":
+        """The adaptive per-layer wire precision for (task key, kvcfg):
+        rank the FROZEN selection's layers by the same Eq. (1) calibration
+        scores (+ depth prior) that chose them, then tier the wire —
+        fp16 for the top ``top_frac``, int4 for the bottom ``low_frac``,
+        int8 between.  Pass the result (or its ``"plan:..."`` spec)
+        anywhere a ``wire_dtype`` goes (``SerializedTransport``,
+        ``RemoteTransport``, the paged store).  Uses the cached
+        calibration scores under ``key`` when ``scores`` is None; with no
+        scores at all, the Gaussian depth prior alone ranks the layers
+        (exactly how a prior_only selection was chosen)."""
+        from repro.comm.transport import WirePlan
+        select = self.selection(kvcfg, scores=scores, key=key)
+        if scores is None and key is not None:
+            scores = self._score_cache.get(key)
+        n = int(np.asarray(select).shape[0])
+        combined = (core.gaussian_prior(n, kvcfg.mu, kvcfg.sigma)
+                    if scores is None
+                    else core.selection_scores(jnp.asarray(scores), kvcfg))
+        return WirePlan.from_scores(np.asarray(combined),
+                                    select=np.asarray(select),
+                                    top_frac=top_frac, low_frac=low_frac)
+
     def _state_selection(self, kvcfg: KVCommConfig, states):
         """SSM layers have no attention mass — share by depth prior."""
         if states is None:

@@ -73,6 +73,193 @@ _WIRE_DTYPES = {
     "int8": jnp.int8,
 }
 
+# int4 has no jnp dtype — it travels nibble-packed in uint8 (two values per
+# byte along the trailing head-dim axis) with a per-layer fp32 scale
+_WIRE_BITS = {"float32": 32, "bfloat16": 16, "float16": 16, "int8": 8,
+              "int4": 4}
+# wires whose payload carries a per-layer fp32 scale array
+_SCALED_WIRES = ("int8", "int4")
+# finest → coarsest; a plan ships side-band state leaves at its finest tier
+_TIER_ORDER = ("float32", "bfloat16", "float16", "int8", "int4")
+_PLAN_PREFIX = "plan:"
+
+
+@dataclass(frozen=True)
+class WirePlan:
+    """A per-layer wire precision plan: ``dtypes[m]`` is the wire dtype of
+    the m-th *selected* (packed-order) layer slot.  Anywhere a uniform
+    ``wire_dtype`` string travels (frame headers, ``TransferRecord``,
+    ``BlockTable``) a plan travels as its canonical spec string
+    ``"plan:float16,int8,int4"`` — JSON-safe and order-preserving."""
+
+    dtypes: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtypes", tuple(self.dtypes))
+        for d in self.dtypes:
+            if d not in _WIRE_BITS:
+                raise ValueError(f"unknown wire dtype {d!r} in plan; "
+                                 f"expected one of {sorted(_WIRE_BITS)}")
+
+    def __len__(self) -> int:
+        return len(self.dtypes)
+
+    @property
+    def spec(self) -> str:
+        return _PLAN_PREFIX + ",".join(self.dtypes)
+
+    @classmethod
+    def parse(cls, spec: str) -> "WirePlan":
+        if not spec.startswith(_PLAN_PREFIX):
+            raise ValueError(f"not a wire-plan spec: {spec!r}")
+        body = spec[len(_PLAN_PREFIX):]
+        return cls(tuple(d for d in body.split(",") if d))
+
+    @classmethod
+    def from_scores(cls, scores, select=None, *, top_frac: float = 0.25,
+                    low_frac: float = 0.5, top_dtype: str = "float16",
+                    mid_dtype: str = "int8",
+                    low_dtype: str = "int4") -> "WirePlan":
+        """Allocate precision by calibration score: the top ``top_frac`` of
+        selected slots ship at ``top_dtype``, the bottom ``low_frac`` at
+        ``low_dtype``, the middle at ``mid_dtype``.  ``scores`` is the
+        per-layer importance over the sender's full depth (Eq. 1 combined
+        scores); ``select`` the frozen boolean selection mask (``None`` =
+        every layer is a slot).  With the default 16/8/4-bit tiers the low
+        count is floored at twice the top count, so the plan's payload
+        never exceeds a uniform int8 wire at ANY slot count (rounding the
+        fractions independently can otherwise overshoot, e.g. n=6), and it
+        ships fewer scale side-bands."""
+        scores = np.asarray(scores, dtype=np.float64).reshape(-1)
+        if select is not None:
+            slots = np.nonzero(np.asarray(select).reshape(-1))[0]
+            scores = scores[slots]
+        n = int(scores.shape[0])
+        if n == 0:
+            return cls(())
+        order = np.argsort(-scores, kind="stable")
+        n_top = int(round(top_frac * n))
+        # every 16-bit top slot must be paid for by two 4-bit low slots
+        # (16 + 2*4 = 3*8) or the int8 byte bound breaks
+        n_low = min(max(int(round(low_frac * n)), 2 * n_top), n - n_top)
+        dtypes = [mid_dtype] * n
+        for i in order[:n_top]:
+            dtypes[int(i)] = top_dtype
+        if n_low:
+            for i in order[n - n_low:]:
+                dtypes[int(i)] = low_dtype
+        return cls(tuple(dtypes))
+
+    def groups(self):
+        """Slots grouped by dtype, in order of first occurrence — the
+        deterministic array layout of a plan-encoded wire tuple."""
+        out: Dict[str, List[int]] = {}
+        for m, d in enumerate(self.dtypes):
+            out.setdefault(d, []).append(m)
+        return list(out.items())
+
+    @property
+    def state_dtype(self) -> str:
+        """Wire dtype for side-band state leaves: the finest tier present
+        in the plan (states are tiny next to KV — never down-bit them
+        below the best KV tier)."""
+        if not self.dtypes:
+            return "float16"
+        return min(set(self.dtypes), key=_TIER_ORDER.index)
+
+    def n_scaled(self) -> int:
+        """How many slots carry a per-layer scale (int8/int4)."""
+        return sum(1 for d in self.dtypes if d in _SCALED_WIRES)
+
+    def payload_bits(self) -> int:
+        """Sum of per-value bit widths across slots (scales excluded)."""
+        return sum(_WIRE_BITS[d] for d in self.dtypes)
+
+
+def resolve_wire_dtype(wire_dtype):
+    """Normalize/validate a wire dtype argument: a plain name passes
+    through, a ``"plan:..."`` spec parses to a ``WirePlan``, a ``WirePlan``
+    validates as-is.  Raises ``ValueError`` on anything else."""
+    if isinstance(wire_dtype, WirePlan):
+        return wire_dtype
+    if isinstance(wire_dtype, str):
+        if wire_dtype.startswith(_PLAN_PREFIX):
+            return WirePlan.parse(wire_dtype)
+        if wire_dtype in _WIRE_BITS:
+            return wire_dtype
+    raise ValueError(f"unsupported wire_dtype: {wire_dtype!r}; expected "
+                     f"one of {sorted(_WIRE_BITS)} or a 'plan:...' spec")
+
+
+def wire_spec(wire_dtype) -> str:
+    """The JSON-safe string form of a wire dtype or plan."""
+    wd = resolve_wire_dtype(wire_dtype)
+    return wd.spec if isinstance(wd, WirePlan) else wd
+
+
+def as_wire_plan(wire_dtype):
+    """The ``WirePlan`` behind a wire dtype argument, or ``None`` for a
+    uniform dtype."""
+    wd = resolve_wire_dtype(wire_dtype)
+    return wd if isinstance(wd, WirePlan) else None
+
+
+def wire_has_scales(wire_dtype) -> bool:
+    """Whether this wire ships per-layer fp32 scale side-bands."""
+    wd = resolve_wire_dtype(wire_dtype)
+    if isinstance(wd, WirePlan):
+        return len(wd) > 0
+    return wd in _SCALED_WIRES
+
+
+def state_wire_dtype(wire_dtype) -> str:
+    """The uniform dtype state leaves travel at for this wire."""
+    wd = resolve_wire_dtype(wire_dtype)
+    return wd.state_dtype if isinstance(wd, WirePlan) else wd
+
+
+def wire_array_count(wire_dtype) -> int:
+    """How many arrays ``encode_wire`` emits for one stacked payload part
+    at this wire dtype — the framing layer's expected arity."""
+    wd = resolve_wire_dtype(wire_dtype)
+    if isinstance(wd, WirePlan):
+        if not len(wd):
+            return 1    # empty-selection sentinel: one empty array
+        return sum(2 if d in _SCALED_WIRES else 1 for d, _ in wd.groups())
+    return 2 if wd in _SCALED_WIRES else 1
+
+
+def _pack_int4(q: np.ndarray) -> np.ndarray:
+    """Nibble-pack an int8 array of values in [-8, 7] pairwise along the
+    LAST axis → uint8 of half the trailing extent.  The sequence axis is
+    untouched, so page slicing and streaming chunk slicing work on packed
+    wires unchanged."""
+    if q.shape[-1] % 2:
+        raise ValueError("int4 wire requires an even trailing (head_dim) "
+                         f"axis; got shape {q.shape}")
+    lo = (q[..., 0::2] & 0x0F).astype(np.uint8)
+    hi = (q[..., 1::2] & 0x0F).astype(np.uint8)
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def _unpack_int4(p) -> jnp.ndarray:
+    """Inverse of ``_pack_int4`` (jnp — runs on device in decode)."""
+    p = jnp.asarray(p).astype(jnp.uint8)
+    lo = (p & 0x0F).astype(jnp.int8)
+    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+
+    def sx(v):  # sign-extend 4 bits
+        return jnp.where(v > 7, v - 16, v)
+
+    pairs = jnp.stack([sx(lo), sx(hi)], axis=-1)
+    return pairs.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+
+
+def _int4_scale(x: jnp.ndarray) -> jnp.ndarray:
+    absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
+                     keepdims=True)
+    return jnp.maximum(absmax, 1e-8) / 7.0
+
 
 # ---------------------------------------------------------------------------
 # the wire codec — module-level so every transport that materializes a
@@ -80,11 +267,17 @@ _WIRE_DTYPES = {
 # shares ONE cast/quantize implementation and their byte accounting can
 # never diverge
 # ---------------------------------------------------------------------------
-def encode_wire(x: jnp.ndarray, wire_dtype: str):
+def encode_wire(x: jnp.ndarray, wire_dtype):
     """Cast one stacked array (leading layer axis) to its wire form.
     Returns ``((arrays...), n_bytes)`` — one array for float wires, a
     (quantized, per-layer fp32 scales) pair for int8 (symmetric per-layer
-    quantization; the scales are part of the payload and counted)."""
+    quantization) and int4 (nibble-packed trailing axis); the scales are
+    part of the payload and counted.  A ``WirePlan`` (or ``"plan:..."``
+    spec) encodes each dtype group with this same uniform codec and
+    concatenates the group tuples in ``plan.groups()`` order."""
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    if isinstance(wire_dtype, WirePlan):
+        return _encode_wire_plan(x, wire_dtype)
     if wire_dtype == "int8":
         # symmetric per-layer scales (leading axis), shipped alongside
         # the payload; works for KV stacks and SSM state leaves alike
@@ -95,21 +288,125 @@ def encode_wire(x: jnp.ndarray, wire_dtype: str):
                        .astype(jnp.int8))
         s = np.asarray(scale, dtype=np.float32)
         return (q, s), q.nbytes + s.nbytes
+    if wire_dtype == "int4":
+        scale = _int4_scale(jnp.asarray(x))
+        q = np.asarray(jnp.clip(jnp.round(x / scale), -7, 7)
+                       .astype(jnp.int8))
+        packed = _pack_int4(q)
+        s = np.asarray(scale, dtype=np.float32)
+        return (packed, s), packed.nbytes + s.nbytes
     wire = np.asarray(x.astype(_WIRE_DTYPES[wire_dtype]))
     return (wire,), wire.nbytes
 
 
-def decode_wire(wire, wire_dtype: str, dtype) -> jnp.ndarray:
+def _encode_wire_plan(x, plan: WirePlan):
+    x = jnp.asarray(x)
+    if x.shape[0] != len(plan):
+        raise ValueError(f"wire plan covers {len(plan)} slots but payload "
+                         f"has {x.shape[0]} layers")
+    if not len(plan):
+        # empty selection: a single zero-element fp16 array keeps the
+        # frame layout shape-preserving while counting zero bytes
+        empty = np.zeros(x.shape, np.float16)
+        return (empty,), 0
+    arrays, n = [], 0
+    for dt, slots in plan.groups():
+        wire, nb = encode_wire(x[np.asarray(slots)], dt)
+        arrays.extend(wire)
+        n += nb
+    return tuple(arrays), n
+
+
+def decode_wire(wire, wire_dtype, dtype) -> jnp.ndarray:
     """Inverse of ``encode_wire``: reconstruct the compute-dtype array from
-    the wire arrays (dequantizing through fp32 for int8)."""
+    the wire arrays (dequantizing through fp32 for int8/int4)."""
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    if isinstance(wire_dtype, WirePlan):
+        return _decode_wire_plan(wire, wire_dtype, dtype)
     if wire_dtype == "int8":
         q, s = wire
         return (jnp.asarray(q).astype(jnp.float32) * jnp.asarray(s)) \
             .astype(dtype)
+    if wire_dtype == "int4":
+        p, s = wire
+        q = _unpack_int4(p)
+        return (q.astype(jnp.float32) * jnp.asarray(s)).astype(dtype)
     return jnp.asarray(wire[0]).astype(dtype)
 
 
-def device_wire_roundtrip(x, wire_dtype: str, dtype) -> jnp.ndarray:
+def np_encode_wire(x: np.ndarray, wire_dtype):
+    """Host-side ``encode_wire`` for one uniform (non-plan) wire dtype:
+    the same cast/quantize math in pure numpy.  The stream sender encodes
+    each slot with this — per-slot jnp dispatch cost the chunked path as
+    much as the whole monolithic encode, erasing the pipeline win.  The
+    per-layer reductions, ``round``-half-even, and float casts are all
+    IEEE-identical to the jnp codec on the host backend; bit-parity is
+    pinned by the streamed-equals-monolithic tests."""
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    if isinstance(wire_dtype, WirePlan):
+        raise ValueError("np_encode_wire takes a uniform wire dtype; plan "
+                         "wires encode slot-by-slot")
+    x = np.asarray(x)
+    if wire_dtype in _SCALED_WIRES:
+        qmax = np.float32(127.0 if wire_dtype == "int8" else 7.0)
+        absmax = np.max(np.abs(x), axis=tuple(range(1, x.ndim)),
+                        keepdims=True)
+        scale = (np.maximum(absmax, np.float32(1e-8)) / qmax) \
+            .astype(np.float32)
+        q = np.clip(np.round(x / scale), -qmax, qmax).astype(np.int8)
+        data = q if wire_dtype == "int8" else _pack_int4(q)
+        return (data, scale), data.nbytes + scale.nbytes
+    wire = x.astype(_WIRE_DTYPES[wire_dtype])
+    return (wire,), wire.nbytes
+
+
+def np_decode_wire(wire, wire_dtype, dtype) -> np.ndarray:
+    """Host-side ``decode_wire`` for one uniform (non-plan) wire dtype:
+    identical cast/dequant math in pure numpy.  The streaming assembler
+    decodes every bounded chunk with this — a jnp dispatch + host sync
+    per 64 KB chunk made the receiver the pipeline bottleneck (streamed
+    transfers ran slower than monolithic).  Bit-parity with
+    ``decode_wire`` is pinned by the streamed-equals-monolithic tests;
+    the two must not drift."""
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    if isinstance(wire_dtype, WirePlan):
+        raise ValueError("np_decode_wire takes a uniform wire dtype; plan "
+                         "wires decode slot-by-slot")
+    dtype = np.dtype(_WIRE_DTYPES.get(dtype, dtype)
+                     if isinstance(dtype, str) else dtype)
+    if wire_dtype == "int8":
+        q, s = wire
+        return (np.asarray(q).astype(np.float32)
+                * np.asarray(s, np.float32)).astype(dtype)
+    if wire_dtype == "int4":
+        p, s = wire
+        p = np.asarray(p, np.uint8)
+        lo = (p & 0x0F).astype(np.int8)
+        hi = ((p >> 4) & 0x0F).astype(np.int8)
+        sx = lambda v: np.where(v > 7, v - 16, v).astype(np.int8)
+        q = np.stack([sx(lo), sx(hi)], axis=-1) \
+            .reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+        return (q.astype(np.float32)
+                * np.asarray(s, np.float32)).astype(dtype)
+    return np.asarray(wire[0]).astype(dtype)
+
+
+def _decode_wire_plan(wire, plan: WirePlan, dtype) -> jnp.ndarray:
+    if not len(plan):
+        return jnp.asarray(wire[0]).astype(dtype)
+    it = iter(wire)
+    out = None
+    for dt, slots in plan.groups():
+        arrs = ((next(it), next(it)) if dt in _SCALED_WIRES
+                else (next(it),))
+        part = decode_wire(arrs, dt, dtype)
+        if out is None:
+            out = jnp.zeros((len(plan),) + part.shape[1:], dtype)
+        out = out.at[np.asarray(slots)].set(part)
+    return out
+
+
+def device_wire_roundtrip(x, wire_dtype, dtype) -> jnp.ndarray:
     """``decode_wire(encode_wire(x))`` without ever leaving the device: the
     same cast/quantize math as the codec above, but no ``np.asarray`` host
     sync.  The async paged path builds its receiver view with this while
@@ -117,11 +414,28 @@ def device_wire_roundtrip(x, wire_dtype: str, dtype) -> jnp.ndarray:
     bit-parity with a pool-materialized view is asserted in tests, so the
     two implementations cannot drift apart silently."""
     x = jnp.asarray(x)
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    if isinstance(wire_dtype, WirePlan):
+        if not len(wire_dtype):
+            return x.astype(jnp.float16).astype(dtype)
+        out = jnp.zeros(x.shape, dtype)
+        for dt, slots in wire_dtype.groups():
+            idx = np.asarray(slots)
+            out = out.at[idx].set(device_wire_roundtrip(x[idx], dt, dtype))
+        return out
     if wire_dtype == "int8":
         absmax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
                          keepdims=True)
         scale = jnp.maximum(absmax, 1e-8) / 127.0
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return (q.astype(jnp.float32)
+                * scale.astype(jnp.float32)).astype(dtype)
+    if wire_dtype == "int4":
+        scale = _int4_scale(x)
+        q = jnp.clip(jnp.round(x / scale), -7, 7).astype(jnp.int8)
+        # nibble packing is a bit-layout transform — it cannot change the
+        # quantized values, so the device roundtrip skips it and stays
+        # bit-par with the host pack→unpack→dequant path
         return (q.astype(jnp.float32)
                 * scale.astype(jnp.float32)).astype(dtype)
     return x.astype(_WIRE_DTYPES[wire_dtype]).astype(dtype)
@@ -140,19 +454,22 @@ def roundtrip_kv(payload, wire_dtype: str, dtype):
     return out, n
 
 
-def roundtrip_states(states, state_select, wire_dtype: str):
+def roundtrip_states(states, state_select, wire_dtype):
     """Wire-cast the selected SSM state layers; returns the receiver
-    view (non-selected layers zeroed) and the counted bytes."""
+    view (non-selected layers zeroed) and the counted bytes.  Under a
+    ``WirePlan`` states travel at the plan's finest tier (state stacks
+    span the full depth — a per-selected-slot plan does not index them)."""
     if states is None or state_select is None:
         return states, 0
+    wd = state_wire_dtype(wire_dtype)
     sel = np.nonzero(np.asarray(state_select))[0]
     counted = [0]
 
     def roundtrip(x):
-        wire, n = encode_wire(jnp.asarray(x)[sel], wire_dtype)
+        wire, n = encode_wire(jnp.asarray(x)[sel], wd)
         counted[0] += n
         dense = jnp.zeros_like(x)
-        return dense.at[sel].set(decode_wire(wire, wire_dtype, x.dtype))
+        return dense.at[sel].set(decode_wire(wire, wd, x.dtype))
 
     return jax.tree.map(roundtrip, states), counted[0]
 
@@ -400,11 +717,11 @@ class Transport(abc.ABC):
             "(heterogeneous) transfers; override _send_mapped")
 
     # -- the paged (content-addressed) path --------------------------------
-    def _paged_wire_dtype(self, kv) -> str:
-        """The wire dtype the store hashes/pages at.  Transports with an
-        explicit wire dtype use it; the in-memory hand-over pages at the
-        model's own dtype (a lossless cast), falling back to fp32 when the
-        compute dtype has no wire form."""
+    def _paged_wire_dtype(self, kv):
+        """The wire dtype (possibly a ``WirePlan``) the store hashes/pages
+        at.  Transports with an explicit wire dtype use it; the in-memory
+        hand-over pages at the model's own dtype (a lossless cast), falling
+        back to fp32 when the compute dtype has no wire form."""
         wd = getattr(self, "wire_dtype", None)
         if wd is not None:
             return wd
@@ -468,7 +785,7 @@ class Transport(abc.ABC):
             kind="kv", n_bytes=novel_bytes + table.scale_nbytes
             + state_bytes,
             layers=layer_count, context_len=table.prefix_len,
-            wire_dtype=getattr(self, "wire_dtype", "model"),
+            wire_dtype=self._wire_spec(),
             pages_total=table.num_pages, pages_sent=len(novel),
             pages_hit=table.num_pages - len(novel)))
         return shared
@@ -513,8 +830,7 @@ class Transport(abc.ABC):
             shared = shared.to_dense()
         rec = TransferRecord(
             kind="kv", n_bytes=0, layers=layer_count,
-            context_len=prefix_len,
-            wire_dtype=getattr(self, "wire_dtype", "model"))
+            context_len=prefix_len, wire_dtype=self._wire_spec())
         self.log.append(rec)
 
         def ingest():
@@ -546,6 +862,12 @@ class Transport(abc.ABC):
         n = batch * d_model * itemsize
         self.log.append(TransferRecord("hidden", n, 1, 1))
         return n
+
+    def _wire_spec(self) -> str:
+        """The record-friendly string form of this transport's wire dtype
+        ("model" for the dtype-less in-memory hand-over)."""
+        wd = getattr(self, "wire_dtype", None)
+        return "model" if wd is None else wire_spec(wd)
 
     def _record_kv(self, n_bytes: int, select, prefix_len: int,
                    wire_dtype: str) -> None:
@@ -604,19 +926,17 @@ class SerializedTransport(Transport):
     are zeros — masked out by ``select`` on the receiver), so either
     round-trip is exact modulo the wire cast.
 
-    ``wire_dtype``: "float16" (default) | "bfloat16" | "float32" | "int8".
-    int8 uses per-layer symmetric quantization; the fp32 scales are counted
-    as part of the payload.
+    ``wire_dtype``: "float16" (default) | "bfloat16" | "float32" | "int8"
+    | "int4" | a ``WirePlan`` (or its "plan:..." spec) for adaptive
+    per-layer precision.  int8/int4 use per-layer symmetric quantization;
+    the fp32 scales are counted as part of the payload.
     """
 
-    def __init__(self, wire_dtype: str = "float16",
+    def __init__(self, wire_dtype="float16",
                  packed: bool = True, sync: bool = True,
                  store=None) -> None:
         super().__init__(packed=packed, sync=sync, store=store)
-        if wire_dtype not in _WIRE_DTYPES:
-            raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
-                             f"one of {sorted(_WIRE_DTYPES)}")
-        self.wire_dtype = wire_dtype
+        self.wire_dtype = resolve_wire_dtype(wire_dtype)
 
     # -- wire codec (module-level functions, shared with RemoteTransport) --
     def _roundtrip_kv(self, payload, dtype):
@@ -655,7 +975,7 @@ class SerializedTransport(Transport):
             shared = build_shared(kvcfg, rx_kv, select, rx_states,
                                   state_select)
         self._record_kv(n_bytes, select, shared.prefix_len,
-                        wire_dtype=self.wire_dtype)
+                        wire_dtype=self._wire_spec())
         return shared
 
     def _send_mapped(self, cfg: ModelConfig, kvcfg: KVCommConfig, kv,
@@ -685,5 +1005,5 @@ class SerializedTransport(Transport):
                                     state_select=state_select)
         self.log.append(TransferRecord(
             kind="kv", n_bytes=n_bytes, layers=assignment.num_pairs,
-            context_len=prefix_len, wire_dtype=self.wire_dtype))
+            context_len=prefix_len, wire_dtype=self._wire_spec()))
         return shared

@@ -138,9 +138,43 @@ def combine_senders(shareds: List[SharedKV]) -> SharedKV:
                     prefix_len=prefix_len, pos_mode=base.pos_mode)
 
 
+# per-value wire widths, mirrored from repro.comm.transport._WIRE_BITS
+# (kept local — core must not import comm; drift is caught by the
+# measured-vs-analytic byte assertions in the transport conformance tests)
+_WIRE_BITS = {"float32": 32, "bfloat16": 16, "float16": 16, "int8": 8,
+              "int4": 4}
+
+
+def _plan_dtypes(plan) -> Optional[Tuple[str, ...]]:
+    """Normalize a plan argument: a ``WirePlan``-like object (has
+    ``.dtypes``), a ``"plan:..."`` spec string, or an iterable of wire
+    dtype names → per-slot dtype tuple; ``None`` stays ``None``."""
+    if plan is None:
+        return None
+    if hasattr(plan, "dtypes"):
+        return tuple(plan.dtypes)
+    if isinstance(plan, str):
+        body = plan[5:] if plan.startswith("plan:") else plan
+        return tuple(d for d in body.split(",") if d)
+    return tuple(plan)
+
+
 def kv_wire_bytes(cfg: ModelConfig, batch: int, context_len: int,
-                  num_layers_sent: int, itemsize: int = 2) -> int:
-    """Analytic wire bytes for KV transfer (cross-check for tests)."""
+                  num_layers_sent: int, itemsize: int = 2,
+                  plan=None) -> int:
+    """Analytic wire bytes for KV transfer (cross-check for tests).
+
+    ``plan`` (a ``WirePlan``, its "plan:..." spec, or a per-slot dtype
+    sequence) switches to adaptive per-layer accounting: each slot is
+    billed at its own wire width (int4 = half a byte per value — the even
+    head-dim requirement makes the per-layer byte count integral).
+    Quantization scales stay side-band, uncounted, exactly like the
+    uniform int8 convention."""
+    dtypes = _plan_dtypes(plan)
+    if dtypes is not None:
+        per_layer_vals = (2 * batch * context_len
+                          * cfg.num_kv_heads * cfg.resolved_head_dim)
+        return sum(per_layer_vals * _WIRE_BITS[d] for d in dtypes) // 8
     return (2 * num_layers_sent * batch * context_len
             * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize)
 
@@ -148,7 +182,7 @@ def kv_wire_bytes(cfg: ModelConfig, batch: int, context_len: int,
 def kv_wire_bytes_paged(cfg: ModelConfig, batch: int, context_len: int,
                         num_layers_sent: int, *, page_len: int,
                         pages_sent: Optional[int] = None,
-                        itemsize: int = 2) -> int:
+                        itemsize: int = 2, plan=None) -> int:
     """Analytic wire bytes for a PAGED KV transfer: ``pages_sent`` pages
     (default: every page the prefix splits into — the cold-pool first
     transfer) at the fixed page size.  Every page is
@@ -156,11 +190,38 @@ def kv_wire_bytes_paged(cfg: ModelConfig, batch: int, context_len: int,
     zero-padded up to ``page_len``, so a cold transfer costs slightly MORE
     than the unpaged ``kv_wire_bytes`` unless ``page_len`` divides
     ``context_len``; dedup (``pages_sent`` < the total) is where the paged
-    wire wins.  Block-table IDs and int8 scales are control plane /
+    wire wins.  Block-table IDs and int8/int4 scales are control plane /
     side-band and not counted here (same convention as ``kv_wire_bytes``
-    leaving out the int8 scales)."""
+    leaving out the scales).
+
+    ``plan`` switches to adaptive per-layer accounting; a page is then
+    billed at its own layer's wire width.  ``pages_sent`` under a plan may
+    be a per-slot sequence (pages shipped per layer slot); an int is only
+    unambiguous at 0 (warm pool) or the full total (cold pool)."""
     pages_per_layer = -(-context_len // page_len)    # ceil
+    page_vals = (2 * batch * page_len
+                 * cfg.num_kv_heads * cfg.resolved_head_dim)
+    dtypes = _plan_dtypes(plan)
+    if dtypes is not None:
+        total = len(dtypes) * pages_per_layer
+        if pages_sent is None:
+            per_slot = [pages_per_layer] * len(dtypes)
+        elif isinstance(pages_sent, int):
+            if pages_sent == 0:
+                per_slot = [0] * len(dtypes)
+            elif pages_sent == total:
+                per_slot = [pages_per_layer] * len(dtypes)
+            else:
+                raise ValueError(
+                    "a partial int pages_sent is ambiguous under a plan "
+                    "(per-layer widths differ); pass a per-slot sequence")
+        else:
+            per_slot = list(pages_sent)
+            if len(per_slot) != len(dtypes):
+                raise ValueError(f"pages_sent has {len(per_slot)} entries "
+                                 f"for a {len(dtypes)}-slot plan")
+        return sum(n * page_vals * _WIRE_BITS[d]
+                   for n, d in zip(per_slot, dtypes)) // 8
     total = num_layers_sent * pages_per_layer
     sent = total if pages_sent is None else pages_sent
-    return (2 * sent * batch * page_len
-            * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize)
+    return sent * page_vals * itemsize

@@ -78,13 +78,21 @@ def serve_channel(agent: Agent, channel: RemoteChannel, store=None, *,
     client blocks only its own read — never the fleet (the head-of-line
     fix ``KVServer.serve`` relies on).  ``health_extra`` supplies the
     server-level routing signals (queue depth, slot occupancy) folded
-    into the v2 ``health_ack`` payload."""
-    from repro.comm.remote import decode_kv_transfer
+    into the v2 ``health_ack`` payload.
+
+    Streaming installs (``kv_stream_begin``/``chunk``/``end``) feed a
+    per-connection ``KVStreamAssembler``; the decoded prefix replaces the
+    installed one only when the END frame lands with full coverage, so a
+    client dying (or retrying under a fresh stream id) mid-stream leaves
+    the previously installed prefix untouched — chunk replay is
+    idempotent."""
+    from repro.comm.remote import KVStreamAssembler, decode_kv_transfer
     paged_rx = pinned = None
     if store is not None:
         from repro.store.wire import PagedReceiver
         paged_rx = PagedReceiver(store)
     guard = lock if lock is not None else contextlib.nullcontext()
+    assembler = KVStreamAssembler()
     shared: Optional[SharedKV] = None
     answered = 0
     try:
@@ -98,6 +106,11 @@ def serve_channel(agent: Agent, channel: RemoteChannel, store=None, *,
             with guard:
                 if kind == "shared_kv":
                     shared, _ = decode_kv_transfer(meta, arrays)
+                elif kind in ("kv_stream_begin", "kv_stream_chunk",
+                              "kv_stream_end"):
+                    done = assembler.feed(kind, meta, arrays)
+                    if done is not None:
+                        shared, _ = done
                 elif kind == "page_query" and paged_rx is not None:
                     channel.write(paged_rx.handle_query(meta, arrays))
                 elif kind == "page_data" and paged_rx is not None:
@@ -400,6 +413,7 @@ class KVClient:
         self.policy = policy
         self.sent_bytes = 0
         self._xid = 0
+        self._sid = 0          # stream id: fresh per streamed share try
         self._reshare = None   # replays the last successful share
 
     @classmethod
@@ -436,29 +450,37 @@ class KVClient:
 
     # -- operations ---------------------------------------------------------
     def share(self, sender: Agent, context: np.ndarray,
-              kvcfg: KVCommConfig, select, *, wire_dtype: str = "float16",
-              packed: bool = True) -> int:
+              kvcfg: KVCommConfig, select, *, wire_dtype="float16",
+              packed: bool = True,
+              chunk_bytes: Optional[int] = None) -> int:
         """Export the sender's KV over ``context`` and ship the selected
         layers; the server installs the decoded view as the current prefix.
-        Returns (and accumulates) the payload wire bytes."""
+        ``chunk_bytes`` streams the transfer in bounded
+        begin/chunk/end frames (the server decodes each chunk as it
+        lands, overlapping the client's encode of the next one); ``None``
+        keeps the single monolithic frame.  A retried streamed share
+        restarts under a FRESH stream id — the server installs nothing
+        until an end frame completes, so replay is idempotent.  Returns
+        (and accumulates) the payload wire bytes."""
         def once():
             return self._share_once(sender, context, kvcfg, select,
-                                    wire_dtype, packed)
+                                    wire_dtype, packed, chunk_bytes)
         n = self._with_retry(once, "remote share", replay=False)
         self._reshare = once
         return n
 
     def _share_once(self, sender, context, kvcfg, select, wire_dtype,
-                    packed) -> int:
+                    packed, chunk_bytes=None) -> int:
         kv, states, _ = sender.export_kv(context)
         state_select = None
         if states is not None:
             import jax
             n_ssm = jax.tree.leaves(states)[0].shape[0]
             state_select = np.ones((n_ssm,), bool)
+        sid, self._sid = self._sid, self._sid + 1
         n = send_shared(self.channel, kvcfg, kv, select, states=states,
                         state_select=state_select, wire_dtype=wire_dtype,
-                        packed=packed)
+                        packed=packed, chunk_bytes=chunk_bytes, sid=sid)
         self.sent_bytes += n
         return n
 
@@ -614,7 +636,9 @@ def run_client(args) -> None:
                   f"({total - sent} pool hits)")
         else:
             n = client.share(sender, batch["context"], kvcfg, select,
-                             wire_dtype=args.wire_dtype)
+                             wire_dtype=args.wire_dtype,
+                             chunk_bytes=(args.chunk_kb * 1024
+                                          if args.chunk_kb > 0 else None))
         toks = client.generate(batch["query"], max_new=1)
     finally:
         client.close()
@@ -645,7 +669,14 @@ def main(argv=None) -> None:
     c.add_argument("--requests", type=int, default=8)
     c.add_argument("--ratio", type=float, default=0.5)
     c.add_argument("--wire-dtype", default="float16",
-                   choices=["float16", "bfloat16", "float32", "int8"])
+                   help="float16 | bfloat16 | float32 | int8 | int4, or "
+                        "an adaptive per-layer 'plan:<dtype,dtype,...>' "
+                        "spec with one entry per selected layer")
+    c.add_argument("--chunk-kb", type=int, default=0,
+                   help=">0 streams the (unpaged) share in frames of "
+                        "roughly this many KiB instead of one monolithic "
+                        "frame, so the server decodes while the client "
+                        "still encodes")
     c.add_argument("--paged", action="store_true",
                    help="ship via the dedup-aware paged wire (the server "
                         "must run with --pool-mb > 0)")

@@ -33,20 +33,31 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.transport import _WIRE_DTYPES, decode_wire, encode_wire
+from repro.comm.transport import (_WIRE_BITS, as_wire_plan, decode_wire,
+                                  encode_wire, resolve_wire_dtype,
+                                  wire_has_scales, wire_spec)
 from repro.core.types import SharedKV
 
 
 def _wire_np_dtype(name: str) -> np.dtype:
-    """The numpy dtype of a wire array (int8 payloads are int8; float
-    wires are their own dtype, via ml_dtypes for bfloat16)."""
+    """The numpy dtype of a wire array (int8 payloads are int8; int4 is
+    nibble-packed uint8; float wires are their own dtype, via ml_dtypes
+    for bfloat16)."""
     if name == "int8":
         return np.dtype(np.int8)
+    if name == "int4":
+        return np.dtype(np.uint8)
     try:
         return np.dtype(name)
     except TypeError:
         import ml_dtypes
         return np.dtype(getattr(ml_dtypes, name))
+
+
+def _wire_trailing(name: str, head_dim: int) -> int:
+    """The trailing (head-dim) extent of a wire array: int4 nibble-packs
+    pairs along that axis, everything else keeps it."""
+    return head_dim // 2 if name == "int4" else head_dim
 
 
 def page_id_for(layer: int, start: int, length: int,
@@ -104,7 +115,10 @@ class BlockTable:
     kv_heads: int
     head_dim: int
     src_layers: Optional[Tuple[int, ...]] = None   # hetero provenance
-    scales: Optional[Dict[str, np.ndarray]] = None  # int8: (M,1,1,1,1) fp32
+    # quantized wires: (M, 1, 1, 1, 1) fp32 per-layer scales.  Under a
+    # WirePlan the dict always spans the FULL M slots, with 1.0 fillers at
+    # unscaled (float) slots, so slot indexing stays uniform.
+    scales: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def pages_per_slot(self) -> int:
@@ -117,13 +131,31 @@ class BlockTable:
     def all_ids(self) -> List[str]:
         return [pid for ids in self.page_ids for pid in ids]
 
+    def slot_wire_dtype(self, m: int) -> str:
+        """The wire dtype of packed slot ``m`` — ``wire_dtype`` itself for
+        a uniform wire, the plan's per-slot entry under a ``plan:...``
+        spec."""
+        plan = as_wire_plan(self.wire_dtype)
+        return self.wire_dtype if plan is None else plan.dtypes[m]
+
+    def slot_page_nbytes(self, m: int) -> int:
+        """Bytes of ONE of slot ``m``'s pages' k+v wire arrays."""
+        vals = 2 * self.batch * self.page_len * self.kv_heads \
+            * self.head_dim
+        return (vals * _WIRE_BITS[self.slot_wire_dtype(m)]) // 8
+
     @property
     def page_nbytes(self) -> int:
         """Bytes of ONE page's k+v wire arrays (every page is the same
-        fixed size — the accounting the paged analytics rest on)."""
-        isz = _wire_np_dtype(self.wire_dtype).itemsize
-        return 2 * self.batch * self.page_len * self.kv_heads \
-            * self.head_dim * isz
+        fixed size — the accounting the paged analytics rest on).  Under
+        a mixed-precision plan page sizes differ per slot; use
+        ``slot_page_nbytes``."""
+        if as_wire_plan(self.wire_dtype) is not None:
+            raise ValueError("page size varies per slot under a wire "
+                             "plan; use slot_page_nbytes(m)")
+        vals = 2 * self.batch * self.page_len * self.kv_heads \
+            * self.head_dim
+        return (vals * _WIRE_BITS[self.wire_dtype]) // 8
 
     @property
     def scale_nbytes(self) -> int:
@@ -182,23 +214,51 @@ def split_payload(payload, *, layers: Sequence[int],
     then position).  Duplicate content within one payload (two layers or
     two spans hashing identically) yields one Page per occurrence — the
     pool deduplicates on insert.  The encode happens HERE, once over each
-    full layer, so int8 scales (and therefore page bytes) are independent
-    of the paging — identical to what the unpaged wire would ship.
+    full layer, so int8/int4 scales (and therefore page bytes) are
+    independent of the paging — identical to what the unpaged wire would
+    ship.
+
+    ``wire_dtype`` may be a plain name, a ``WirePlan``, or its
+    ``"plan:..."`` spec.  Under a plan each slot is encoded at its own
+    dtype; the slot dtype joins the page-hash preamble (and the scale
+    salt covers every slot), so the same content at different precisions
+    can never alias in the pool.
     """
-    if wire_dtype not in _WIRE_DTYPES:
-        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
-                         f"one of {sorted(_WIRE_DTYPES)}")
+    wire_dtype = resolve_wire_dtype(wire_dtype)
+    plan = as_wire_plan(wire_dtype)
+    spec = wire_spec(wire_dtype)
     if page_len <= 0:
         raise ValueError(f"page_len must be positive, got {page_len}")
     M, B, Sc, Hkv, Dh = (int(d) for d in payload["k"].shape)
+    if plan is not None and len(plan) != M:
+        raise ValueError(f"wire plan covers {len(plan)} slots but the "
+                         f"payload packs {M}")
+    slot_dtypes = list(plan.dtypes) if plan is not None else [spec] * M
     compute_dtype = np.dtype(payload["k"].dtype).name
-    wires, scales = {}, None
-    for part in ("k", "v"):
-        arrs, _ = encode_wire(jnp.asarray(payload[part]), wire_dtype)
-        wires[part] = np.asarray(arrs[0])
-        if len(arrs) > 1:
-            scales = scales or {}
-            scales[part] = np.asarray(arrs[1], np.float32)
+    # per-slot wire arrays (B, Sc, Hkv, Dw) — one whole-layer encode per
+    # slot, so scales never depend on the paging
+    wires: Dict[str, List[np.ndarray]] = {"k": [], "v": []}
+    scales = None
+    if plan is None:
+        for part in ("k", "v"):
+            arrs, _ = encode_wire(jnp.asarray(payload[part]), spec)
+            stack = np.asarray(arrs[0])
+            wires[part] = [stack[m] for m in range(M)]
+            if len(arrs) > 1:
+                scales = scales or {}
+                scales[part] = np.asarray(arrs[1], np.float32)
+    else:
+        if len(plan):
+            # full-M scale grid, 1.0 at unscaled slots (uniform indexing)
+            scales = {part: np.ones((M, 1, 1, 1, 1), np.float32)
+                      for part in ("k", "v")}
+        for m, dt in enumerate(slot_dtypes):
+            for part in ("k", "v"):
+                arrs, _ = encode_wire(
+                    jnp.asarray(payload[part][m:m + 1]), dt)
+                wires[part].append(np.asarray(arrs[0])[0])
+                if len(arrs) > 1:
+                    scales[part][m] = np.asarray(arrs[1], np.float32)[0]
     n_pages = -(-Sc // page_len)
     grid: List[Tuple[str, ...]] = []
     pages: List[Page] = []
@@ -206,18 +266,20 @@ def split_payload(payload, *, layers: Sequence[int],
         salt = b""
         if scales is not None:
             salt = scales["k"][m].tobytes() + scales["v"][m].tobytes()
+        dw = _wire_trailing(slot_dtypes[m], Dh)
         ids = []
         for p in range(n_pages):
             start = p * page_len
             length = min(page_len, Sc - start)
             blk = {}
             for part in ("k", "v"):
-                b = np.zeros((B, page_len, Hkv, Dh),
-                             dtype=wires[part].dtype)
-                b[:, :length] = wires[part][m, :, start:start + length]
+                b = np.zeros((B, page_len, Hkv, dw),
+                             dtype=wires[part][m].dtype)
+                b[:, :length] = wires[part][m][:, start:start + length]
                 blk[part] = b
             pid = page_id_for(int(layers[m]), start, length, blk["k"],
-                              blk["v"], wire_dtype=wire_dtype, salt=salt)
+                              blk["v"], wire_dtype=slot_dtypes[m],
+                              salt=salt)
             pages.append(Page(page_id=pid, layer=int(layers[m]),
                               start=start, length=length,
                               k=blk["k"], v=blk["v"]))
@@ -229,7 +291,7 @@ def split_payload(payload, *, layers: Sequence[int],
                     else tuple(int(i) for i in src_layers)),
         select=tuple(bool(b) for b in np.asarray(select)),
         prefix_len=Sc, page_len=page_len, pos_mode=pos_mode,
-        wire_dtype=wire_dtype, compute_dtype=compute_dtype,
+        wire_dtype=spec, compute_dtype=compute_dtype,
         batch=B, kv_heads=Hkv, head_dim=Dh, scales=scales)
     return table, pages
 
@@ -245,10 +307,15 @@ def rebuild_payload(table: BlockTable, pages: Dict[str, Page],
     scheduler's bucket-padded gather).  Raises ``KeyError`` naming the
     first page ID absent from ``pages``."""
     out_len = table.prefix_len if out_len is None else out_len
+    if as_wire_plan(table.wire_dtype) is not None:
+        raise ValueError("wire dtypes vary per slot under a plan — the "
+                         "stacked wire view does not exist; use "
+                         "rebuild_decoded")
     M = len(table.page_ids)
     dt = _wire_np_dtype(table.wire_dtype)
-    out = {part: np.zeros((M, table.batch, out_len, table.kv_heads,
-                           table.head_dim), dt) for part in ("k", "v")}
+    dw = _wire_trailing(table.wire_dtype, table.head_dim)
+    out = {part: np.zeros((M, table.batch, out_len, table.kv_heads, dw),
+                          dt) for part in ("k", "v")}
     for m, ids in enumerate(table.page_ids):
         for pid in ids:
             pg = pages[pid]
@@ -261,18 +328,61 @@ def rebuild_payload(table: BlockTable, pages: Dict[str, Page],
     return out
 
 
+def rebuild_decoded(table: BlockTable, pages: Dict[str, Page],
+                    out_len: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Reassemble resident pages and decode them back to the compute
+    dtype: a zero-initialized (M, B, out_len, Hkv, Dh) stack per part
+    (``out_len`` defaults to ``prefix_len``; a larger value is the
+    scheduler's bucket-padded gather — pad positions stay zero).  Handles
+    uniform wires and per-slot ``WirePlan`` tables alike; this is the one
+    decode path ``rebuild_shared`` and ``PageStore.gather_prefix``
+    share."""
+    out_len = table.prefix_len if out_len is None else out_len
+    dtype = np.dtype(table.compute_dtype)
+    plan = as_wire_plan(table.wire_dtype)
+    if plan is None:
+        wire = rebuild_payload(table, pages, out_len)
+        payload = {}
+        for part in ("k", "v"):
+            arrs = ((wire[part], table.scales[part])
+                    if wire_has_scales(table.wire_dtype)
+                    else (wire[part],))
+            payload[part] = decode_wire(arrs, table.wire_dtype, dtype)
+        return payload
+    M = len(table.page_ids)
+    out = {part: np.zeros((M, table.batch, out_len, table.kv_heads,
+                           table.head_dim), dtype)
+           for part in ("k", "v")}
+    for m, ids in enumerate(table.page_ids):
+        dt = plan.dtypes[m]
+        dw = _wire_trailing(dt, table.head_dim)
+        buf = {part: np.zeros((1, table.batch, out_len, table.kv_heads,
+                               dw), _wire_np_dtype(dt))
+               for part in ("k", "v")}
+        for pid in ids:
+            pg = pages[pid]
+            stop = min(pg.start + pg.length, out_len)
+            if stop <= pg.start:
+                continue
+            n = stop - pg.start
+            buf["k"][0, :, pg.start:stop] = pg.k[:, :n]
+            buf["v"][0, :, pg.start:stop] = pg.v[:, :n]
+        for part in ("k", "v"):
+            arrs = (buf[part],)
+            if wire_has_scales(dt):
+                arrs = (buf[part],
+                        np.asarray(table.scales[part][m:m + 1],
+                                   np.float32))
+            out[part][m] = np.asarray(decode_wire(arrs, dt, dtype))[0]
+    return {part: jnp.asarray(out[part]) for part in ("k", "v")}
+
+
 def rebuild_shared(table: BlockTable, pages: Dict[str, Page], *,
                    states=None, state_select=None) -> SharedKV:
     """Decode the rebuilt wire arrays back to the compute dtype and wrap
     them as the packed receiver-keyed ``SharedKV`` — the exact view the
     unpaged transport would have produced for the same transfer."""
-    wire = rebuild_payload(table, pages)
-    dtype = np.dtype(table.compute_dtype)
-    payload = {}
-    for part in ("k", "v"):
-        arrs = ((wire[part], table.scales[part])
-                if table.wire_dtype == "int8" else (wire[part],))
-        payload[part] = decode_wire(arrs, table.wire_dtype, dtype)
+    payload = rebuild_decoded(table, pages)
     return SharedKV(packed_kv=payload, layers=table.layers,
                     src_layers=table.src_layers,
                     select=jnp.asarray(table.select, bool),

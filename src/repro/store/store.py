@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import SharedKV
-from repro.store.paging import (BlockTable, Page, rebuild_payload,
+from repro.store.paging import (BlockTable, Page, rebuild_decoded,
                                 rebuild_shared, split_payload)
 from repro.store.pool import PagePool, PagePoolError
 
@@ -136,16 +136,8 @@ class PageStore:
         if bucket_len < table.prefix_len:
             raise ValueError(
                 f"bucket {bucket_len} < prefix_len {table.prefix_len}")
-        wire = rebuild_payload(table, self._resident(table),
+        return rebuild_decoded(table, self._resident(table),
                                out_len=bucket_len)
-        from repro.comm.transport import decode_wire
-        dtype = np.dtype(table.compute_dtype)
-        out = {}
-        for part in ("k", "v"):
-            arrs = ((wire[part], table.scales[part])
-                    if table.wire_dtype == "int8" else (wire[part],))
-            out[part] = decode_wire(arrs, table.wire_dtype, dtype)
-        return out
 
     def pin(self, table: BlockTable) -> None:
         """Take one extra pin ref per table reference (e.g. the scheduler

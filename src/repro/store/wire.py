@@ -32,8 +32,11 @@ import numpy as np
 from repro.comm.remote import (PayloadMismatchError, _np_dtype, _put_wire,
                                _take_wire, _tree_build, _tree_parts,
                                encode_frame)
+from repro.comm.transport import (state_wire_dtype, wire_has_scales,
+                                  wire_spec)
 from repro.core.types import SharedKV
-from repro.store.paging import BlockTable, Page, page_id_for
+from repro.store.paging import (BlockTable, Page, _wire_trailing,
+                                page_id_for)
 from repro.store.store import PageStore
 
 PAGE_FRAME_KINDS = ("page_query", "page_need", "page_data")
@@ -66,14 +69,18 @@ def decode_page_query(meta: Dict[str, Any],
         raise PayloadMismatchError(
             f"page_query frame meta lacks {e}") from None
     scales = None
-    if wire_dtype == "int8":
+    try:
+        has_scales = wire_has_scales(wire_dtype)
+    except ValueError as e:
+        raise PayloadMismatchError(str(e)) from None
+    if has_scales:
         try:
             scales = {"k": np.asarray(arrays["k@scale"], np.float32),
                       "v": np.asarray(arrays["v@scale"], np.float32)}
         except KeyError as e:
             raise PayloadMismatchError(
-                f"int8 page_query lacks scale array {e.args[0]!r}") \
-                from None
+                f"quantized page_query lacks scale array "
+                f"{e.args[0]!r}") from None
     try:
         table = BlockTable.from_meta(tmeta, scales=scales)
     except (KeyError, TypeError, ValueError) as e:
@@ -121,16 +128,17 @@ def encode_page_data(xid: int, pages: Sequence[Page], *,
     if states is not None and state_select is not None:
         skel, leaves = _tree_parts(states)
         sel = np.nonzero(np.asarray(state_select))[0]
+        state_wd = state_wire_dtype(wire_dtype)
         shapes, dtypes = [], []
         for i, leaf in enumerate(leaves):
             leaf = jnp.asarray(leaf)
             shapes.append(list(leaf.shape))
             dtypes.append(np.dtype(leaf.dtype).name)
-            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], wire_dtype)
+            n_bytes += _put_wire(arrays, f"s{i}", leaf[sel], state_wd)
         state_meta = {"skeleton": skel, "shapes": shapes, "dtypes": dtypes,
                       "select": [bool(b) for b in np.asarray(state_select)]}
-    meta = {"xid": int(xid), "pages": specs, "wire_dtype": wire_dtype,
-            "states": state_meta}
+    meta = {"xid": int(xid), "pages": specs,
+            "wire_dtype": wire_spec(wire_dtype), "states": state_meta}
     return encode_frame("page_data", meta, arrays), n_bytes
 
 
@@ -176,10 +184,14 @@ def decode_page_data(meta: Dict[str, Any], arrays: Dict[str, np.ndarray]
             raise PayloadMismatchError(f"state meta lacks {e}") from None
         idx = np.nonzero(sel)[0]
         leaves = []
+        try:
+            state_wd = state_wire_dtype(wire_dtype)
+        except ValueError as e:
+            raise PayloadMismatchError(str(e)) from None
         for i, (shape, dname) in enumerate(zip(shapes, dtypes)):
-            part = _take_wire(arrays, f"s{i}", wire_dtype, _np_dtype(dname))
+            part = _take_wire(arrays, f"s{i}", state_wd, _np_dtype(dname))
             state_bytes += int(arrays[f"s{i}"].nbytes)
-            if wire_dtype == "int8":
+            if wire_has_scales(state_wd):
                 state_bytes += int(arrays[f"s{i}@scale"].nbytes)
             want = (len(idx),) + tuple(shape[1:])
             if tuple(part.shape) != want:
@@ -229,25 +241,25 @@ class PagedReceiver:
 
     def _verify(self, table: BlockTable, pages: Sequence[Page]) -> None:
         layer_to_slot = {lyr: m for m, lyr in enumerate(table.layers)}
-        want_shape = (table.batch, table.page_len, table.kv_heads,
-                      table.head_dim)
         for pg in pages:
+            m = layer_to_slot.get(pg.layer)
+            if m is None:
+                raise PayloadMismatchError(
+                    f"page {pg.page_id!r} names layer {pg.layer}, "
+                    f"absent from the table's {table.layers}")
+            slot_dt = table.slot_wire_dtype(m)
+            want_shape = (table.batch, table.page_len, table.kv_heads,
+                          _wire_trailing(slot_dt, table.head_dim))
             if tuple(pg.k.shape) != want_shape:
                 raise PayloadMismatchError(
                     f"page {pg.page_id!r} shape {tuple(pg.k.shape)} != "
                     f"table geometry {want_shape}")
-            m = layer_to_slot.get(pg.layer)
             salt = b""
             if table.scales is not None:
-                if m is None:
-                    raise PayloadMismatchError(
-                        f"page {pg.page_id!r} names layer {pg.layer}, "
-                        f"absent from the table's {table.layers}")
                 salt = table.scales["k"][m].tobytes() \
                     + table.scales["v"][m].tobytes()
             derived = page_id_for(pg.layer, pg.start, pg.length, pg.k,
-                                  pg.v, wire_dtype=table.wire_dtype,
-                                  salt=salt)
+                                  pg.v, wire_dtype=slot_dt, salt=salt)
             if derived != pg.page_id:
                 raise PayloadMismatchError(
                     f"page content hash mismatch: frame claims "

@@ -20,6 +20,7 @@ from hypothesis import strategies as st
 from repro import core
 from repro.comm import Agent
 from repro.comm.remote import (MAGIC, PROTOCOL_VERSION, ChannelClosedError,
+                               ChannelTimeoutError,
                                FileChannel, FrameCorruptError,
                                FrameTruncatedError, HeaderCorruptError,
                                LoopbackChannel, PayloadMismatchError,
@@ -454,6 +455,285 @@ class TestPagedServerLoop:
         np.testing.assert_array_equal(toks2, np.asarray(ref))
         # nothing leaked a pin past the connection teardown
         assert store.stats().pinned_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming chunked frames
+# ---------------------------------------------------------------------------
+class TestStreaming:
+    """The chunked kv_stream_begin/chunk/end framing: bit-parity with the
+    monolithic frame (same codec, per-layer scales are slice-invariant),
+    bounded chunk sizes, typed rejection of every malformed sequence, and
+    idempotent replay — nothing installs until a complete stream."""
+
+    def _kv(self, tiny_cfg, tiny_params, seq_len=8):
+        ctx = jax.random.randint(jax.random.PRNGKey(11), (2, seq_len), 4,
+                                 tiny_cfg.vocab_size)
+        kv, _ = core.sender_prefill(tiny_params, tiny_cfg, ctx)
+        return kv, jnp.array([True, False, True, False])
+
+    @pytest.mark.parametrize("wire_dtype",
+                             ["float32", "float16", "int8", "int4",
+                              "plan:float16,int4"])
+    def test_streamed_equals_monolithic(self, tiny_cfg, tiny_params,
+                                        wire_dtype):
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        mono_ch, stream_ch = LoopbackChannel(), LoopbackChannel()
+        n_mono = send_shared(mono_ch, KVCFG, kv, select,
+                             wire_dtype=wire_dtype)
+        n_stream = send_shared(stream_ch, KVCFG, kv, select,
+                               wire_dtype=wire_dtype, chunk_bytes=300)
+        assert n_stream == n_mono      # scales counted once per slot
+        mono, nm = recv_shared(mono_ch)
+        streamed, ns = recv_shared(stream_ch)
+        assert nm == n_mono and ns == n_stream
+        assert streamed.layers == mono.layers == (0, 2)
+        assert streamed.prefix_len == mono.prefix_len == 8
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(streamed.packed_kv[part]),
+                np.asarray(mono.packed_kv[part]))
+
+    def test_chunk_frames_are_bounded(self, tiny_cfg, tiny_params):
+        """No single chunk's KV payload exceeds the chunk budget (one
+        position-row minimum) — the pipelining the streaming exists for
+        requires bounded frames."""
+        from repro.comm.remote import KVStreamSender
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        chunk_bytes = 512
+        sender = KVStreamSender(KVCFG, kv, select, wire_dtype="float16",
+                                chunk_bytes=chunk_bytes)
+        frames = list(sender.frames())
+        assert len(frames) == sender.n_frames > 3
+        kinds = []
+        for frame, nb in frames:
+            kind, _, arrays = decode_frame(frame)
+            kinds.append(kind)
+            if kind == "kv_stream_chunk":
+                payload = sum(a.nbytes for a in arrays.values())
+                assert payload <= chunk_bytes
+        assert kinds[0] == "kv_stream_begin"
+        assert kinds[-1] == "kv_stream_end"
+        assert all(k == "kv_stream_chunk" for k in kinds[1:-1])
+
+    def _stream_frames(self, tiny_cfg, tiny_params, wire_dtype="int8",
+                       sid=0):
+        from repro.comm.remote import KVStreamSender
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        sender = KVStreamSender(KVCFG, kv, select, wire_dtype=wire_dtype,
+                                chunk_bytes=300, sid=sid)
+        return [decode_frame(f) for f, _ in sender.frames()]
+
+    def test_out_of_order_chunk_raises(self, tiny_cfg, tiny_params):
+        from repro.comm.remote import KVStreamAssembler
+        frames = self._stream_frames(tiny_cfg, tiny_params)
+        asm = KVStreamAssembler()
+        asm.feed(*frames[0])
+        with pytest.raises(PayloadMismatchError):
+            asm.feed(*frames[2])        # seq 1 before seq 0
+
+    def test_wrong_sid_mid_stream_raises(self, tiny_cfg, tiny_params):
+        from repro.comm.remote import KVStreamAssembler
+        frames = self._stream_frames(tiny_cfg, tiny_params, sid=3)
+        asm = KVStreamAssembler()
+        asm.feed(*frames[0])
+        kind, meta, arrays = frames[1]
+        meta = dict(meta, sid=4)
+        with pytest.raises(PayloadMismatchError):
+            asm.feed(kind, meta, arrays)
+
+    def test_short_coverage_at_end_raises(self, tiny_cfg, tiny_params):
+        from repro.comm.remote import KVStreamAssembler
+        frames = self._stream_frames(tiny_cfg, tiny_params)
+        asm = KVStreamAssembler()
+        for kind, meta, arrays in frames[:-2]:     # drop the last chunk
+            asm.feed(kind, meta, arrays)
+        kind, meta, arrays = frames[-1]
+        with pytest.raises(PayloadMismatchError):
+            asm.feed(kind, meta, arrays)
+        # the failed stream installed nothing and left no active state
+        assert not asm.active
+
+    def test_missing_array_in_chunk_raises(self, tiny_cfg, tiny_params):
+        from repro.comm.remote import KVStreamAssembler
+        frames = self._stream_frames(tiny_cfg, tiny_params)
+        asm = KVStreamAssembler()
+        asm.feed(*frames[0])
+        kind, meta, arrays = frames[1]
+        arrays = {k: v for k, v in arrays.items() if k != "v@scale"}
+        with pytest.raises(PayloadMismatchError):
+            asm.feed(kind, meta, arrays)
+
+    def test_chunk_without_begin_raises(self, tiny_cfg, tiny_params):
+        from repro.comm.remote import KVStreamAssembler
+        frames = self._stream_frames(tiny_cfg, tiny_params)
+        with pytest.raises(PayloadMismatchError):
+            KVStreamAssembler().feed(*frames[1])
+
+    def test_abandoned_stream_replay_is_idempotent(self, tiny_cfg,
+                                                   tiny_params):
+        """A stream dies mid-flight; the retry restarts under a fresh sid
+        and decodes to exactly the monolithic view — the abandoned prefix
+        installed nothing."""
+        from repro.comm.remote import KVStreamAssembler
+        asm = KVStreamAssembler()
+        for frame in self._stream_frames(tiny_cfg, tiny_params,
+                                         sid=0)[:3]:
+            assert asm.feed(*frame) is None
+        assert asm.active
+        out = None
+        for frame in self._stream_frames(tiny_cfg, tiny_params, sid=1):
+            out = asm.feed(*frame)
+        shared, _ = out
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        ch = LoopbackChannel()
+        send_shared(ch, KVCFG, kv, select, wire_dtype="int8")
+        mono, _ = recv_shared(ch)
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(shared.packed_kv[part]),
+                np.asarray(mono.packed_kv[part]))
+
+    def test_serve_channel_replays_streamed_share(self, tiny_cfg,
+                                                  tiny_params, tok):
+        """The server loop under a client retry: a partial stream (the
+        connection 'died'), then a complete re-send under a fresh sid,
+        then a query — answers match the local reference bit for bit."""
+        from repro.comm.remote import KVStreamSender
+        from repro.launch.remote_serve import serve_channel
+        agent = Agent("r", tiny_cfg, tiny_params, tok)
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        qry = np.asarray(jax.random.randint(jax.random.PRNGKey(12), (2, 4),
+                                            4, tiny_cfg.vocab_size))
+        ch = LoopbackChannel()
+        partial = KVStreamSender(KVCFG, kv, select, wire_dtype="float32",
+                                 chunk_bytes=300, sid=0)
+        for frame, _ in list(partial.frames())[:3]:
+            ch.write(frame)
+        send_shared(ch, KVCFG, kv, select, wire_dtype="float32",
+                    chunk_bytes=300, sid=1)
+        ch.write(encode_frame("query", {"max_new": 3}, {"tokens": qry}))
+        ch.write(encode_frame("shutdown", {}, {}))
+        assert serve_channel(agent, ch) == 1
+        kind, _, arrays = read_frame(ch)
+        assert kind == "tokens"
+        ref_shared = core.pack_shared(KVCFG, kv, select)
+        ref, _ = core.generate(tiny_params, tiny_cfg, jnp.asarray(qry),
+                               ref_shared, max_new=3)
+        np.testing.assert_array_equal(arrays["tokens"], np.asarray(ref))
+
+    def test_states_only_stream(self, tiny_cfg, tiny_params):
+        """A KV-less (states-only) transfer streams as begin+end with zero
+        chunks and matches the monolithic frame leaf for leaf."""
+        states = {"ssm": jnp.asarray(
+            np.random.default_rng(3).standard_normal((4, 2, 8)),
+            jnp.float32)}
+        state_select = jnp.array([True, False, True, False])
+        mono_ch, stream_ch = LoopbackChannel(), LoopbackChannel()
+        send_shared(mono_ch, KVCFG, None, None, states=states,
+                    state_select=state_select, wire_dtype="float16")
+        send_shared(stream_ch, KVCFG, None, None, states=states,
+                    state_select=state_select, wire_dtype="float16",
+                    chunk_bytes=300)
+        mono, nm = recv_shared(mono_ch)
+        streamed, ns = recv_shared(stream_ch)
+        assert ns == nm > 0
+        assert streamed.kv is None
+        np.testing.assert_array_equal(np.asarray(streamed.states["ssm"]),
+                                      np.asarray(mono.states["ssm"]))
+
+    def test_remote_transport_streams_by_default(self, tiny_cfg,
+                                                 tiny_params):
+        """``RemoteTransport`` now drives the chunked framing by default
+        (``chunk_bytes=None`` opts back into the monolithic frame), with
+        identical bytes/views and the serialize/channel/deserialize
+        breakdown still summing into the latency."""
+        from repro.comm import RemoteTransport
+        kv, select = self._kv(tiny_cfg, tiny_params)
+        t_stream = RemoteTransport("int8", chunk_bytes=300)
+        t_mono = RemoteTransport("int8", chunk_bytes=None)
+        s1 = t_stream.send(tiny_cfg, KVCFG, kv, select)
+        s2 = t_mono.send(tiny_cfg, KVCFG, kv, select)
+        assert t_stream.last.n_bytes == t_mono.last.n_bytes
+        assert t_stream.last.frame_bytes > t_mono.last.frame_bytes
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(s1.packed_kv[part]),
+                                          np.asarray(s2.packed_kv[part]))
+        r = t_stream.last
+        assert r.serialize_s > 0 and r.deserialize_s > 0
+        assert r.serialize_s + r.channel_s + r.deserialize_s \
+            <= r.latency_s + 1e-6
+
+
+class TestFrameDeadline:
+    """The trickling-peer fix: ``SocketChannel`` enforces a WHOLE-FRAME
+    deadline from the frame's first byte (FileChannel always had the
+    equivalent via its per-frame poll budget), while idle time BETWEEN
+    frames stays unbounded."""
+
+    def test_trickling_peer_trips_frame_deadline(self, kv_frame):
+        import threading
+        frame, _ = kv_frame
+        a, b = socket.socketpair()
+        stop = threading.Event()
+
+        def trickle():
+            for i in range(len(frame)):
+                if stop.is_set():
+                    return
+                try:
+                    a.sendall(frame[i:i + 1])
+                except OSError:
+                    return
+                stop.wait(0.05)
+
+        th = threading.Thread(target=trickle)
+        th.start()
+        ch = SocketChannel(b, frame_timeout_s=0.3)
+        t0 = __import__("time").monotonic()
+        try:
+            with pytest.raises(ChannelTimeoutError):
+                read_frame(ch)
+            elapsed = __import__("time").monotonic() - t0
+            # tripped by the frame budget, not a per-recv timeout pileup
+            assert 0.2 <= elapsed < 2.0
+        finally:
+            stop.set()
+            th.join()
+            ch.close()
+            a.close()
+
+    def test_idle_between_frames_does_not_trip(self, kv_frame):
+        """The deadline arms at a frame's FIRST byte: a peer that is
+        merely quiet between frames must not be killed."""
+        import time as _time
+        frame, _ = kv_frame
+        a, b = socket.socketpair()
+        tx, rx = SocketChannel(a), SocketChannel(b, frame_timeout_s=0.3)
+        try:
+            tx.write(frame)
+            assert read_frame(rx)[0] == "shared_kv"
+            _time.sleep(0.45)               # idle > frame_timeout_s
+            tx.write(frame)
+            assert read_frame(rx)[0] == "shared_kv"
+        finally:
+            tx.close()
+            rx.close()
+
+    def test_fast_peer_unaffected_by_deadline(self, kv_frame):
+        frame, _ = kv_frame
+        a, b = socket.socketpair()
+        tx, rx = SocketChannel(a), SocketChannel(b, frame_timeout_s=5.0)
+        try:
+            for _ in range(3):
+                tx.write(frame)
+            for _ in range(3):
+                kind, meta, arrays = read_frame(rx)
+                shared, _ = decode_kv_transfer(meta, arrays)
+                assert shared.layers == (0, 2)
+        finally:
+            tx.close()
+            rx.close()
 
 
 class TestRecoveryUnderPolicy:

@@ -586,7 +586,15 @@ class TestSchedulerResilience:
         """Seeded faults at admission frame boundaries (spaced so the
         policy always has a clean retry window): the chaos run's
         completions are bit-identical to the no-fault run, nothing
-        degrades, and the burned attempts land in the transfer log."""
+        degrades, and the burned attempts land in the transfer log.
+
+        Spacing: unpaged shares stream by default — a clean share is 4
+        frame writes (begin, k-chunk, v-chunk, end) and any fault ends
+        the attempt after exactly its own write (every stream frame is
+        echoed and checked before the next encode).  A fault on each
+        share's FIRST write therefore costs that share 1 + 4 writes, so
+        ops 0 / 5 / 10 hit the first write of shares 1-3 and every retry
+        replays under a fresh sid on a healed channel."""
         import random
         from repro.comm.resilience import Fault, FaultSchedule
         rng = random.Random(seed)
@@ -594,7 +602,7 @@ class TestSchedulerResilience:
                  for _ in range(3)]
         schedule = FaultSchedule(
             [Fault(op, k, frac=rng.uniform(0.2, 0.8))
-             for op, k in zip((0, 3, 6), kinds)])
+             for op, k in zip((0, 5, 10), kinds)])
         reqs = _stream(tok)
         clean_sess, _ = self._remote(tiny_cfg, tok, FaultSchedule())
         ref, _ = Scheduler(clean_sess, KVCFG, config=self.CFG_S).run(reqs)

@@ -24,7 +24,7 @@ import pytest
 
 from repro import core
 from repro.comm import (InMemoryTransport, RemoteTransport,
-                        SerializedTransport)
+                        SerializedTransport, WirePlan)
 from repro.core.types import KVCommConfig
 from repro.models import transformer as tfm
 
@@ -329,3 +329,173 @@ class TestPagedContract:
         assert t.last.latency_s == 0.0
         assert t.flush_latency() == 1
         assert t.last.latency_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the adaptive-plan column: per-layer wire precision over the same matrix
+# ---------------------------------------------------------------------------
+PLAN = WirePlan(("float16", "int8", "int4"))     # one slot per tier
+PLAN_TRANSPORTS = {
+    "ser_plan": lambda **kw: SerializedTransport(PLAN, **kw),
+    "rem_plan": lambda **kw: RemoteTransport(PLAN.spec, **kw),
+}
+
+
+def expected_plan_bytes(cfg, B, Sc, plan) -> int:
+    """Unpaged adaptive wire: per-slot analytic widths plus one fp32 scale
+    per quantized slot per tensor (k and v)."""
+    return core.kv_wire_bytes(cfg, B, Sc, len(plan), plan=plan) \
+        + 2 * plan.n_scaled() * 4
+
+
+def expected_plan_paged_bytes(cfg, B, Sc, plan, pages_sent) -> int:
+    """Paged adaptive wire: the block table always carries a FULL-M fp32
+    scale row per tensor (1.0 fillers at float slots) so hit pages can be
+    rebuilt without re-contacting the sender."""
+    return core.kv_wire_bytes_paged(cfg, B, Sc, len(plan),
+                                    page_len=PAGE_LEN,
+                                    pages_sent=pages_sent, plan=plan) \
+        + 2 * len(plan) * 4
+
+
+@pytest.fixture(scope="module")
+def plan_homo(tiny_cfg, tiny_params, homo):
+    """The homogeneous payload under the plan's own selection: M=3 slots
+    so every precision tier is exercised, plus the InMemory reference
+    logits for that selection."""
+    cfg, params, kv, _, qry = homo
+    select = jnp.array([True, True, True, False])
+    shared = InMemoryTransport().send(cfg, KVCFG, kv, select)
+    out = core.receiver_prefill(params, cfg, qry, shared, max_new=0)
+    return cfg, params, kv, select, qry, np.asarray(out.logits)
+
+
+class TestPlanContract:
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(PLAN_TRANSPORTS))
+    def test_plan_logits_bounded(self, plan_homo, name, packing):
+        cfg, params, kv, select, qry, ref = plan_homo
+        t = PLAN_TRANSPORTS[name](packed=PACKING[packing])
+        shared = t.send(cfg, KVCFG, kv, select)
+        assert shared.is_packed == PACKING[packing]
+        out = core.receiver_prefill(params, cfg, qry, shared, max_new=0)
+        got = np.asarray(out.logits)
+        rel = np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)), 1e-9)
+        assert rel < 0.05, f"plan wire drifted {rel:.3f} rel"
+        np.testing.assert_array_equal(got.argmax(-1), ref.argmax(-1))
+
+    @pytest.mark.parametrize("packing", sorted(PACKING))
+    @pytest.mark.parametrize("name", sorted(PLAN_TRANSPORTS))
+    def test_plan_bytes_reconcile(self, plan_homo, name, packing):
+        """Measured == the plan-aware ``kv_wire_bytes`` plus the quantized
+        slots' scales, and the record carries the plan spec."""
+        cfg, _, kv, select, _, _ = plan_homo
+        t = PLAN_TRANSPORTS[name](packed=PACKING[packing])
+        t.send(cfg, KVCFG, kv, select)
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        assert t.total_bytes == expected_plan_bytes(cfg, B, Sc, PLAN)
+        # NOTE: this hand-picked one-slot-per-tier plan averages 9.3
+        # bits/value; the <= uniform-int8 guarantee is a property of
+        # ``WirePlan.from_scores`` defaults, asserted in test_wire_codec
+        assert t.last.wire_dtype == PLAN.spec
+        assert t.last.layers == len(PLAN)
+
+    @pytest.mark.parametrize("dt", ["float32", "float16", "bfloat16",
+                                    "int8", "int4"])
+    def test_device_roundtrip_bit_parity_per_dtype(self, plan_homo, dt):
+        """``device_wire_roundtrip`` (the async paged path's codec) is
+        bit-par with the host encode->decode path for every dtype a plan
+        can assign — the two implementations cannot drift silently."""
+        from repro.comm.transport import (decode_wire,
+                                          device_wire_roundtrip,
+                                          encode_wire)
+        _, _, kv, _, _, _ = plan_homo
+        x = jnp.asarray(kv["k"])[:3]
+        wire, _ = encode_wire(x, dt)
+        host = np.asarray(decode_wire(wire, dt, x.dtype))
+        dev = np.asarray(device_wire_roundtrip(x, dt, x.dtype))
+        np.testing.assert_array_equal(host, dev)
+
+    def test_device_roundtrip_bit_parity_whole_plan(self, plan_homo):
+        from repro.comm.transport import (decode_wire,
+                                          device_wire_roundtrip,
+                                          encode_wire)
+        _, _, kv, _, _, _ = plan_homo
+        x = jnp.asarray(kv["k"])[:len(PLAN)]
+        wire, _ = encode_wire(x, PLAN)
+        host = np.asarray(decode_wire(wire, PLAN, x.dtype))
+        dev = np.asarray(device_wire_roundtrip(x, PLAN, x.dtype))
+        np.testing.assert_array_equal(host, dev)
+
+    @pytest.mark.parametrize("name", sorted(PLAN_TRANSPORTS))
+    def test_plan_paged_bytes_and_dedup(self, plan_homo, name):
+        """The paged column under a plan: cold bytes == the plan-aware
+        paged analytics + the full-M scale tables; a repeat send dedups
+        every page and ships only the scales."""
+        from repro.store import PageStore
+        cfg, params, kv, select, qry, _ = plan_homo
+        t = PLAN_TRANSPORTS[name](store=PageStore(page_len=PAGE_LEN))
+        shared = t.send(cfg, KVCFG, kv, select)
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        pages = len(PLAN) * -(-Sc // PAGE_LEN)
+        r = t.last
+        assert (r.pages_total, r.pages_sent, r.pages_hit) == (pages, pages,
+                                                              0)
+        assert r.n_bytes == expected_plan_paged_bytes(cfg, B, Sc, PLAN,
+                                                      pages)
+        t.send(cfg, KVCFG, kv, select)
+        r2 = t.last
+        assert (r2.pages_total, r2.pages_sent, r2.pages_hit) == (pages, 0,
+                                                                 pages)
+        assert r2.n_bytes == expected_plan_paged_bytes(cfg, B, Sc, PLAN, 0)
+        # the paged receiver view is bit-identical to the unpaged plan
+        # wire (same codec, same scales — paging is pure plumbing)
+        unpaged = PLAN_TRANSPORTS[name]().send(cfg, KVCFG, kv, select)
+        for part in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(shared.packed_kv[part]),
+                np.asarray(unpaged.packed_kv[part]))
+
+    def test_plan_pages_never_alias_across_precision(self, plan_homo):
+        """Content-addressing under mixed precision: the slot dtype joins
+        the page hash, so the SAME bytes at different precisions get
+        disjoint page IDs while same-dtype slots still dedup."""
+        from repro.comm import WirePlan
+        from repro.store.paging import split_payload
+        _, _, kv, select, _, _ = plan_homo
+        payload = {p: jnp.asarray(kv[p])[:3] for p in ("k", "v")}
+        kw = dict(layers=(0, 1, 2), select=np.asarray(select),
+                  page_len=PAGE_LEN)
+        _, pages_a = split_payload(payload, wire_dtype=PLAN, **kw)
+        _, pages_b = split_payload(
+            payload, wire_dtype=WirePlan(("int8", "int8", "int8")), **kw)
+        per_slot = -(-int(payload["k"].shape[2]) // PAGE_LEN)
+
+        def ids(pages, slot):
+            return {p.page_id
+                    for p in pages[slot * per_slot:(slot + 1) * per_slot]}
+        # slot 1 is int8 in BOTH plans -> identical page IDs (dedup)
+        assert ids(pages_a, 1) == ids(pages_b, 1)
+        # slots 0 (fp16) and 2 (int4) differ in precision -> disjoint
+        assert not ids(pages_a, 0) & ids(pages_b, 0)
+        assert not ids(pages_a, 2) & ids(pages_b, 2)
+
+    @pytest.mark.parametrize("name", sorted(PLAN_TRANSPORTS))
+    def test_plan_hetero_mapped(self, hetero, hetero_ref, name):
+        """A length-P plan rides the heterogeneous assignment: bounded
+        logits against the lossless mapped reference, bytes tracking the
+        mapped pair count at per-slot widths."""
+        s_cfg, r_cfg, r_params, kv, assignment, qry = hetero
+        assert assignment.num_pairs == len(PLAN)
+        t = PLAN_TRANSPORTS[name]()
+        shared = t.send(s_cfg, KVCFG, kv, None, assignment=assignment)
+        out = core.receiver_prefill(r_params, r_cfg, qry, shared, max_new=0)
+        got = np.asarray(out.logits)
+        rel = np.max(np.abs(got - hetero_ref)) \
+            / max(np.max(np.abs(hetero_ref)), 1e-9)
+        assert rel < 0.05
+        np.testing.assert_array_equal(got.argmax(-1),
+                                      hetero_ref.argmax(-1))
+        B, Sc = int(kv["k"].shape[1]), int(kv["k"].shape[2])
+        assert t.total_bytes == expected_plan_bytes(s_cfg, B, Sc, PLAN)
+        assert t.last.layers == len(PLAN)
